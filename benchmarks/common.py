@@ -1,0 +1,79 @@
+"""Shared benchmark plumbing: timing, simulator construction, CSV rows."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """-> microseconds per call (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def row(name: str, us_per_call: float, derived: dict) -> str:
+    line = f"{name},{us_per_call:.1f},{json.dumps(derived, sort_keys=True)}"
+    print(line, flush=True)
+    return line
+
+
+def save_json(name: str, obj) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(obj, indent=1))
+
+
+def build_sims(domain: str, key, *, collect_episodes=48, ep_len=128,
+               aip_epochs=8, vanish_after=0):
+    """-> dict of named simulators + diagnostics (shared across benches)."""
+    from repro.core import collect, influence, ials as ials_lib
+    from repro.envs.traffic import (TrafficConfig, make_traffic_env,
+                                    make_local_traffic_env)
+    from repro.envs.warehouse import (WarehouseConfig, make_warehouse_env,
+                                      make_local_warehouse_env)
+
+    if domain == "traffic":
+        cfg = TrafficConfig()
+        gs, ls = make_traffic_env(cfg), make_local_traffic_env(cfg)
+        aip_kind, stack = "fnn", 8
+    else:
+        cfg = WarehouseConfig(vanish_after=vanish_after)
+        gs, ls = make_warehouse_env(cfg), make_local_warehouse_env(cfg)
+        aip_kind, stack = "gru", 1
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    data = collect.collect_dataset(gs, k1, n_episodes=collect_episodes,
+                                   ep_len=ep_len)
+    acfg = influence.AIPConfig(kind=aip_kind, d_in=gs.spec.dset_dim,
+                               n_out=gs.spec.n_influence, hidden=64,
+                               stack=stack)
+    t0 = time.time()
+    aip_params, m = influence.train_aip(acfg, data["d"], data["u"], k2,
+                                        epochs=aip_epochs)
+    aip_train_s = time.time() - t0
+    aip_untrained = influence.init_aip(acfg, k3)
+    diag = {
+        "aip_train_s": aip_train_s,
+        "xent_trained": float(influence.xent_loss(
+            aip_params, acfg, data["d"], data["u"])),
+        "xent_untrained": float(influence.xent_loss(
+            aip_untrained, acfg, data["d"], data["u"])),
+        "marginal": [float(x) for x in
+                     collect.empirical_marginal(data["u"])],
+    }
+    sims = {
+        "gs": gs,
+        "ials": ials_lib.make_ials(ls, aip_params, acfg),
+        "untrained-ials": ials_lib.make_ials(ls, aip_untrained, acfg),
+    }
+    return sims, ls, (aip_params, aip_untrained, acfg), data, diag

@@ -1,0 +1,60 @@
+"""Pallas kernel microbenchmarks: allclose vs oracle + us/call.
+
+Interpret-mode timings on CPU are NOT TPU performance — the meaningful
+numbers here are correctness deltas and the XLA-reference timing; the kernel
+is the TPU-target artifact (roofline reasoning for it lives in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.nn.rnn import gru_init
+from repro.nn import attention as att_jnp
+from .common import row, time_fn
+
+
+def run(quick: bool = False):
+    out = []
+    key = jax.random.PRNGKey(5)
+    # flash attention
+    B, T, H, KH, D = (1, 128, 4, 2, 64) if quick else (2, 512, 8, 4, 64)
+    q = jax.random.normal(key, (B, T, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, KH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, KH, D))
+    o_kern = ops.flash_attention_mha(q, k, v, causal=True)
+    o_jnp = att_jnp.flash_attention(q, k, v, causal=True,
+                                    q_chunk=128, k_chunk=128)
+    err = float(jnp.abs(o_kern - o_jnp).max())
+    us_ref = time_fn(jax.jit(lambda q, k, v: att_jnp.flash_attention(
+        q, k, v, causal=True, q_chunk=128, k_chunk=128)), q, k, v,
+        warmup=1, iters=3)
+    out.append(row("kernel/flash_attention", us_ref,
+                   {"max_err_vs_jnp": err, "note": "us= XLA ref path"}))
+
+    # gru
+    p = gru_init(key, 40, 64)
+    xs = jax.random.normal(key, (8, 64, 40))
+    hs_k, _ = ops.gru_sequence(p, xs)
+    hs_r, _ = ref.gru_sequence_ref(xs, p["wx"], p["wh"], p["b"],
+                                   jnp.zeros((8, 64)))
+    from repro.nn.rnn import gru_sequence as gru_xla
+    us_ref = time_fn(jax.jit(lambda xs: gru_xla(p, xs)[0]), xs,
+                     warmup=1, iters=3)
+    out.append(row("kernel/gru_sequence", us_ref,
+                   {"max_err_vs_ref": float(jnp.abs(hs_k - hs_r).max())}))
+
+    # rmsnorm
+    x = jax.random.normal(key, (4096, 512), jnp.bfloat16)
+    g = jnp.ones((512,))
+    o_k = ops.rmsnorm(x, g)
+    o_r = ref.rmsnorm_ref(x, g)
+    us_ref = time_fn(jax.jit(lambda x: ref.rmsnorm_ref(x, g)), x,
+                     warmup=1, iters=5)
+    out.append(row("kernel/rmsnorm", us_ref,
+                   {"max_err_vs_ref": float(jnp.abs(
+                       o_k.astype(jnp.float32) -
+                       o_r.astype(jnp.float32)).max())}))
+    return out

@@ -1,0 +1,78 @@
+"""Paper Fig. 3/5 (top) + App. E Fig. 11/12: learning curves per simulator.
+
+Trains PPO on {GS, IALS, untrained-IALS, F-IALS} and periodically evaluates
+on the GS, reporting reward-vs-wallclock. Scaled down from the paper's 2M
+steps (CPU container) but preserving the claim structure:
+  - IALS final GS-eval ~= GS-trained final GS-eval
+  - IALS reaches it in a fraction of the wall-clock
+  - untrained-IALS is worse
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import collect, ials as ials_lib
+from repro.rl import ppo
+from .common import build_sims, row, save_json
+
+
+def train_on(env, gs, pcfg, key, iterations: int, eval_every: int):
+    params = ppo.init_policy(pcfg, key)
+    opt, it_fn = ppo.make_train_iteration(env, pcfg)
+    ost = opt.init(params)
+    rs = ppo.init_rollout_state(env, pcfg, key)
+    t0 = time.time()
+    curve = []
+    for it in range(iterations):
+        key, k = jax.random.split(key)
+        params, ost, rs, m = it_fn(params, ost, rs, k)
+        if it % eval_every == 0 or it == iterations - 1:
+            key, ke = jax.random.split(key)
+            r_eval = ppo.evaluate(gs, pcfg, params, ke, n_episodes=4)
+            curve.append({"iter": it, "t_s": round(time.time() - t0, 2),
+                          "train_r": float(m["mean_reward"]),
+                          "gs_eval_r": round(r_eval, 4)})
+    return curve
+
+
+def run(quick: bool = False):
+    out = []
+    iters = 6 if quick else 16
+    for domain in ("traffic", "warehouse"):
+        key = jax.random.PRNGKey(2)
+        sims, ls, (aip, aip0, acfg), data, diag = build_sims(
+            domain, key, collect_episodes=8 if quick else 48)
+        marg = collect.empirical_marginal(data["u"])
+        sims["f-ials"] = ials_lib.make_ials(ls, aip0, acfg,
+                                            fixed_marginal_vec=marg)
+        fs = 8 if domain == "warehouse" else 1
+        pcfg = ppo.PPOConfig(obs_dim=sims["gs"].spec.obs_dim,
+                             n_actions=sims["gs"].spec.n_actions,
+                             frame_stack=fs,
+                             n_envs=8 if quick else 16,
+                             rollout_len=64 if quick else 128,
+                             episode_len=128)
+        curves = {}
+        for name, env in sims.items():
+            key, k = jax.random.split(key)
+            curves[name] = train_on(env, sims["gs"], pcfg, k, iters,
+                                    max(1, iters // 5))
+            final = curves[name][-1]
+            out.append(row(
+                f"learning_curve/{domain}/{name}", 0.0,
+                {"final_gs_eval": final["gs_eval_r"],
+                 "wallclock_s": final["t_s"]}))
+        gs_final = curves["gs"][-1]["gs_eval_r"]
+        ials_final = curves["ials"][-1]["gs_eval_r"]
+        out.append(row(
+            f"learning_curve/{domain}/summary", 0.0,
+            {"ials_minus_gs_final": round(ials_final - gs_final, 4),
+             "ials_time_frac": round(
+                 curves["ials"][-1]["t_s"] /
+                 max(curves["gs"][-1]["t_s"], 1e-9), 3),
+             "untrained_gap": round(
+                 curves["untrained-ials"][-1]["gs_eval_r"] - gs_final, 4)}))
+        save_json(f"learning_curves_{domain}", curves)
+    return out

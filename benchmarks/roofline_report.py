@@ -1,0 +1,72 @@
+"""Dry-run roofline table: reads results/dryrun/*.json -> CSV rows + the
+markdown table EXPERIMENTS.md embeds (results/bench/roofline_table.md)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import row, save_json
+
+DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        try:
+            cells.append(json.loads(f.read_text()))
+        except json.JSONDecodeError:
+            pass
+    return cells
+
+
+def make_table(cells, mesh: str = "pod1") -> str:
+    lines = ["| arch | shape | t_compute (s) | t_memory (s) | t_coll (s) | "
+             "bottleneck | mem/dev (GiB) | useful-FLOPs | MFU-bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"{c.get('status','?')} | — | — | — |")
+            continue
+        r = c["roofline"]
+        m = c["memory"]["peak_bytes_per_device"] / 2**30
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['bottleneck']} | {m:.1f} | "
+            f"{r.get('useful_flops_ratio', 0):.3f} | "
+            f"{r.get('mfu_upper_bound', 0):.4f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    out = []
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skip = [c for c in cells if str(c.get("status", "")).startswith("skip")]
+    err = [c for c in cells if c.get("status") == "error"]
+    out.append(row("roofline/cells", 0.0,
+                   {"ok": len(ok), "skipped": len(skip), "error": len(err)}))
+    for c in ok:
+        if c["mesh"] != "pod1":
+            continue
+        r = c["roofline"]
+        out.append(row(
+            f"roofline/{c['arch']}/{c['shape']}", 0.0,
+            {"bottleneck": r["bottleneck"],
+             "t_comp": round(r["t_compute_s"], 4),
+             "t_mem": round(r["t_memory_s"], 4),
+             "t_coll": round(r["t_collective_s"], 4),
+             "mfu_bound": round(r.get("mfu_upper_bound", 0), 5)}))
+    table = make_table(cells, "pod1")
+    save_json("roofline_summary", {
+        "ok": len(ok), "skipped": len(skip), "error": len(err)})
+    outdir = Path(__file__).resolve().parent.parent / "results" / "bench"
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "roofline_table.md").write_text(table + "\n")
+    (outdir / "roofline_table_pod2.md").write_text(
+        make_table(cells, "pod2") + "\n")
+    return out

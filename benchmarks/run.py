@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines (derived is a JSON dict).
+Mapping to the paper:
+    simulator_throughput  Fig. 3/5 middle (GS vs IALS total runtime)
+    aip_accuracy          Fig. 3/5 bottom + App. E Eq. 9/10
+    learning_curves       Fig. 3/5 top + App. E Fig. 11/12 (F-IALS)
+    memory_dependence     Fig. 6 (Theorem 1)
+    dset_ablation         App. B / §4.2 (Theorem 2)
+    kernel_bench          Pallas kernels vs oracles
+    roofline_report       EXPERIMENTS.md §Roofline source (dry-run cells)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "kernel_bench",
+    "roofline_report",
+    "simulator_throughput",
+    "aip_accuracy",
+    "dset_ablation",
+    "memory_dependence",
+    "learning_curves",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    mods = [m for m in MODULES if args.only is None or m == args.only]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(quick=args.quick)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Train a small qwen3-family LM end-to-end with the production driver:
+data pipeline -> grad-accumulated train_step -> AdamW -> checkpoints.
+
+    PYTHONPATH=src python examples/lm_pretrain.py [--steps 200]
+
+Uses a ~10M-param config (CPU container); on a pod the same driver takes
+--arch qwen3-4b un-reduced under the production mesh.
+"""
+import argparse
+
+from repro.launch import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+train.main(["--arch", "qwen3-4b", "--reduced",
+            "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+            "--microbatches", "2", "--ckpt-dir", "/tmp/lm_pretrain_ckpt",
+            "--log-every", "20",
+            "--metrics-out", "results/lm_pretrain.json"])

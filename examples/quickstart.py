@@ -1,0 +1,56 @@
+"""Quickstart: the paper's whole pipeline in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build the traffic-grid Global Simulator (25 intersections, pure JAX).
+2. Algorithm 1: collect (d_t, u_t) from the GS under a random policy.
+3. Train the Approximate Influence Predictor (cross-entropy, Eq. 3).
+4. Compose the IALS (local simulator + AIP, Algorithm 2).
+5. Train PPO on the IALS; evaluate on the GS.
+"""
+import time
+
+import jax
+
+from repro.core import collect, influence, ials
+from repro.envs.traffic import make_traffic_env, make_local_traffic_env
+from repro.rl import ppo
+
+key = jax.random.PRNGKey(0)
+gs = make_traffic_env()
+ls = make_local_traffic_env()
+
+print("1) collecting (d_t, u_t) from the GS (Algorithm 1)...")
+t0 = time.time()
+data = collect.collect_dataset(gs, key, n_episodes=48, ep_len=128)
+print(f"   {data['d'].shape[0] * data['d'].shape[1]} transitions "
+      f"in {time.time()-t0:.1f}s")
+
+print("2) training the AIP (Eq. 3)...")
+acfg = influence.AIPConfig(kind="fnn", d_in=gs.spec.dset_dim,
+                           n_out=gs.spec.n_influence, hidden=64, stack=8)
+key, k = jax.random.split(key)
+aip, metrics = influence.train_aip(acfg, data["d"], data["u"], k, epochs=10)
+print(f"   cross-entropy {metrics['loss_history'][0]:.3f} -> "
+      f"{metrics['final_loss']:.3f}")
+
+print("3) composing the IALS (Algorithm 2) and training PPO on it...")
+sim = ials.make_ials(ls, aip, acfg)
+pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim, n_actions=gs.spec.n_actions,
+                     n_envs=16, rollout_len=128, episode_len=128)
+key, k0, k1 = jax.random.split(key, 3)
+params = ppo.init_policy(pcfg, k0)
+opt, iteration = ppo.make_train_iteration(sim, pcfg)
+ost = opt.init(params)
+rs = ppo.init_rollout_state(sim, pcfg, k1)
+t0 = time.time()
+for it in range(10):
+    key, k = jax.random.split(key)
+    params, ost, rs, m = iteration(params, ost, rs, k)
+    print(f"   iter {it}: IALS reward {float(m['mean_reward']):.3f} "
+          f"({time.time()-t0:.1f}s)")
+
+print("4) evaluating on the GS (deployment environment)...")
+r = ppo.evaluate(gs, pcfg, params, key, n_episodes=8)
+print(f"   GS eval mean reward: {r:.3f}  "
+      f"(random-policy baseline ~0.81, saturated-fixed ~varies)")

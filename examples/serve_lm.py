@@ -1,0 +1,40 @@
+"""Batched LM serving demo: prefill once, decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Runs the reduced deepseek-moe config (exercises MoE dropless decode) through
+prefill_step + serve_step — the same functions the multi-pod dry-run lowers
+at full scale.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.launch import steps as steps_lib
+from repro.models import lm
+
+cfg = reduced(get_config("deepseek-moe-16b"))
+key = jax.random.PRNGKey(0)
+params = lm.init_params(cfg, key)
+
+B, T_prompt, T_gen, MAX = 4, 24, 16, 48
+prompt = jax.random.randint(key, (B, T_prompt), 0, cfg.vocab_size)
+
+prefill = jax.jit(steps_lib.make_prefill_step(cfg, MAX))
+serve = jax.jit(steps_lib.make_serve_step(cfg))
+
+t0 = time.time()
+logits, cache = prefill(params, {"tokens": prompt})
+tok = jnp.argmax(logits, -1)
+outs = [tok]
+for i in range(T_gen):
+    logits, cache = serve(params, cache, tok, jnp.int32(T_prompt + i))
+    tok = jnp.argmax(logits, -1)
+    outs.append(tok)
+gen = jnp.stack(outs, 1)
+dt = time.time() - t0
+print(f"prompt {prompt.shape} -> generated {gen.shape} in {dt:.1f}s "
+      f"(incl. compile)")
+print("generated token ids (batch 0):", [int(x) for x in gen[0]])

@@ -1,0 +1,21 @@
+"""Paper Fig. 3 experiment: traffic control, GS vs IALS vs untrained-IALS.
+
+    PYTHONPATH=src python examples/train_traffic.py [--iterations N]
+
+Thin wrapper over the production RL driver (repro.launch.rl_train), run for
+the three simulators of §5.1; writes learning-curve JSONs to results/.
+"""
+import argparse
+import sys
+
+from repro.launch import rl_train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--iterations", type=int, default=30)
+args = ap.parse_args()
+
+for sim in ("ials", "untrained-ials", "gs"):
+    print(f"\n=== simulator: {sim} ===")
+    rl_train.main(["--domain", "traffic", "--simulator", sim,
+                   "--iterations", str(args.iterations),
+                   "--out", f"results/traffic_{sim}.json"])

@@ -1,0 +1,19 @@
+"""Paper Fig. 5 experiment: warehouse commissioning, GS vs IALS variants.
+
+    PYTHONPATH=src python examples/train_warehouse.py [--iterations N]
+
+Includes the F-IALS (empirical-marginal) variant of Appendix E.
+"""
+import argparse
+
+from repro.launch import rl_train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--iterations", type=int, default=30)
+args = ap.parse_args()
+
+for sim in ("ials", "untrained-ials", "f-ials", "gs"):
+    print(f"\n=== simulator: {sim} ===")
+    rl_train.main(["--domain", "warehouse", "--simulator", sim,
+                   "--iterations", str(args.iterations),
+                   "--out", f"results/warehouse_{sim}.json"])

@@ -1,0 +1,59 @@
+"""Algorithm 1: collect a (d_t, u_t) dataset from the Global Simulator.
+
+Rollouts under an exploratory policy π₀ (uniform random by default —
+satisfying the support condition of §4.2), vmapped over episodes so the whole
+collection is one jitted program. Returns stacked sequences so the AIP can be
+trained with (optionally truncated) BPTT.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.envs.api import Env
+
+
+def collect_dataset(env: Env, key, *, n_episodes: int, ep_len: int,
+                    policy: Optional[Callable] = None,
+                    dset_key: str = "dset") -> Dict[str, jax.Array]:
+    """-> {"d": (N, T, Dd), "u": (N, T, M), "reward": (N, T)}.
+
+    ``policy(key, obs) -> action`` defaults to uniform random (π₀).
+    ``dset_key`` chooses "dset" (the d-separating set) or "dset_full"
+    (d-set + confounders — the App. B ablation input).
+    """
+    n_actions = env.spec.n_actions
+
+    def pi0(k, obs):
+        return jax.random.randint(k, (), 0, n_actions)
+
+    pol = policy or pi0
+
+    def episode(key):
+        k0, key = jax.random.split(key)
+        state = env.reset(k0)
+        obs = env.observe(state)
+
+        def step(carry, k):
+            state, obs = carry
+            ka, ks = jax.random.split(k)
+            a = pol(ka, obs)
+            state, obs2, r, info = env.step(state, a, ks)
+            out = {"d": info[dset_key], "u": info["u"], "reward": r}
+            return (state, obs2), out
+
+        keys = jax.random.split(key, ep_len)
+        _, traj = lax.scan(step, (state, obs), keys)
+        return traj
+
+    keys = jax.random.split(key, n_episodes)
+    traj = jax.jit(jax.vmap(episode))(keys)
+    return traj
+
+
+def empirical_marginal(us: jax.Array) -> jax.Array:
+    """P̂(u) per head from collected data — the F-IALS baseline (App. E)."""
+    return us.reshape(-1, us.shape[-1]).mean(0)

@@ -1,0 +1,150 @@
+"""Approximate Influence Predictor (AIP) — paper §4, Appendix F.
+
+``Î_θ(u_t | d_t)``: a sequence model over d-set features emitting M
+independent Bernoulli heads (Eq. 12). Two backbones, as in the paper:
+
+- "gru": recurrent, processes d_t one at a time (Eq. 11) — memoryful.
+- "fnn": feedforward over a stack of the last ``stack`` d-sets — the
+  finite-memory (k-step) predictor of Theorem 1; stack=1 is memoryless
+  (the NM-AIP of §5.4).
+
+Training (Algorithm 1's dataset): expected cross-entropy (Eq. 3) == summed
+binary CE over heads, minimised with AdamW. ``train_aip`` optionally
+truncates BPTT windows to k steps — the practical Theorem-1 knob
+(Appendix F: "the sequence length should be at least as long as the
+agent's").
+
+The framework also exposes every assigned LM architecture as an AIP
+backbone at scale (see repro/launch and DESIGN.md §3); this module is the
+paper-scale implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn.module import dense_init, dense
+from repro.nn.rnn import gru_init, gru_cell
+from repro.optim.adamw import adamw
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class AIPConfig:
+    kind: str           # "gru" | "fnn"
+    d_in: int           # d-set feature size
+    n_out: int          # M influence sources
+    hidden: int = 64
+    stack: int = 1      # fnn memory length (ignored for gru)
+
+
+def init_aip(cfg: AIPConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.kind == "gru":
+        return {"gru": gru_init(k1, cfg.d_in, cfg.hidden),
+                "head": dense_init(k2, cfg.hidden, cfg.n_out, bias=True)}
+    if cfg.kind == "fnn":
+        return {"l1": dense_init(k1, cfg.d_in * cfg.stack, cfg.hidden,
+                                 bias=True),
+                "l2": dense_init(k2, cfg.hidden, cfg.hidden, bias=True),
+                "head": dense_init(k3, cfg.hidden, cfg.n_out, bias=True)}
+    raise ValueError(cfg.kind)
+
+
+# --- single-step API (used inside the IALS rollout scan) -------------------
+
+def init_state(cfg: AIPConfig, batch_shape: tuple = ()) -> jax.Array:
+    if cfg.kind == "gru":
+        return jnp.zeros(batch_shape + (cfg.hidden,), jnp.float32)
+    return jnp.zeros(batch_shape + (cfg.stack, cfg.d_in), jnp.float32)
+
+
+def step(params: Params, cfg: AIPConfig, state, d_t: jax.Array):
+    """d_t: (..., d_in) -> (logits (..., M), new state)."""
+    if cfg.kind == "gru":
+        h = gru_cell(params["gru"], state, d_t)
+        return dense(params["head"], h), h
+    buf = jnp.concatenate([state[..., 1:, :], d_t[..., None, :]], axis=-2)
+    x = buf.reshape(*buf.shape[:-2], -1)
+    h = jax.nn.relu(dense(params["l1"], x))
+    h = jax.nn.relu(dense(params["l2"], h))
+    return dense(params["head"], h), buf
+
+
+def apply_sequence(params: Params, cfg: AIPConfig, dsets: jax.Array):
+    """dsets: (B, T, d_in) -> logits (B, T, M). Scan of ``step``."""
+    B = dsets.shape[0]
+    st0 = init_state(cfg, (B,))
+
+    def body(st, d):
+        lg, st = step(params, cfg, st, d)
+        return st, lg
+
+    _, lgs = lax.scan(body, st0, jnp.moveaxis(dsets, 1, 0))
+    return jnp.moveaxis(lgs, 0, 1)
+
+
+# --- loss / training --------------------------------------------------------
+
+def xent_loss(params: Params, cfg: AIPConfig, dsets, us) -> jax.Array:
+    """Eq. 3: mean summed binary cross-entropy over the M heads."""
+    logits = apply_sequence(params, cfg, dsets)
+    ll = us * jax.nn.log_sigmoid(logits) + \
+        (1.0 - us) * jax.nn.log_sigmoid(-logits)
+    return -ll.sum(-1).mean()
+
+
+def accuracy(params: Params, cfg: AIPConfig, dsets, us) -> jax.Array:
+    logits = apply_sequence(params, cfg, dsets)
+    pred = (logits > 0).astype(jnp.float32)
+    return (pred == us).astype(jnp.float32).mean()
+
+
+def train_aip(cfg: AIPConfig, dsets, us, key, *, epochs: int = 10,
+              batch_size: int = 32, lr: float = 3e-3,
+              window: int = 0) -> Tuple[Params, Dict]:
+    """Fit the AIP on (N, T, d_in)/(N, T, M) sequences from Algorithm 1.
+
+    ``window`` > 0 truncates each sampled sequence to that many steps
+    (Theorem 1: match it to the agent's memory k).
+    """
+    N, T = dsets.shape[:2]
+    if window and window < T:
+        n_win = T // window
+        dsets = dsets[:, :n_win * window].reshape(N * n_win, window, -1)
+        us = us[:, :n_win * window].reshape(N * n_win, window, us.shape[-1])
+        N, T = dsets.shape[:2]
+    params = init_aip(cfg, key)
+    opt = adamw(lr, weight_decay=0.0, clip_norm=1.0)
+    ost = opt.init(params)
+    batch_size = min(batch_size, N)
+    n_batches = max(1, N // batch_size)
+
+    @jax.jit
+    def epoch(params, ost, key):
+        perm = jax.random.permutation(key, N)[:n_batches * batch_size]
+        perm = perm.reshape(n_batches, batch_size)
+
+        def body(carry, idx):
+            params, ost = carry
+            l, g = jax.value_and_grad(xent_loss)(
+                params, cfg, dsets[idx], us[idx])
+            params, ost, _ = opt.update(g, ost, params)
+            return (params, ost), l
+
+        (params, ost), losses = lax.scan(body, (params, ost), perm)
+        return params, ost, losses.mean()
+
+    history = []
+    for e in range(epochs):
+        key, ke = jax.random.split(key)
+        params, ost, l = epoch(params, ost, ke)
+        history.append(float(l))
+    metrics = {"loss_history": history,
+               "final_loss": history[-1] if history else float("nan")}
+    return params, metrics

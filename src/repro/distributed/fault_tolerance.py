@@ -1,0 +1,150 @@
+"""Fault tolerance: preemption-safe training, stragglers, elastic DP.
+
+Pieces (each unit-tested; the training driver in launch/train.py wires them):
+
+- ``TrainingGuard``: wraps the step loop — periodic + preemption-triggered
+  checkpointing (SIGTERM handler), automatic resume from the latest
+  committed checkpoint, and crash-loop backoff bookkeeping.
+- ``StragglerDetector``: EWMA step-time watchdog. On real multi-host pods a
+  straggling host shows up as a slow collective everywhere; the detector
+  flags sustained slowdowns so the orchestrator can trigger an elastic
+  restart excluding the slow host (the policy hook is ``on_straggler``).
+- ``elastic_plan``: given the surviving host set, picks the largest valid
+  (data, model) mesh <= survivors and the per-host batch reshard plan;
+  restart then resumes from the checkpoint onto the smaller mesh (restore
+  reshards — see checkpoint/ckpt.py). Scale-up re-admits hosts the same way.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.checkpoint import ckpt
+
+
+# ---------------------------------------------------------------------------
+# Preemption-safe training loop guard
+# ---------------------------------------------------------------------------
+
+class TrainingGuard:
+    def __init__(self, ckpt_dir: str | Path, *, save_every: int = 100,
+                 keep: int = 3, install_signal_handler: bool = True):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.save_every = save_every
+        self.keep = keep
+        self.preempted = False
+        if install_signal_handler:
+            try:
+                signal.signal(signal.SIGTERM, self._on_sigterm)
+            except ValueError:
+                pass  # not on main thread (tests)
+
+    def _on_sigterm(self, signum, frame):
+        self.preempted = True
+
+    def resume_or(self, init_fn: Callable, target=None, shardings=None):
+        """-> (state, start_step). Restores the latest committed checkpoint
+        if present, else calls ``init_fn()``."""
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return init_fn(), 0
+        target = target if target is not None else init_fn()
+        state, step, _ = ckpt.restore(self.ckpt_dir, target, step,
+                                      shardings=shardings)
+        return state, step
+
+    def maybe_save(self, step: int, state, *, force: bool = False,
+                   metadata: Optional[Dict] = None) -> bool:
+        due = force or self.preempted or \
+            (self.save_every > 0 and step > 0 and step % self.save_every == 0)
+        if due:
+            ckpt.save(self.ckpt_dir, step, state, metadata=metadata,
+                      keep=self.keep)
+        return due
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StragglerDetector:
+    """EWMA step-time watchdog: sustained step times above
+    ``threshold x EWMA`` for ``patience`` consecutive steps => straggler."""
+    threshold: float = 2.0
+    alpha: float = 0.05
+    patience: int = 5
+    warmup: int = 10
+    _ewma: float = 0.0
+    _n: int = 0
+    _over: int = 0
+    events: List[Tuple[int, float, float]] = field(default_factory=list)
+
+    def update(self, step: int, step_time_s: float) -> bool:
+        """Returns True when a sustained straggle is detected at ``step``."""
+        self._n += 1
+        if self._n <= self.warmup:
+            self._ewma = (step_time_s if self._n == 1 else
+                          (1 - self.alpha) * self._ewma
+                          + self.alpha * step_time_s)
+            return False
+        is_slow = step_time_s > self.threshold * self._ewma
+        if is_slow:
+            self._over += 1
+        else:
+            self._over = 0
+            self._ewma = (1 - self.alpha) * self._ewma \
+                + self.alpha * step_time_s
+        if self._over >= self.patience:
+            self.events.append((step, step_time_s, self._ewma))
+            self._over = 0
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Elastic data-parallel resize
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    active_hosts: int
+    global_batch: int
+    per_host_batch: int
+    dropped_hosts: Tuple[int, ...]
+
+
+def elastic_plan(n_hosts_alive: int, chips_per_host: int, *,
+                 model_parallel: int, global_batch: int,
+                 pods: int = 1) -> ElasticPlan:
+    """Largest valid mesh on the surviving hosts.
+
+    Keeps ``model`` fixed (TP degree is architectural), shrinks ``data`` to
+    the largest value such that data*model divides the surviving chips and
+    the global batch stays divisible (gradient-accumulation picks up any
+    slack). Raises if fewer chips than one model replica.
+    """
+    chips = n_hosts_alive * chips_per_host
+    if chips < model_parallel:
+        raise ValueError(
+            f"{chips} chips cannot host model_parallel={model_parallel}")
+    data = chips // model_parallel
+    # batch must divide across data shards; shrink data to a divisor
+    while data > 1 and global_batch % data != 0:
+        data -= 1
+    used_hosts = (data * model_parallel) // chips_per_host
+    shape = ((pods, data // pods, model_parallel)
+             if pods > 1 and data % pods == 0
+             else (data, model_parallel))
+    axes = (("pod", "data", "model") if len(shape) == 3
+            else ("data", "model"))
+    return ElasticPlan(
+        mesh_shape=shape, mesh_axes=axes, active_hosts=used_hosts,
+        global_batch=global_batch,
+        per_host_batch=global_batch // max(data, 1),
+        dropped_hosts=tuple(range(used_hosts, n_hosts_alive)))

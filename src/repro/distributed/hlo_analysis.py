@@ -1,0 +1,287 @@
+"""Loop-corrected HLO analysis for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE (verified
+by calibration in tests/test_hlo_analysis.py) — fatal for scan-over-layers
+models where >95% of compute lives inside the layer loop. This module parses
+the optimized HLO text, builds the computation call graph, extracts while
+trip counts from loop-condition constants, and propagates multipliers to:
+
+- collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute), summing *operand* sizes per the spec,
+  with all-reduce counted 2x (ring reduce+broadcast);
+- FLOPs (dot: 2*prod(result)*prod(contracting); elementwise arithmetic:
+  result elems — matters for xLSTM's outer-product updates);
+- HBM bytes (operands+results of top-level ops, fusion bodies opaque).
+
+All sizes are per-device (post-SPMD-partitioning shapes).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 1, "u4": 1,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*(?:\(.*\))?\s*(?:->.*)?{\s*$")
+_REF_RE = re.compile(r"(?:body|condition|calls|to_apply|branch_computations)="
+                     r"(?:{([^}]*)}|(%?[\w.\-]+))")
+_OPERAND_RE = re.compile(r"(%?[\w.\-]+)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "negate", "abs", "log", "rsqrt", "sqrt", "select",
+    "compare", "and", "or", "xor", "exponential-minus-one", "log-plus-one",
+    "floor", "ceil", "sign", "atan2", "remainder", "logistic", "cbrt",
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes_elems(type_str: str) -> Tuple[int, int]:
+    total_b = total_e = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+@dataclass
+class HloOp:
+    name: str
+    type_str: str
+    kind: str
+    rest: str          # args + attrs raw text
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[HloOp] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None or line.strip() == "}":
+            m = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+            if m:
+                name = m.group(2).lstrip("%")
+                cur = Computation(name=name, is_entry=bool(m.group(1)))
+                comps[name] = cur
+            elif line.strip() == "}":
+                cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            mm = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+            if mm:
+                name = mm.group(2).lstrip("%")
+                cur = Computation(name=name, is_entry=bool(mm.group(1)))
+                comps[name] = cur
+            continue
+        name, type_str, kind, rest = m.groups()
+        name = name.lstrip("%")
+        # operands: %refs inside the first paren group (before attrs)
+        depth, i = 1, 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        arg_str, attr_str = rest[:i - 1], rest[i:]
+        operands = [o.lstrip("%") for o in
+                    re.findall(r"%[\w.\-]+", arg_str)]
+        op = HloOp(name=name, type_str=type_str, kind=kind,
+                   rest=rest, operands=operands)
+        cur.ops.append(op)
+        cur.types[name] = type_str
+    return comps
+
+
+def _called(op: HloOp) -> List[str]:
+    out = []
+    for m in _REF_RE.finditer(op.rest):
+        grp = m.group(1) or m.group(2)
+        for name in re.findall(r"%?([\w.\-]+)", grp):
+            out.append(name)
+    return out
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant" and op.type_str.startswith("s32"):
+            m = re.match(r"(\d+)\)", op.rest.strip())
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def computation_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution-count multiplier per computation, from ENTRY."""
+    mult: Dict[str, float] = defaultdict(float)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {}
+    fused_bodies = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                fused_bodies.update(_called(op))
+
+    seen_stack = []
+
+    def visit(name: str, m: float):
+        if name not in comps or name in seen_stack or m <= 0:
+            return
+        mult[name] += m
+        seen_stack.append(name)
+        for op in comps[name].ops:
+            if op.kind == "while":
+                refs = _REF_RE.finditer(op.rest)
+                body = cond = None
+                for r in refs:
+                    grp = (r.group(1) or r.group(2)).lstrip("%")
+                    if "body=" in r.group(0):
+                        body = grp
+                    elif "condition=" in r.group(0):
+                        cond = grp
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    visit(body, m * trips)
+                if cond:
+                    visit(cond, m * (trips + 1))
+            else:
+                for callee in _called(op):
+                    visit(callee, m)
+        seen_stack.pop()
+
+    visit(entry.name, 1.0)
+    return dict(mult), fused_bodies, entry.name
+
+
+def _dot_flops(op: HloOp, comp: Computation) -> float:
+    res_b, res_e = _type_bytes_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.rest)
+    if not m or not op.operands:
+        return 2.0 * res_e
+    lhs_type = comp.types.get(op.operands[0], "")
+    arrs = _ARRAY_RE.findall(lhs_type)
+    if not arrs:
+        return 2.0 * res_e
+    dims = [int(d) for d in arrs[0][1].split(",") if d]
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            k *= dims[int(idx)]
+    return 2.0 * res_e * k
+
+
+_SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    comps = parse_hlo(hlo_text)
+    mult, fused_bodies, entry = computation_multipliers(comps)
+
+    coll_bytes = defaultdict(float)
+    coll_counts = defaultdict(float)
+    flops = 0.0
+    hbm_bytes = 0.0
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fused_bodies
+        for op in comp.ops:
+            res_b, res_e = _type_bytes_elems(op.type_str)
+            # ---- flops (count inside fusions too) ----
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp)
+            elif op.kind in ELEMENTWISE:
+                flops += m * res_e
+            elif op.kind in ("reduce", "reduce-window"):
+                ob = sum(_type_bytes_elems(comp.types.get(o, ""))[1]
+                         for o in op.operands[:1])
+                flops += m * ob
+            # ---- collectives ----
+            if op.kind in COLLECTIVES:
+                ob = sum(_type_bytes_elems(comp.types.get(o, ""))[0]
+                         for o in op.operands)
+                factor = 2.0 if op.kind == "all-reduce" else 1.0
+                coll_bytes[op.kind] += m * ob * factor
+                coll_counts[op.kind] += m
+            # ---- HBM traffic: top-level ops only, fusions opaque ----
+            if not in_fusion and op.kind not in _SKIP_MEM:
+                ob = sum(_type_bytes_elems(comp.types.get(o, ""))[0]
+                         for o in op.operands)
+                hbm_bytes += m * (ob + res_b)
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": dict(coll_bytes),
+        "collective_counts": dict(coll_counts),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "n_computations": len(comps),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e-class chip constants from the brief)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+def roofline(analysis: Dict, n_chips: int,
+             model_flops: float | None = None) -> Dict[str, float]:
+    """All byte/flop numbers in ``analysis`` are per-device already."""
+    t_compute = analysis["flops"] / PEAK_FLOPS
+    t_memory = analysis["hbm_bytes"] / HBM_BW
+    t_coll = analysis["collective_bytes_total"] / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    out = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dominant,
+        "step_time_lower_bound_s": max(t_compute, t_memory, t_coll),
+    }
+    if model_flops:
+        out["model_flops_total"] = model_flops
+        out["useful_flops_ratio"] = \
+            model_flops / max(analysis["flops"] * n_chips, 1.0)
+        out["mfu_upper_bound"] = (model_flops / n_chips / PEAK_FLOPS) / \
+            max(out["step_time_lower_bound_s"], 1e-12)
+    return out

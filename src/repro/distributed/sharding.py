@@ -1,0 +1,275 @@
+"""Sharding rules: map every parameter / input / cache leaf to a PartitionSpec.
+
+Mesh axes (see launch/mesh.py): ``("pod", "data", "model")`` multi-pod or
+``("data", "model")`` single-pod.
+
+- tensor parallelism on ``model``: attention heads, FFN hidden, experts, vocab
+- FSDP on ``data``: the d_model-sized dim of each weight (ZeRO-3-style; XLA
+  inserts per-layer all-gathers inside the scan-over-layers loop)
+- pure DP on ``pod``: params replicated, gradients all-reduced across pods;
+  optimizer moments are additionally sharded over ``pod`` where divisible
+  (ZeRO-1 across pods)
+- batch on ``("pod","data")``; for batch-1 long-context decode the cache
+  sequence dim shards over ``data`` instead.
+
+Every rule degrades to replication when a dim is not divisible by the axis
+size (e.g. whisper's vocab 51865 on model=16) — correctness first, the
+roofline/§Perf loop then attacks what this leaves on the table.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(dim: int, mesh: Mesh, name) -> Optional[object]:
+    if name is None:
+        return None
+    if isinstance(name, tuple):  # combined axes (fsdp_only profile)
+        n = 1
+        for a in name:
+            if a not in mesh.axis_names:
+                return None
+            n *= mesh.shape[a]
+        if dim % n == 0 and n > 1:
+            return name
+        # fall back to the first axis alone
+        return _fits(dim, mesh, name[0])
+    if name in mesh.axis_names and dim % mesh.shape[name] == 0 \
+            and mesh.shape[name] > 1:
+        return name
+    return None
+
+
+def dp_axes(mesh: Mesh, profile: str = "tp"):
+    """Batch axes: ("pod","data") (+"model" in the fsdp_only profile)."""
+    names = (("pod", "data", "model") if profile == "fsdp_only"
+             else ("pod", "data"))
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1,
+               profile: str = "tp") -> P:
+    """Spec for (B, ...) activations: shard B over as many dp axes as divide."""
+    axes = []
+    rem = batch
+    for a in dp_axes(mesh, profile):
+        if rem % mesh.shape[a] == 0:
+            axes.append(a)
+            rem //= mesh.shape[a]
+    lead = tuple(axes) if axes else None
+    return P(lead, *([None] * extra_dims))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules, keyed on tree-path names
+# ---------------------------------------------------------------------------
+
+# (matched path key) -> (dim roles), roles: "fsdp" | "tp" | None per dim,
+# for the *unstacked* (per-layer) shape; a stacked leading layer dim gets None.
+_RULES = {
+    # embeddings / heads: vocab on tp; embed dim NOT fsdp-sharded (a gather
+    # from a 2-way-sharded table forces involuntary full remat in GSPMD)
+    "table": ("tp", None),
+    "lm_head.w": ("fsdp", "tp"),
+    # attention
+    "wq.w": ("fsdp", "tp"), "wk.w": ("fsdp", "tp"), "wv.w": ("fsdp", "tp"),
+    "wq.b": ("tp",), "wk.b": ("tp",), "wv.b": ("tp",),
+    "wo.w": ("tp", "fsdp"), "wo.b": (None,),
+    # MLA
+    "wq_a.w": ("fsdp", "tp"), "wq_b.w": ("fsdp", "tp"),
+    "wkv_a.w": ("fsdp", None), "wkv_b.w": ("fsdp", "tp"),
+    # MLP
+    "w_gate": ("fsdp", "tp"), "w_in": ("fsdp", "tp"), "w_out": ("tp", "fsdp"),
+    # MoE: experts sharded on E only (pure expert parallelism). FSDP-sharding
+    # the d dims too made GSPMD all-reduce the (E, C, d_ff) dispatch
+    # activations (346 MB x2 per layer per microbatch measured) instead of
+    # all-gathering the 65 MB of local expert weights — see §Perf hillclimb 2.
+    "experts.w_gate": ("tp", None, None),
+    "experts.w_in": ("tp", None, None),
+    "experts.w_out": ("tp", None, None),
+    "router": (None, None),
+    # mamba
+    "in_proj": ("fsdp", "tp"), "out_proj": ("tp", "fsdp"),
+    "conv_w": ("tp", None), "conv_b": ("tp",),
+    "x_proj": ("tp", None), "dt_w": (None, "tp"),
+    "A_log": ("tp", None), "D": ("tp",),
+    # mLSTM / sLSTM (bare (NH, DH, DH) block-diagonal projections)
+    "up_proj": ("fsdp", "tp"), "down_proj": ("tp", "fsdp"),
+    "wq": (None, "tp", None), "wk": (None, "tp", None),
+    "wv": (None, "tp", None),
+    "w_if.w": ("tp", None), "w_if.b": (None,),
+    "r_z": (None, "tp", None), "r_i": (None, "tp", None),
+    "r_f": (None, "tp", None), "r_o": (None, "tp", None),
+    "ff_up": ("fsdp", "tp"), "ff_down": ("tp", "fsdp"),
+    "w_in.w": ("fsdp", "tp"), "w_in.b": ("tp",),
+}
+
+_AXIS_FOR_ROLE = {"fsdp": "data", "tp": "model"}
+_AXIS_FOR_ROLE_FSDP_ONLY = {"fsdp": ("data", "model"), "tp": None}
+
+# per-run override: expert-dim axes for "experts.*" leaves ("model" default;
+# ("data","model") for 2-D EP — set from ArchConfig.moe_expert_axes)
+_EP_AXES = ("model",)
+
+
+def set_moe_expert_axes(axes: str) -> None:
+    global _EP_AXES
+    _EP_AXES = ("data", "model") if axes == "data_model" else ("model",)
+
+
+def _path_names(path) -> list:
+    return [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, stacked_under: str = "blocks",
+                profile: str = "tp") -> P:
+    """Assign a PartitionSpec to one parameter leaf by its tree path."""
+    names = _path_names(path)
+    # match the most specific rule (all dotted parts present in the path)
+    best = None
+    for key, roles in _RULES.items():
+        parts = key.split(".")
+        if all(p in names for p in parts):
+            if best is None or len(key) > len(best[0]):
+                best = (key, roles)
+    shape = leaf.shape
+    stacked = "blocks" in names  # decoder + encoder stacks are scan-stacked
+    if best is None:
+        roles = tuple([None] * (len(shape) - (1 if stacked else 0)))
+    else:
+        roles = best[1]
+    role_map = dict(_AXIS_FOR_ROLE_FSDP_ONLY if profile == "fsdp_only"
+                    else _AXIS_FOR_ROLE)
+    if best is not None and best[0].startswith("experts."):
+        role_map["tp"] = _EP_AXES if len(_EP_AXES) > 1 else _EP_AXES[0]
+    specs = []
+    offset = 0
+    if stacked:
+        specs.append(None)  # layer-stack dim
+        offset = 1
+    for i in range(offset, len(shape)):
+        ridx = i - offset
+        role = roles[ridx] if ridx < len(roles) else None
+        ax = role_map.get(role)
+        specs.append(_fits(shape[i], mesh, ax) if ax else None)
+    return P(*specs)
+
+
+def param_specs(abstract_params, mesh: Mesh, profile: str = "tp"):
+    """Pytree of PartitionSpec matching an (abstract) param pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, mesh, profile=profile),
+        abstract_params)
+
+
+def opt_state_specs(abstract_opt_state, mesh: Mesh, pspecs):
+    """Moments shard like params, then widen over axes the param leaves
+    unused ('pod' always — ZeRO-1 across pods; 'data' too, which matters for
+    EP-only expert weights whose d dims are unsharded)."""
+    def mom(spec_tree):
+        def widen(path, leaf):
+            base = _lookup(pspecs, path)
+            if base is None:
+                return P()
+            parts = list(base) + [None] * (len(leaf.shape) - len(base))
+            used = set()
+            for cur in parts:
+                for a in (cur if isinstance(cur, tuple) else (cur,)):
+                    if a:
+                        used.add(a)
+            for ax in ("pod", "data"):
+                if ax not in mesh.axis_names or ax in used:
+                    continue
+                for i, (cur, dim) in enumerate(zip(parts, leaf.shape)):
+                    if cur is None and dim % mesh.shape[ax] == 0 and dim > 1:
+                        parts[i] = ax
+                        used.add(ax)
+                        break
+            return P(*parts)
+        return jax.tree_util.tree_map_with_path(widen, spec_tree)
+
+    mu = mom(abstract_opt_state.mu)
+    nu = mom(abstract_opt_state.nu)
+    return type(abstract_opt_state)(step=P(), mu=mu, nu=nu)
+
+
+def _lookup(tree, path):
+    node = tree
+    for k in path:
+        key = getattr(k, "key", getattr(k, "name", None))
+        if key is None:
+            return None
+        try:
+            node = node[key]
+        except (KeyError, TypeError, IndexError):
+            return None
+    return node if isinstance(node, P) else None
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode)
+# ---------------------------------------------------------------------------
+
+def cache_pspec(path, leaf, mesh: Mesh, batch: int) -> P:
+    """KV/state cache leaves. Batch shards over dp axes where divisible;
+    KV heads over 'model' where divisible; whatever axes remain unused go to
+    the sequence dim (sequence-parallel cache — a 40L MHA kv=20 cache at
+    32k x 128 batch is 1.7 TB global; every idle mesh axis matters)."""
+    names = _path_names(path)
+    stacked = "blocks" in names
+    shape = leaf.shape
+    specs = [None] * len(shape)
+    bdim = 1 if stacked else 0
+    used = set()
+    # batch across dp axes
+    axes = []
+    rem = shape[bdim]
+    for a in dp_axes(mesh):
+        if rem % mesh.shape[a] == 0 and mesh.shape[a] > 1:
+            axes.append(a)
+            used.add(a)
+            rem //= mesh.shape[a]
+    if axes:
+        specs[bdim] = tuple(axes) if len(axes) > 1 else axes[0]
+    # kv heads on model when divisible: (..., S, KH, hd)
+    if any(k in ("k", "v", "mk", "mv") for k in names) \
+            and len(shape) >= bdim + 3 and "model" not in used:
+        kh = shape[bdim + 2]
+        if _fits(kh, mesh, "model"):
+            specs[bdim + 2] = "model"
+            used.add("model")
+    # remaining axes -> sequence dim (seq-parallel cache)
+    is_seq_cache = any(k in ("k", "v", "ckv", "krope") for k in names)
+    if is_seq_cache and len(shape) > bdim + 1:
+        seq_axes = []
+        rem = shape[bdim + 1]
+        for a in ("data", "model"):
+            if a in mesh.axis_names and a not in used \
+                    and mesh.shape[a] > 1 and rem % mesh.shape[a] == 0:
+                seq_axes.append(a)
+                used.add(a)
+                rem //= mesh.shape[a]
+        if seq_axes:
+            specs[bdim + 1] = (tuple(seq_axes) if len(seq_axes) > 1
+                               else seq_axes[0])
+    return P(*specs)
+
+
+def cache_specs(abstract_cache, mesh: Mesh, batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_pspec(path, leaf, mesh, batch),
+        abstract_cache)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

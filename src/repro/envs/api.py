@@ -1,0 +1,45 @@
+"""Environment protocol: pure-function JAX environments.
+
+Both the Global Simulator (GS) and Local Simulator (LS) of each domain expose
+the same functional API, so PPO rollouts are a single ``lax.scan`` and batch
+parallelism is a ``vmap`` — this is the TPU-native answer to the paper's
+"make the simulator fast" premise (DESIGN.md §4).
+
+GS step:  (state, action, key)          -> (state, obs, reward, info)
+LS step:  (state, action, u_t, key)     -> (state, obs, reward, info)
+
+``info`` carries the IBA quantities extracted from the GS (Algorithm 1):
+  - "u": influence sources u_t  (what the AIP learns to predict)
+  - "dset": the d-separating-set features d_t (AIP input)
+  - "dset_full": d_t plus confounder variables (for the App. B ablation)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    n_actions: int
+    n_influence: int      # M influence source bits
+    dset_dim: int         # d-set feature size
+    dset_full_dim: int    # d-set + confounders (ablation input)
+
+
+class Env(NamedTuple):
+    spec: EnvSpec
+    reset: Callable   # key -> state
+    step: Callable    # (state, action, key) -> (state, obs, r, info)
+    observe: Callable  # state -> obs
+
+
+class LocalEnv(NamedTuple):
+    spec: EnvSpec
+    reset: Callable   # key -> state
+    step: Callable    # (state, action, u, key) -> (state, obs, r, info)
+    observe: Callable
+    dset_fn: Callable  # (state, action) -> d_t features (used by the IALS
+    #                    to query the AIP *before* stepping)

@@ -1,0 +1,220 @@
+"""Traffic-grid domain (paper §5.2), as a pure-JAX cellular automaton.
+
+Global simulator (GS): a G x G grid of intersections (paper: 5x5 = 25). Each
+intersection has four incoming lanes of L cells, indexed by direction of
+travel d: 0=southbound, 1=northbound, 2=westbound, 3=eastbound. Cars advance
+one cell per step when the next cell is free; at the stop line they cross iff
+their approach has green and the downstream tail cell is free, entering the
+same-direction lane of the neighbouring intersection (no turning — the
+paper's influence structure only needs through traffic). Boundary lanes
+inject cars with prob ``p_in`` (paper uses 0.1, App. E). Non-agent lights run
+an actuated queue-comparison controller (stand-in for the Flow-optimized
+controllers); the agent sets its intersection's phase each step.
+
+Local simulator (LS): only the agent's four incoming lanes. Cars enter the
+tails according to the influence sources u_t (4 bits — exactly the paper's
+"car entering from each of the four incoming lanes"); crossing cars leave the
+local region (open boundary).
+
+d-set (paper: 37-bit car-location vector, lights EXCLUDED to avoid the App. B
+spurious correlation): occupancy of the 4 incoming lanes = 4L bits.
+``dset_full`` appends the light phase (the confounder) for the ablation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .api import Env, EnvSpec, LocalEnv
+
+
+@dataclass(frozen=True)
+class TrafficConfig:
+    grid: int = 5
+    lane_len: int = 10
+    p_in: float = 0.1
+    agent: Tuple[int, int] = (2, 2)
+    min_phase: int = 2          # actuated controller hysteresis (steps)
+    queue_window: int = 5       # cells from stop line counted as queue
+
+
+class TrafficState(NamedTuple):
+    lanes: jax.Array   # (G, G, 4, L) bool occupancy
+    phase: jax.Array   # (G, G) int8: 0 = NS green (d 0,1), 1 = EW green
+    timer: jax.Array   # (G, G) int32 steps since last switch
+
+
+class LocalTrafficState(NamedTuple):
+    lanes: jax.Array   # (4, L) bool
+    phase: jax.Array   # () int8 (agent's own light, part of x_t)
+
+
+def _green(phase, G):
+    """(G,G) phase -> (G,G,4) approach-green mask."""
+    ns = (phase == 0)
+    return jnp.stack([ns, ns, ~ns, ~ns], axis=-1)
+
+
+def _advance_lane(occ, can_cross):
+    """One lane (..., L) synchronous advance. Returns (new_occ, moved_mask,
+    crossed). Backward pass from the stop line; L is small -> unrolled."""
+    L = occ.shape[-1]
+    moved = [None] * L
+    moved[L - 1] = occ[..., L - 1] & can_cross
+    for c in range(L - 2, -1, -1):
+        moved[c] = occ[..., c] & (~occ[..., c + 1] | moved[c + 1])
+    moved = jnp.stack(moved, axis=-1)
+    stay = occ & ~moved
+    shifted = jnp.concatenate(
+        [jnp.zeros_like(occ[..., :1]), moved[..., :-1]], axis=-1)
+    return stay | shifted, moved, moved[..., L - 1]
+
+
+# directions: 0 south(+i), 1 north(-i), 2 west(-j), 3 east(+j)
+_DI = (1, -1, 0, 0)
+_DJ = (0, 0, -1, 1)
+
+
+def make_traffic_env(cfg: TrafficConfig = TrafficConfig()):
+    G, L = cfg.grid, cfg.lane_len
+    ai, aj = cfg.agent
+    spec = EnvSpec(name="traffic-gs", obs_dim=4 * L + 1, n_actions=2,
+                   n_influence=4, dset_dim=4 * L, dset_full_dim=4 * L + 1)
+
+    def observe(state: TrafficState):
+        local = state.lanes[ai, aj].reshape(-1).astype(jnp.float32)
+        return jnp.concatenate(
+            [local, state.phase[ai, aj][None].astype(jnp.float32)])
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        lanes = jax.random.bernoulli(k1, 0.15, (G, G, 4, L))
+        phase = jax.random.randint(k2, (G, G), 0, 2).astype(jnp.int8)
+        return TrafficState(lanes=lanes, phase=phase,
+                            timer=jnp.zeros((G, G), jnp.int32))
+
+    def step(state: TrafficState, action, key):
+        lanes, phase, timer = state
+        phase = phase.at[ai, aj].set(action.astype(jnp.int8))
+        green = _green(phase, G)
+
+        # crossing feasibility: downstream tail must be free (edges exit)
+        dest_free = jnp.ones((G, G, 4), bool)
+        for d in range(4):
+            tails = lanes[:, :, d, 0]
+            rolled = jnp.roll(tails, shift=(-_DI[d], -_DJ[d]), axis=(0, 1))
+            free = ~rolled
+            if d == 0:
+                free = free.at[G - 1, :].set(True)
+            elif d == 1:
+                free = free.at[0, :].set(True)
+            elif d == 2:
+                free = free.at[:, 0].set(True)
+            else:
+                free = free.at[:, G - 1].set(True)
+            dest_free = dest_free.at[:, :, d].set(free)
+
+        new_lanes, moved, crossed = _advance_lane(lanes, green & dest_free)
+
+        # injections: crossings arriving from upstream, else boundary inflow
+        inj = jnp.zeros((G, G, 4), bool)
+        key, kin = jax.random.split(key)
+        inflow = jax.random.bernoulli(kin, cfg.p_in, (G, G, 4))
+        for d in range(4):
+            arriving = jnp.roll(crossed[:, :, d], shift=(_DI[d], _DJ[d]),
+                                axis=(0, 1))
+            boundary = jnp.zeros((G, G), bool)
+            if d == 0:
+                arriving = arriving.at[0, :].set(False)
+                boundary = boundary.at[0, :].set(True)
+            elif d == 1:
+                arriving = arriving.at[G - 1, :].set(False)
+                boundary = boundary.at[G - 1, :].set(True)
+            elif d == 2:
+                arriving = arriving.at[:, G - 1].set(False)
+                boundary = boundary.at[:, G - 1].set(True)
+            else:
+                arriving = arriving.at[:, 0].set(False)
+                boundary = boundary.at[:, 0].set(True)
+            inj = inj.at[:, :, d].set(
+                arriving | (boundary & inflow[:, :, d]))
+        tail_free = ~new_lanes[:, :, :, 0]
+        inj = inj & tail_free
+        new_lanes = new_lanes.at[:, :, :, 0].set(
+            new_lanes[:, :, :, 0] | inj)
+
+        # actuated controllers (non-agent intersections)
+        q = lanes[:, :, :, L - cfg.queue_window:].sum(-1)       # (G,G,4)
+        q_ns, q_ew = q[..., 0] + q[..., 1], q[..., 2] + q[..., 3]
+        green_q = jnp.where(phase == 0, q_ns, q_ew)
+        red_q = jnp.where(phase == 0, q_ew, q_ns)
+        want_switch = (red_q > green_q) & (timer >= cfg.min_phase)
+        new_phase = jnp.where(want_switch, 1 - phase, phase).astype(jnp.int8)
+        new_timer = jnp.where(want_switch, 0, timer + 1)
+        new_phase = new_phase.at[ai, aj].set(phase[ai, aj])
+        new_timer = new_timer.at[ai, aj].set(0)
+
+        # reward: average speed over the agent's incoming lanes
+        n_cars = lanes[ai, aj].sum()
+        n_moved = moved[ai, aj].sum()
+        reward = jnp.where(n_cars > 0, n_moved / jnp.maximum(n_cars, 1), 1.0)
+
+        new_state = TrafficState(lanes=new_lanes, phase=new_phase,
+                                 timer=new_timer)
+        dset = lanes[ai, aj].reshape(-1).astype(jnp.float32)     # x_t
+        info = {
+            "u": inj[ai, aj].astype(jnp.float32),                # u_t (4,)
+            "dset": dset,
+            "dset_full": jnp.concatenate(
+                [dset, phase[ai, aj][None].astype(jnp.float32)]),
+            "n_cars": n_cars,
+        }
+        return new_state, observe(new_state), reward, info
+
+    return Env(spec=spec, reset=reset, step=step, observe=observe)
+
+
+def make_local_traffic_env(cfg: TrafficConfig = TrafficConfig()):
+    """LS: the agent's 4 incoming lanes; u_t drives boundary injection."""
+    L = cfg.lane_len
+    spec = EnvSpec(name="traffic-ls", obs_dim=4 * L + 1, n_actions=2,
+                   n_influence=4, dset_dim=4 * L, dset_full_dim=4 * L + 1)
+
+    def observe(state: LocalTrafficState):
+        return jnp.concatenate(
+            [state.lanes.reshape(-1).astype(jnp.float32),
+             state.phase[None].astype(jnp.float32)])
+
+    def reset(key):
+        lanes = jax.random.bernoulli(key, 0.15, (4, L))
+        return LocalTrafficState(lanes=lanes, phase=jnp.int8(0))
+
+    def step(state: LocalTrafficState, action, u, key):
+        lanes = state.lanes
+        phase = action.astype(jnp.int8)
+        ns = (phase == 0)
+        green = jnp.stack([ns, ns, ~ns, ~ns])                    # (4,)
+        # crossing cars exit the local region freely (open boundary)
+        new_lanes, moved, _ = _advance_lane(lanes, green)
+        inj = u.astype(bool) & ~new_lanes[:, 0]
+        new_lanes = new_lanes.at[:, 0].set(new_lanes[:, 0] | inj)
+
+        n_cars = lanes.sum()
+        n_moved = moved.sum()
+        reward = jnp.where(n_cars > 0, n_moved / jnp.maximum(n_cars, 1), 1.0)
+        new_state = LocalTrafficState(lanes=new_lanes, phase=phase)
+        dset = lanes.reshape(-1).astype(jnp.float32)
+        info = {"dset": dset,
+                "dset_full": jnp.concatenate(
+                    [dset, state.phase[None].astype(jnp.float32)]),
+                "n_cars": n_cars}
+        return new_state, observe(new_state), reward, info
+
+    def dset_fn(state: LocalTrafficState, action):
+        return state.lanes.reshape(-1).astype(jnp.float32)
+
+    return LocalEnv(spec=spec, reset=reset, step=step, observe=observe,
+                    dset_fn=dset_fn)

@@ -1,0 +1,248 @@
+"""Warehouse-commissioning domain (paper §5.3), pure JAX.
+
+A grid of R x R robots (paper: 36), each confined to a 5x5 region. The 12
+item cells of a region sit on its edges and are SHARED with the neighbouring
+region (paper Fig. 4): globally the items live on horizontal shelf segments
+``items_h (R+1, R, 3)`` and vertical segments ``items_v (R, R+1, 3)``. Items
+appear with prob 0.02, age every step, and are collected when a robot steps
+onto them. Scripted ("blue") robots greedily chase the oldest active item in
+their region. The agent ("purple") robot is trained; it sees a 25-bit
+position bitmap + its region's 12 item bits, but NOT the neighbour robots —
+their effect arrives only through items vanishing = the influence sources.
+
+u_t (12 bits): for each of the agent's item cells, whether a neighbour robot
+sits on that (shared) cell after this step's moves — the IALS removes such
+items ("that item is removed and the purple robot can no longer collect it").
+
+d-set (paper §5.3.1): the 12 item bits + 12 bits "agent was/is at that item
+cell" (distinguishes own pickups from neighbour pickups). The agent's full
+location-history bitmap is the confounder left out; ``dset_full`` includes it
+for the App. B-style ablation.
+
+``vanish_after`` (paper §5.4): items disappear after exactly k steps
+(default 0 = disabled) — the finite-memory experiment's modified dynamics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .api import Env, EnvSpec, LocalEnv
+
+# item cell coordinates inside a 5x5 region, in fixed order:
+# top edge (0,1..3), bottom (4,1..3), left (1..3,0), right (1..3,4)
+_ITEM_RC = tuple(
+    [(0, c) for c in (1, 2, 3)] + [(4, c) for c in (1, 2, 3)] +
+    [(r, 0) for r in (1, 2, 3)] + [(r, 4) for r in (1, 2, 3)])
+
+
+@dataclass(frozen=True)
+class WarehouseConfig:
+    grid: int = 6               # R x R robots (6x6 = 36)
+    region: int = 5
+    p_item: float = 0.02
+    agent: Tuple[int, int] = (2, 2)
+    vanish_after: int = 0       # >0: §5.4 deterministic disappearance
+    max_age: int = 64
+
+
+class WarehouseState(NamedTuple):
+    pos: jax.Array       # (R, R, 2) int32 robot positions (region coords)
+    items_h: jax.Array   # (R+1, R, 3) int32 age+1 of active item, 0=empty
+    items_v: jax.Array   # (R, R+1, 3) int32
+
+
+class LocalWarehouseState(NamedTuple):
+    pos: jax.Array       # (2,) int32
+    items: jax.Array     # (12,) int32 age+1, 0 = empty
+
+
+def _region_items(items_h, items_v, i, j):
+    """-> (12,) ages for region (i, j), in _ITEM_RC order."""
+    return jnp.concatenate([
+        items_h[i, j], items_h[i + 1, j], items_v[i, j], items_v[i, j + 1]])
+
+
+def _set_region_items(items_h, items_v, i, j, vals):
+    items_h = items_h.at[i, j].set(vals[0:3])
+    items_h = items_h.at[i + 1, j].set(vals[3:6])
+    items_v = items_v.at[i, j].set(vals[6:9])
+    items_v = items_v.at[i, j + 1].set(vals[9:12])
+    return items_h, items_v
+
+
+_ITEM_R = jnp.array([rc[0] for rc in _ITEM_RC])
+_ITEM_C = jnp.array([rc[1] for rc in _ITEM_RC])
+
+# actions: 0 stay, 1 up(-r), 2 down(+r), 3 left(-c), 4 right(+c)
+_MOVE = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]])
+
+
+def _greedy_action(pos, ages):
+    """Scripted policy: L1-greedy toward the oldest active item (12,)."""
+    has = ages > 0
+    target = jnp.argmax(jnp.where(has, ages, -1))
+    tr, tc = _ITEM_R[target], _ITEM_C[target]
+    dr, dc = tr - pos[0], tc - pos[1]
+    act = jnp.where(dr < 0, 1, jnp.where(dr > 0, 2,
+                    jnp.where(dc < 0, 3, jnp.where(dc > 0, 4, 0))))
+    return jnp.where(has.any(), act, 0)
+
+
+def _at_item_mask(pos):
+    """(12,) bool: which item cells the robot at ``pos`` stands on."""
+    return (_ITEM_R == pos[0]) & (_ITEM_C == pos[1])
+
+
+def _obs_from(pos, ages, region):
+    bitmap = jnp.zeros((region, region), jnp.float32).at[
+        pos[0], pos[1]].set(1.0).reshape(-1)
+    return jnp.concatenate([bitmap, (ages > 0).astype(jnp.float32)])
+
+
+def make_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
+    R, S = cfg.grid, cfg.region
+    ai, aj = cfg.agent
+    nobs = S * S + 12
+    spec = EnvSpec(name="warehouse-gs", obs_dim=nobs, n_actions=5,
+                   n_influence=12, dset_dim=24, dset_full_dim=24 + S * S)
+
+    def observe(state: WarehouseState):
+        ages = _region_items(state.items_h, state.items_v, ai, aj)
+        return _obs_from(state.pos[ai, aj], ages, S)
+
+    def reset(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        pos = jax.random.randint(k1, (R, R, 2), 0, S)
+        items_h = (jax.random.bernoulli(k2, 0.3, (R + 1, R, 3))
+                   ).astype(jnp.int32)
+        items_v = (jax.random.bernoulli(k3, 0.3, (R, R + 1, 3))
+                   ).astype(jnp.int32)
+        return WarehouseState(pos=pos, items_h=items_h, items_v=items_v)
+
+    ii, jj = jnp.meshgrid(jnp.arange(R), jnp.arange(R), indexing="ij")
+
+    def step(state: WarehouseState, action, key):
+        pos, items_h, items_v = state
+        ages_before = _region_items(items_h, items_v, ai, aj)
+
+        # all regions' item views (R, R, 12)
+        region_ages = jax.vmap(jax.vmap(
+            lambda i, j: _region_items(items_h, items_v, i, j)))(ii, jj)
+
+        # scripted actions for every robot; agent overridden
+        acts = jax.vmap(jax.vmap(_greedy_action))(pos, region_ages)
+        acts = acts.at[ai, aj].set(action.astype(acts.dtype))
+
+        new_pos = jnp.clip(pos + _MOVE[acts], 0, S - 1)
+
+        # pickups: robot on an item cell collects it. Build a global
+        # "robot standing here" count per shelf cell from all regions.
+        at_mask = jax.vmap(jax.vmap(_at_item_mask))(new_pos)   # (R,R,12)
+        occ_h = jnp.zeros((R + 1, R, 3), jnp.int32)
+        occ_v = jnp.zeros((R, R + 1, 3), jnp.int32)
+        # scatter each region's 12-bit mask onto the global shelves
+        occ_h = occ_h.at[ii, jj].add(at_mask[:, :, 0:3].astype(jnp.int32))
+        occ_h = occ_h.at[ii + 1, jj].add(at_mask[:, :, 3:6].astype(jnp.int32))
+        occ_v = occ_v.at[ii, jj].add(at_mask[:, :, 6:9].astype(jnp.int32))
+        occ_v = occ_v.at[ii, jj + 1].add(
+            at_mask[:, :, 9:12].astype(jnp.int32))
+
+        collected_h = (occ_h > 0) & (items_h > 0)
+        collected_v = (occ_v > 0) & (items_v > 0)
+
+        # agent reward: items the agent itself stands on (active ones)
+        agent_at = _at_item_mask(new_pos[ai, aj])
+        reward = jnp.sum(agent_at & (ages_before > 0)).astype(jnp.float32)
+
+        # age / vanish / spawn
+        key, kh, kv = jax.random.split(key, 3)
+        def upd(items, collected, kk):
+            items = jnp.where(collected, 0, items)
+            items = jnp.where(items > 0,
+                              jnp.minimum(items + 1, cfg.max_age), 0)
+            if cfg.vanish_after > 0:
+                items = jnp.where(items > cfg.vanish_after, 0, items)
+            spawn = jax.random.bernoulli(kk, cfg.p_item, items.shape)
+            return jnp.where((items == 0) & spawn, 1, items)
+        new_h = upd(items_h, collected_h, kh)
+        new_v = upd(items_v, collected_v, kv)
+
+        # influence sources: neighbour robots standing on the agent's cells
+        # (exclude the agent's own occupancy)
+        occ_agent_region = jnp.concatenate([
+            occ_h[ai, aj], occ_h[ai + 1, aj],
+            occ_v[ai, aj], occ_v[ai, aj + 1]])
+        u = ((occ_agent_region - agent_at.astype(jnp.int32)) > 0)
+        if cfg.vanish_after > 0:
+            # §5.4 variant: the influence event is the deterministic
+            # disappearance itself (age hit the limit this step)
+            u = u | (ages_before >= cfg.vanish_after)
+
+        new_state = WarehouseState(pos=new_pos, items_h=new_h, items_v=new_v)
+        at_before = _at_item_mask(pos[ai, aj])
+        dset = jnp.concatenate([(ages_before > 0).astype(jnp.float32),
+                                (at_before | agent_at).astype(jnp.float32)])
+        bitmap = jnp.zeros((S, S), jnp.float32).at[
+            pos[ai, aj, 0], pos[ai, aj, 1]].set(1.0).reshape(-1)
+        info = {"u": u.astype(jnp.float32), "dset": dset,
+                "dset_full": jnp.concatenate([dset, bitmap]),
+                "ages": ages_before}
+        return new_state, observe(new_state), reward, info
+
+    return Env(spec=spec, reset=reset, step=step, observe=observe)
+
+
+def make_local_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
+    """LS: the agent's 5x5 region only; u_t removes neighbour-taken items."""
+    S = cfg.region
+    nobs = S * S + 12
+    spec = EnvSpec(name="warehouse-ls", obs_dim=nobs, n_actions=5,
+                   n_influence=12, dset_dim=24, dset_full_dim=24 + S * S)
+
+    def observe(state: LocalWarehouseState):
+        return _obs_from(state.pos, state.items, S)
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.randint(k1, (2,), 0, S)
+        items = jax.random.bernoulli(k2, 0.3, (12,)).astype(jnp.int32)
+        return LocalWarehouseState(pos=pos, items=items)
+
+    def step(state: LocalWarehouseState, action, u, key):
+        pos, items = state
+        new_pos = jnp.clip(pos + _MOVE[action], 0, S - 1)
+        agent_at = _at_item_mask(new_pos)
+        reward = jnp.sum(agent_at & (items > 0)).astype(jnp.float32)
+        collected = agent_at | (u > 0.5)           # neighbours take theirs
+        new_items = jnp.where(collected, 0, items)
+        new_items = jnp.where(new_items > 0,
+                              jnp.minimum(new_items + 1, cfg.max_age), 0)
+        if cfg.vanish_after > 0:
+            new_items = jnp.where(new_items > cfg.vanish_after, 0, new_items)
+        key, ks = jax.random.split(key)
+        spawn = jax.random.bernoulli(ks, cfg.p_item, (12,))
+        new_items = jnp.where((new_items == 0) & spawn, 1, new_items)
+
+        new_state = LocalWarehouseState(pos=new_pos, items=new_items)
+        at_before = _at_item_mask(pos)
+        dset = jnp.concatenate([(items > 0).astype(jnp.float32),
+                                (at_before | agent_at).astype(jnp.float32)])
+        bitmap = jnp.zeros((S, S), jnp.float32).at[
+            pos[0], pos[1]].set(1.0).reshape(-1)
+        info = {"dset": dset,
+                "dset_full": jnp.concatenate([dset, bitmap]),
+                "ages": items}
+        return new_state, observe(new_state), reward, info
+
+    def dset_fn(state: LocalWarehouseState, action):
+        new_pos = jnp.clip(state.pos + _MOVE[action], 0, S - 1)
+        at = _at_item_mask(state.pos) | _at_item_mask(new_pos)
+        return jnp.concatenate([(state.items > 0).astype(jnp.float32),
+                                at.astype(jnp.float32)])
+
+    return LocalEnv(spec=spec, reset=reset, step=step, observe=observe,
+                    dset_fn=dset_fn)

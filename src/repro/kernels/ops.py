@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On a real TPU runtime set ``interpret=False`` (the default flips on TPU
+backends automatically); in this CPU container interpret mode executes the
+kernel bodies in Python for correctness validation against ``ref.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import gru as _gru
+from . import rmsnorm as _rms
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention_mha(q, k, v, *, causal=True, scale=None, bq=128, bk=128):
+    """q: (B, T, H, D); k, v: (B, S, KH, D) with GQA support.
+
+    Flattens (B, H) into the kernel batch; GQA KV heads are repeated into
+    query-head groups OUTSIDE the kernel (zero-copy broadcast reshape).
+    """
+    B, T, H, D = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KH, G, S, D)).reshape(B * H, S, D)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KH, G, S, v.shape[-1])).reshape(B * H, S,
+                                                              v.shape[-1])
+    o = _fa.flash_attention(qf, kf, vf, causal=causal, scale=scale,
+                            bq=bq, bk=bk, interpret=_default_interpret())
+    return o.reshape(B, H, T, -1).transpose(0, 2, 1, 3)
+
+
+def gru_sequence(params, xs, h0=None):
+    """Drop-in for repro.nn.rnn.gru_sequence backed by the fused kernel."""
+    B, T, D = xs.shape
+    H = params["wh"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, H), xs.dtype)
+    return _gru.gru_sequence(xs, params["wx"], params["wh"], params["b"],
+                             h0, interpret=_default_interpret())
+
+
+def rmsnorm(x, g, *, eps: float = 1e-6):
+    shp = x.shape
+    out = _rms.rmsnorm(x.reshape(-1, shp[-1]), g, eps=eps,
+                       interpret=_default_interpret())
+    return out.reshape(shp)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """q: (BH, T, D); k, v: (BH, S, D) -> (BH, T, Dv). Naive softmax."""
+    D = q.shape[-1]
+    scale = (D ** -0.5) if scale is None else scale
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        T, S = q.shape[1], k.shape[1]
+        mask = jnp.arange(T)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def gru_sequence_ref(x, wx, wh, b, h0):
+    """x: (B, T, D); wx: (D, 3H); wh: (H, 3H); b: (3H,); h0: (B, H)."""
+    H = wh.shape[0]
+
+    def cell(h, xt):
+        gx = xt @ wx + b
+        gh = h @ wh
+        r = jax.nn.sigmoid(gx[..., :H] + gh[..., :H])
+        z = jax.nn.sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
+        n = jnp.tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
+        h2 = (1.0 - z) * n + z * h
+        return h2, h2
+
+    hT, hs = jax.lax.scan(cell, h0, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def rmsnorm_ref(x, g, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * g.astype(jnp.float32)
+            ).astype(x.dtype)

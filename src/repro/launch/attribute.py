@@ -1,0 +1,119 @@
+"""Attribution profiler for dry-run cells: where do the roofline bytes go?
+
+    PYTHONPATH=src python -m repro.launch.attribute --arch X --shape Y \
+        [--mesh pod1] [--overrides JSON] [--top 15] [--what mem|coll|flops]
+
+Re-lowers the cell exactly like dryrun.run_cell, then ranks ops by
+loop-corrected contribution to HBM bytes / collective bytes / FLOPs. This is
+the "profile" of the §Perf hypothesis loop (no real hardware: the lowered
+IR is the profile, per the brief).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS") or
+                           "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from collections import defaultdict
+
+
+def attribute(arch, shape_name, mesh_name="pod1", overrides=None,
+              top=15, what="mem"):
+    import jax
+    from repro.configs.base import get_config, SHAPES
+    from repro.distributed import sharding as shd
+    from repro.distributed import hlo_analysis as H
+    from repro.distributed.act_sharding import use_mesh
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import specs as specs_lib, steps as steps_lib
+    from repro.models import lm
+    from repro.optim.adamw import adamw
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+
+    shd.set_moe_expert_axes(cfg.moe_expert_axes)
+    pshapes = lm.param_shapes(cfg)
+    pspecs = shd.param_specs(pshapes, mesh, cfg.parallelism)
+    sds = lambda t, ss: jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=jax.sharding.NamedSharding(mesh, s)),
+        t, ss, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    ps = sds(pshapes, pspecs)
+    n_micro = cfg.force_microbatches or shape.n_microbatches
+    with mesh, use_mesh(mesh, cfg.parallelism):
+        if shape.kind == "train":
+            opt = adamw(1e-4)
+            oshapes = jax.eval_shape(opt.init, pshapes)
+            os_ = sds(oshapes, shd.opt_state_specs(oshapes, mesh, pspecs))
+            inputs = specs_lib.train_input_specs(cfg, shape, mesh)
+            step = steps_lib.make_train_step(cfg, opt, n_micro)
+            comp = jax.jit(step, donate_argnums=(0, 1)).lower(
+                ps, os_, inputs).compile()
+        elif shape.kind == "prefill":
+            inputs = specs_lib.prefill_input_specs(cfg, shape, mesh)
+            comp = jax.jit(steps_lib.make_prefill_step(
+                cfg, shape.seq_len)).lower(ps, inputs).compile()
+        else:
+            d = specs_lib.decode_input_specs(cfg, shape, mesh)
+            comp = jax.jit(steps_lib.make_serve_step(cfg),
+                           donate_argnums=(1,)).lower(
+                ps, d["cache"], d["token"], d["pos"]).compile()
+
+    comps = H.parse_hlo(comp.as_text())
+    mult, fused_bodies, entry = H.computation_multipliers(comps)
+    rows = []
+    for cname, c in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fused_bodies
+        for op in c.ops:
+            res_b, res_e = H._type_bytes_elems(op.type_str)
+            if what == "coll" and op.kind in H.COLLECTIVES:
+                ob = sum(H._type_bytes_elems(c.types.get(o, ""))[0]
+                         for o in op.operands)
+                f = 2.0 if op.kind == "all-reduce" else 1.0
+                rows.append((m * ob * f, op.kind, op.type_str[:60],
+                             m, cname[:48]))
+            elif what == "mem" and not in_fusion and \
+                    op.kind not in H._SKIP_MEM:
+                ob = sum(H._type_bytes_elems(c.types.get(o, ""))[0]
+                         for o in op.operands)
+                rows.append((m * (ob + res_b), op.kind, op.type_str[:60],
+                             m, cname[:48]))
+            elif what == "flops" and op.kind in ("dot", "convolution"):
+                rows.append((m * H._dot_flops(op, c), op.kind,
+                             op.type_str[:60], m, cname[:48]))
+    rows.sort(reverse=True)
+    unit = 1e9
+    total = sum(r[0] for r in rows)
+    print(f"total {what}: {total/unit:.2f} G ({arch} {shape_name} "
+          f"{mesh_name} overrides={overrides})")
+    agg = defaultdict(float)
+    for val, kind, tstr, m, cn in rows:
+        agg[(kind, tstr.split('{')[0])] += val
+    for (kind, t), val in sorted(agg.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {val/unit:10.2f} G  {val/total*100:5.1f}%  {kind:22s} {t}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--overrides", default=None)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--what", default="mem", choices=["mem", "coll", "flops"])
+    args = ap.parse_args()
+    attribute(args.arch, args.shape, args.mesh,
+              json.loads(args.overrides) if args.overrides else None,
+              args.top, args.what)
+
+
+if __name__ == "__main__":
+    main()

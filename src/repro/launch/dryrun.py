@@ -1,0 +1,200 @@
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For one (arch, shape, mesh) cell:
+  lower the step function against ShapeDtypeStruct inputs with explicit
+  NamedShardings -> .compile() -> memory_analysis + cost_analysis + the
+  loop-corrected HLO collective/flops analysis -> JSON to results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+      --shape train_4k --mesh pod1
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS") or
+                           "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             overrides: dict | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config, SHAPES, cell_applicable
+    from repro.distributed import sharding as shd
+    from repro.distributed.act_sharding import use_mesh
+    from repro.distributed.hlo_analysis import analyze, roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import specs as specs_lib
+    from repro.launch import steps as steps_lib
+    from repro.models import lm
+    from repro.optim.adamw import adamw
+    from repro.nn.module import abstractify
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    # --- abstract params with shardings ---
+    shd.set_moe_expert_axes(cfg.moe_expert_axes)
+    pshapes = lm.param_shapes(cfg)
+    pspecs = shd.param_specs(pshapes, mesh, cfg.parallelism)
+    psharded = jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=jax.sharding.NamedSharding(mesh, s)),
+        pshapes, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    kind = shape.kind
+    n_micro = cfg.force_microbatches or shape.n_microbatches
+    with mesh, use_mesh(mesh, cfg.parallelism):
+        if kind == "train":
+            opt = adamw(1e-4)
+            oshapes = jax.eval_shape(opt.init, pshapes)
+            ospecs = shd.opt_state_specs(oshapes, mesh, pspecs)
+            osharded = jax.tree_util.tree_map(
+                lambda l, s: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype,
+                    sharding=jax.sharding.NamedSharding(mesh, s)),
+                oshapes, ospecs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            inputs = specs_lib.train_input_specs(cfg, shape, mesh)
+            step = steps_lib.make_train_step(cfg, opt, n_micro)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                psharded, osharded, inputs)
+        elif kind == "prefill":
+            inputs = specs_lib.prefill_input_specs(cfg, shape, mesh)
+            step = steps_lib.make_prefill_step(cfg, shape.seq_len)
+            lowered = jax.jit(step).lower(psharded, inputs)
+        else:  # decode
+            dspecs = specs_lib.decode_input_specs(cfg, shape, mesh)
+            step = steps_lib.make_serve_step(cfg)
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                psharded, dspecs["cache"], dspecs["token"], dspecs["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = analyze(compiled.as_text())
+
+    counts = lm.count_params(cfg)
+    # MODEL_FLOPS = 6 N D (train) / 2 N D (fwd) per token, N = active non-embed
+    n_active = counts["active"] - counts["embed"]
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    fl_per_tok = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    model_flops = fl_per_tok * n_active * tokens
+    rf = roofline(hlo, n_chips, model_flops)
+
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params_total": counts["total"], "params_active": counts["active"],
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        },
+        "cost_analysis": {"flops_body_once": ca.get("flops", 0.0),
+                          "bytes_body_once": ca.get("bytes accessed", 0.0)},
+        "hlo": hlo,
+        "roofline": rf,
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ArchConfig overrides (hillclimb)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result filename (hillclimb variants)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        _sweep(args)
+        return
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    res = run_cell(args.arch, args.shape, args.mesh, overrides)
+    fn = RESULTS / f"{args.arch}__{args.shape}__{args.mesh}{args.tag}.json"
+    fn.write_text(json.dumps(res, indent=1))
+    print(json.dumps({k: res[k] for k in
+                      ("arch", "shape", "mesh", "status") if k in res}))
+    if res.get("status") == "ok":
+        r = res["roofline"]
+        print(f"  compile={res['compile_s']}s  "
+              f"peak_mem/dev={res['memory']['peak_bytes_per_device']/2**30:.2f}GiB  "
+              f"t_comp={r['t_compute_s']:.4f}s t_mem={r['t_memory_s']:.4f}s "
+              f"t_coll={r['t_collective_s']:.4f}s  -> {r['bottleneck']}")
+
+
+def _sweep(args):
+    """Run every cell as a subprocess (isolates compiles; survives OOM)."""
+    from repro.configs.base import list_configs, SHAPES, get_config, \
+        cell_applicable
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    for arch in list_configs():
+        for shape in SHAPES.values():
+            for mesh in meshes:
+                cells.append((arch, shape.name, mesh))
+    for arch, shape, mesh in cells:
+        fn = RESULTS / f"{arch}__{shape}__{mesh}.json"
+        if fn.exists() and not args.force:
+            print(f"skip (cached): {fn.name}")
+            continue
+        cfg = get_config(arch)
+        ok, reason = cell_applicable(cfg, SHAPES[shape])
+        if not ok:
+            fn.write_text(json.dumps({"arch": arch, "shape": shape,
+                                      "mesh": mesh, "status": reason}))
+            print(f"{arch} {shape} {mesh}: {reason}")
+            continue
+        print(f"=== {arch} {shape} {mesh} ===", flush=True)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh]
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=7200)
+        print(r.stdout[-2000:])
+        if r.returncode != 0:
+            print("FAILED:", r.stderr[-3000:])
+            fn.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "status": "error", "stderr": r.stderr[-3000:]}))
+
+
+if __name__ == "__main__":
+    main()

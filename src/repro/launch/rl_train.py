@@ -1,0 +1,145 @@
+"""RL training driver — the paper's workflow end-to-end (its Fig. 3/5 runs).
+
+    PYTHONPATH=src python -m repro.launch.rl_train --domain traffic \
+        --simulator ials --iterations 60
+
+Pipeline per the paper (§5.1):
+  1. collect a (d_t, u_t) dataset from the GS under a random policy (Alg. 1)
+  2. train the AIP offline (Eq. 3)
+  3. train PPO on the chosen simulator: gs | ials | untrained-ials | f-ials
+  4. periodically evaluate on the GS (the deployment environment)
+
+Emits a JSON history of (iteration, wallclock, train reward, GS eval reward)
+— the learning-curves benchmark reads this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collect, influence, ials as ials_lib
+from repro.envs.traffic import (TrafficConfig, make_traffic_env,
+                                make_local_traffic_env)
+from repro.envs.warehouse import (WarehouseConfig, make_warehouse_env,
+                                  make_local_warehouse_env)
+from repro.rl import ppo
+
+
+def build_domain(domain: str, vanish_after: int = 0):
+    if domain == "traffic":
+        cfg = TrafficConfig()
+        return make_traffic_env(cfg), make_local_traffic_env(cfg), 1
+    cfg = WarehouseConfig(vanish_after=vanish_after)
+    return make_warehouse_env(cfg), make_local_warehouse_env(cfg), 8
+
+
+def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
+                    collect_episodes: int, ep_len: int, aip_epochs: int,
+                    fixed_marginal=None, aip_window: int = 0):
+    """-> (env for PPO, aip diagnostics dict)."""
+    diag = {}
+    if simulator == "gs":
+        return gs, diag
+    acfg = influence.AIPConfig(
+        kind=aip_kind, d_in=gs.spec.dset_dim, n_out=gs.spec.n_influence,
+        hidden=64, stack=8 if aip_kind == "fnn" else 1)
+    k1, k2 = jax.random.split(key)
+    if simulator == "untrained-ials":
+        params = influence.init_aip(acfg, k2)
+        data = collect.collect_dataset(gs, k1, n_episodes=8, ep_len=ep_len)
+        diag["aip_xent"] = float(influence.xent_loss(
+            params, acfg, data["d"], data["u"]))
+        return ials_lib.make_ials(ls, params, acfg), diag
+    t0 = time.time()
+    data = collect.collect_dataset(gs, k1, n_episodes=collect_episodes,
+                                   ep_len=ep_len)
+    if simulator == "f-ials":
+        marg = (jnp.full((gs.spec.n_influence,), fixed_marginal)
+                if fixed_marginal is not None
+                else collect.empirical_marginal(data["u"]))
+        params = influence.init_aip(acfg, k2)
+        env = ials_lib.make_ials(ls, params, acfg, fixed_marginal_vec=marg)
+        # XE of the fixed marginal on held-out data
+        p = jnp.clip(marg, 1e-6, 1 - 1e-6)
+        xe = -(data["u"] * jnp.log(p) + (1 - data["u"]) * jnp.log(1 - p))
+        diag["aip_xent"] = float(xe.sum(-1).mean())
+        diag["aip_train_time_s"] = time.time() - t0
+        return env, diag
+    # trained IALS
+    params, m = influence.train_aip(acfg, data["d"], data["u"], k2,
+                                    epochs=aip_epochs, window=aip_window)
+    diag["aip_xent"] = m["final_loss"]
+    diag["aip_train_time_s"] = time.time() - t0
+    return ials_lib.make_ials(ls, params, acfg), diag
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--domain", choices=["traffic", "warehouse"],
+                    default="traffic")
+    ap.add_argument("--simulator", default="ials",
+                    choices=["gs", "ials", "untrained-ials", "f-ials"])
+    ap.add_argument("--aip", default=None, choices=[None, "gru", "fnn"])
+    ap.add_argument("--fixed-marginal", type=float, default=None)
+    ap.add_argument("--iterations", type=int, default=40)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--n-envs", type=int, default=16)
+    ap.add_argument("--rollout-len", type=int, default=128)
+    ap.add_argument("--episode-len", type=int, default=128)
+    ap.add_argument("--collect-episodes", type=int, default=64)
+    ap.add_argument("--aip-epochs", type=int, default=10)
+    ap.add_argument("--vanish-after", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(args.seed)
+    gs, ls, frame_stack = build_domain(args.domain, args.vanish_after)
+    aip_kind = args.aip or ("gru" if args.domain == "warehouse" else "fnn")
+
+    t_start = time.time()
+    key, k_sim = jax.random.split(key)
+    env, diag = build_simulator(
+        args.simulator, gs, ls, aip_kind, k_sim,
+        collect_episodes=args.collect_episodes, ep_len=args.episode_len,
+        aip_epochs=args.aip_epochs, fixed_marginal=args.fixed_marginal)
+
+    pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim,
+                         n_actions=gs.spec.n_actions,
+                         frame_stack=frame_stack, n_envs=args.n_envs,
+                         rollout_len=args.rollout_len,
+                         episode_len=args.episode_len)
+    key, k0, k1 = jax.random.split(key, 3)
+    params = ppo.init_policy(pcfg, k0)
+    opt, iteration = ppo.make_train_iteration(env, pcfg)
+    ost = opt.init(params)
+    rs = ppo.init_rollout_state(env, pcfg, k1)
+
+    history = []
+    for it in range(args.iterations):
+        key, k = jax.random.split(key)
+        params, ost, rs, m = iteration(params, ost, rs, k)
+        row = {"iter": it, "wallclock_s": round(time.time() - t_start, 2),
+               "train_reward": float(m["mean_reward"]),
+               "env_steps": (it + 1) * args.n_envs * args.rollout_len}
+        if it % args.eval_every == 0 or it == args.iterations - 1:
+            key, ke = jax.random.split(key)
+            row["gs_eval_reward"] = ppo.evaluate(gs, pcfg, params, ke,
+                                                 n_episodes=8)
+        history.append(row)
+        print(json.dumps(row))
+
+    out = {"args": vars(args), "diag": diag, "history": history,
+           "total_wallclock_s": round(time.time() - t_start, 2)}
+    if args.out:
+        Path(args.out).write_text(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these. Modality frontends are stubs per the brief: the VLM gets
+precomputed patch embeddings, whisper gets post-conv frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import batch_spec, cache_specs, to_shardings
+from repro.models import lm
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeCell,
+                      mesh: Mesh | None = None) -> Dict:
+    B, T = shape.global_batch, shape.seq_len
+    bs = batch_spec(mesh, B, profile=cfg.parallelism) \
+        if mesh is not None else None
+    sp = lambda extra=1: (bs if extra == 1
+                          else P(*(tuple(bs)[:1] + (None,) * extra))) \
+        if mesh is not None else None
+    out = {
+        "tokens": _sds((B, T), jnp.int32, mesh, bs),
+        "labels": _sds((B, T), jnp.int32, mesh, bs),
+    }
+    if cfg.family == "vlm":
+        out["vision"] = _sds(
+            (B, cfg.n_vision_tokens, cfg.d_model), cfg.dtype(), mesh,
+            batch_spec(mesh, B, 2, profile=cfg.parallelism)
+            if mesh else None)
+    if cfg.family == "encdec":
+        out["frames"] = _sds(
+            (B, cfg.n_audio_frames, cfg.d_model), cfg.dtype(), mesh,
+            batch_spec(mesh, B, 2, profile=cfg.parallelism)
+            if mesh else None)
+    return out
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeCell,
+                        mesh: Mesh | None = None) -> Dict:
+    specs = train_input_specs(cfg, shape, mesh)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeCell,
+                       mesh: Mesh | None = None) -> Dict:
+    """-> {token, pos, cache} specs for one serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, S))
+    if mesh is not None:
+        cspecs = cache_specs(cache_shapes, mesh, B)
+        cache = jax.tree_util.tree_map(
+            lambda l, s: _sds(l.shape, l.dtype, mesh, s),
+            cache_shapes, cspecs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    else:
+        cache = cache_shapes
+    token = _sds((B,), jnp.int32, mesh,
+                 batch_spec(mesh, B, 0, profile=cfg.parallelism)
+                 if mesh else None)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"token": token, "pos": pos, "cache": cache}

@@ -1,0 +1,82 @@
+"""Step functions: train_step (grad-accumulated), prefill_step, serve_step.
+
+These are the units the dry-run lowers and the real launcher jits. Gradient
+accumulation runs as a ``lax.scan`` over microbatches (bounds live activation
+memory); gradients accumulate in fp32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act_sharding import constrain
+from repro.models import lm
+from repro.optim.adamw import Optimizer
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch)
+    return loss
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    n_microbatches: int = 1) -> Callable:
+    loss = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: constrain(
+                    x.reshape((n_microbatches,
+                               x.shape[0] // n_microbatches) + x.shape[1:]),
+                    None, "dp", *([None] * (x.ndim - 1))), batch)
+
+            def body(acc, mb):
+                g_acc, l_acc, m_acc = acc
+                (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree_util.tree_map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, l_acc + l, m_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"ce": 0.0, "lb_loss": 0.0, "z_loss": 0.0, "drop_frac": 0.0}
+            m0 = jax.tree_util.tree_map(jnp.float32, m0)
+            (grads, l, metrics), _ = lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32), m0), micro)
+            inv = 1.0 / n_microbatches
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            l = l * inv
+            metrics = jax.tree_util.tree_map(lambda m: m * inv, metrics)
+
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(loss=l, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int) -> Callable:
+    def prefill_step(params, inputs):
+        return lm.prefill(params, cfg, inputs, max_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, cache, token, pos):
+        """One decode step: write KV at ``pos``, return logits + new cache."""
+        return lm.decode_step(params, cfg, cache, token, pos)
+    return serve_step

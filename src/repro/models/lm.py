@@ -1,0 +1,736 @@
+"""Unified LM: one model assembled from ArchConfig.
+
+Covers all assigned families — dense / MoE(+MLA) / hybrid(attn+mamba+MoE) /
+SSM(xLSTM) / enc-dec(whisper) / VLM(gated cross-attn) — with three entry
+points:
+
+- ``forward(params, cfg, inputs, want_cache)`` — training / prefill; the
+  repeating layer pattern runs under ``lax.scan`` over stacked parameters
+  (scan-over-layers), optionally rematerialised.
+- ``decode_step(params, cfg, cache, token, pos)`` — one serving step against
+  a KV/state cache; cache layout mirrors the scanned parameter stack.
+- ``init_cache(cfg, batch, max_len)`` — cache pytree (use ``jax.eval_shape``
+  on it for allocation-free dry-run specs).
+
+Modality frontends (whisper conv / vision encoder) are stubs per the brief:
+``inputs`` carries precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.distributed.act_sharding import constrain
+from repro.nn import module as nn
+from repro.nn import attention as att
+from repro.nn import moe as moe_lib
+from repro.nn import moe_ep as moe_ep_lib
+from repro.nn import ssm as ssm_lib
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Per-layer init
+# ===========================================================================
+
+def _attn_init(key, cfg: ArchConfig, *, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd()
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.dtype()
+    ks = nn.split_keys(key, 4)
+    p = {
+        "wq": nn.dense_init(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wk": nn.dense_init(ks[1], d, KH * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wv": nn.dense_init(ks[2], d, KH * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wo": nn.dense_init(ks[3], H * hd, d, dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rmsnorm_init(hd, dtype=dt)
+        p["k_norm"] = nn.rmsnorm_init(hd, dtype=dt)
+    return p
+
+
+def _mla_init(key, cfg: ArchConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dt = cfg.dtype()
+    ks = nn.split_keys(key, 5)
+    return {
+        "wq_a": nn.dense_init(ks[0], d, qr, dtype=dt),
+        "q_norm": nn.rmsnorm_init(qr, dtype=dt),
+        "wq_b": nn.dense_init(ks[1], qr, H * (dn + dr), dtype=dt),
+        "wkv_a": nn.dense_init(ks[2], d, kr + dr, dtype=dt),
+        "kv_norm": nn.rmsnorm_init(kr, dtype=dt),
+        "wkv_b": nn.dense_init(ks[3], kr, H * (dn + dv), dtype=dt),
+        "wo": nn.dense_init(ks[4], H * dv, d, dtype=dt),
+    }
+
+
+def _ffn_init(key, cfg: ArchConfig, ffn: str) -> Params:
+    d, dt = cfg.d_model, cfg.dtype()
+    if ffn == "gated_mlp":
+        return moe_lib.gated_mlp_init(key, d, cfg.d_ff, dtype=dt)
+    if ffn == "mlp":
+        return moe_lib.mlp_init(key, d, cfg.d_ff, dtype=dt)
+    if ffn == "dense_mlp":  # deepseek prologue: gated MLP at dense_d_ff
+        return moe_lib.gated_mlp_init(key, d, cfg.dense_d_ff, dtype=dt)
+    if ffn == "moe":
+        return moe_lib.moe_init(key, d, cfg.d_expert, cfg.n_routed_experts,
+                                cfg.n_shared_experts, dtype=dt)
+    raise ValueError(ffn)
+
+
+def _layer_init(key, cfg: ArchConfig, spec: LayerSpec) -> Params:
+    norm_init, _ = nn.make_norm(cfg.norm)
+    d, dt = cfg.d_model, cfg.dtype()
+    k_mix, k_ffn, k_x = jax.random.split(key, 3)
+    p: Params = {"norm1": norm_init(d, dtype=dt)}
+    if spec.kind == "attn":
+        p["mix"] = _attn_init(k_mix, cfg)
+    elif spec.kind == "xattn":
+        p["mix"] = _attn_init(k_mix, cfg, cross=True)
+        p["gate_attn"] = jnp.zeros((), dt)
+        p["gate_ffn"] = jnp.zeros((), dt)
+    elif spec.kind == "dec_attn":
+        p["mix"] = {"self": _attn_init(k_mix, cfg),
+                    "cross": _attn_init(k_x, cfg, cross=True)}
+        p["norm_cross"] = norm_init(d, dtype=dt)
+    elif spec.kind == "mla":
+        p["mix"] = _mla_init(k_mix, cfg)
+    elif spec.kind == "mamba":
+        p["mix"] = ssm_lib.mamba_init(
+            k_mix, d, expand=cfg.mamba_expand, d_state=cfg.mamba_d_state,
+            d_conv=cfg.mamba_d_conv, dtype=dt)
+    elif spec.kind == "mlstm":
+        p["mix"] = ssm_lib.mlstm_init(
+            k_mix, d, cfg.n_heads, proj_factor=cfg.mlstm_proj_factor,
+            d_conv=cfg.mamba_d_conv, dtype=dt)
+    elif spec.kind == "slstm":
+        p["mix"] = ssm_lib.slstm_init(k_mix, d, cfg.n_heads, dtype=dt)
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn != "none":
+        p["norm2"] = norm_init(d, dtype=dt)
+        p["ffn"] = _ffn_init(k_ffn, cfg, spec.ffn)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    dt = cfg.dtype()
+    prologue, pattern, n_groups = cfg.layer_plan()
+    norm_init, _ = nn.make_norm(cfg.norm)
+    ks = nn.split_keys(key, 8)
+    p: Params = {"embed": nn.embedding_init(ks[0], cfg.vocab_size,
+                                            cfg.d_model, dtype=dt)}
+    if cfg.learned_pos:
+        p["pos_emb"] = nn.embedding_init(
+            ks[1], cfg.max_position_embeddings, cfg.d_model, dtype=dt)
+
+    if cfg.family == "encdec":
+        enc_spec = LayerSpec("attn", cfg.mlp_kind)
+        p["enc"] = {
+            "pos": nn.embedding_init(ks[2], cfg.n_audio_frames,
+                                     cfg.d_model, dtype=dt),
+            "blocks": nn.stack_init(
+                lambda k: _layer_init(k, cfg, enc_spec), ks[3],
+                cfg.n_encoder_layers),
+            "norm": norm_init(cfg.d_model, dtype=dt),
+        }
+        pattern = [LayerSpec("dec_attn", cfg.mlp_kind)]
+
+    if prologue:
+        p["prologue"] = {
+            str(i): _layer_init(k, cfg, spec)
+            for i, (k, spec) in enumerate(
+                zip(nn.split_keys(ks[4], len(prologue)), prologue))
+        }
+
+    def group_init(k):
+        gks = nn.split_keys(k, len(pattern))
+        return {str(i): _layer_init(gks[i], cfg, spec)
+                for i, spec in enumerate(pattern)}
+
+    p["blocks"] = nn.stack_init(group_init, ks[5], n_groups)
+    p["final_norm"] = norm_init(cfg.d_model, dtype=dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.dense_init(ks[6], cfg.d_model, cfg.vocab_size,
+                                     dtype=dt)
+    return p
+
+
+def _pattern(cfg: ArchConfig):
+    prologue, pattern, n_groups = cfg.layer_plan()
+    if cfg.family == "encdec":
+        pattern = [LayerSpec("dec_attn", cfg.mlp_kind)]
+    return prologue, pattern, n_groups
+
+
+# ===========================================================================
+# Per-layer forward (full sequence)
+# ===========================================================================
+
+def _self_attention(p, cfg: ArchConfig, x, positions, *, causal=True,
+                    want_cache=False):
+    B, T, d = x.shape
+    hd, H, KH = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    q = nn.dense(p["wq"], x).reshape(B, T, H, hd)
+    k = nn.dense(p["wk"], x).reshape(B, T, KH, hd)
+    v = nn.dense(p["wv"], x).reshape(B, T, KH, hd)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q)
+        k = nn.rmsnorm(p["k_norm"], k)
+    if cfg.use_rope:
+        q = att.apply_rope(q, positions, cfg.rope_theta)
+        k = att.apply_rope(k, positions, cfg.rope_theta)
+    o = att.flash_attention(q, k, v, causal=causal,
+                            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    o = checkpoint_name(o, "attn_out")
+    out = nn.dense(p["wo"], o.reshape(B, T, H * hd))
+    cache = {"k": k, "v": v} if want_cache else None
+    return out, cache
+
+
+def _cross_attention(p, cfg: ArchConfig, x, memory, *, want_cache=False):
+    B, T, d = x.shape
+    hd, H, KH = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    q = nn.dense(p["wq"], x).reshape(B, T, H, hd)
+    k = nn.dense(p["wk"], memory).reshape(B, memory.shape[1], KH, hd)
+    v = nn.dense(p["wv"], memory).reshape(B, memory.shape[1], KH, hd)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q)
+        k = nn.rmsnorm(p["k_norm"], k)
+    o = att.flash_attention(q, k, v, causal=False,
+                            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    out = nn.dense(p["wo"], o.reshape(B, T, H * hd))
+    cache = {"mk": k, "mv": v} if want_cache else None
+    return out, cache
+
+
+def _mla_attention(p, cfg: ArchConfig, x, positions, *, want_cache=False):
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    q = nn.dense(p["wq_b"], nn.rmsnorm(p["q_norm"], nn.dense(p["wq_a"], x)))
+    q = q.reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = att.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = nn.dense(p["wkv_a"], x)
+    ckv = nn.rmsnorm(p["kv_norm"], kv_a[..., :kr])           # (B,T,R)
+    krope = att.apply_rope(kv_a[..., kr:].reshape(B, T, 1, dr), positions,
+                           cfg.rope_theta)                   # (B,T,1,dr)
+    kv = nn.dense(p["wkv_b"], ckv).reshape(B, T, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope, (B, T, H, dr))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = att.flash_attention(qf, k, v, causal=True,
+                            scale=(dn + dr) ** -0.5,
+                            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+    out = nn.dense(p["wo"], o.reshape(B, T, H * dv))
+    cache = {"ckv": ckv, "krope": krope[:, :, 0]} if want_cache else None
+    return out, cache
+
+
+def _ffn_apply(p, cfg: ArchConfig, x, ffn: str, *, full_capacity=False):
+    zero = jnp.zeros((), jnp.float32)
+    aux = {"lb_loss": zero, "z_loss": zero, "drop_frac": zero}
+    if ffn in ("gated_mlp", "dense_mlp"):
+        return moe_lib.gated_mlp(p, x, cfg.act), aux
+    if ffn == "mlp":
+        return moe_lib.mlp(p, x, cfg.act), aux
+    if ffn == "moe":
+        cf = cfg.capacity_factor
+        if full_capacity:  # decode is dropless: capacity == token count
+            cf = cfg.n_routed_experts / cfg.moe_top_k
+        if cfg.moe_impl == "ep":
+            out, aux = moe_ep_lib.moe_apply_ep(
+                p, x, top_k=cfg.moe_top_k, act=cfg.act, capacity_factor=cf,
+                expert_axes=cfg.moe_expert_axes)
+        else:
+            out, aux = moe_lib.moe_apply(
+                p, x, top_k=cfg.moe_top_k, act=cfg.act, capacity_factor=cf)
+        return out, aux
+    raise ValueError(ffn)
+
+
+def _layer_apply(p, cfg: ArchConfig, spec: LayerSpec, h, ctx, *,
+                 want_cache=False):
+    """-> (h, aux, cache)."""
+    _, norm = nn.make_norm(cfg.norm)
+    x = norm(p["norm1"], h)
+    cache: Dict[str, Any] = {}
+    zero = jnp.zeros((), jnp.float32)
+    aux = {"lb_loss": zero, "z_loss": zero, "drop_frac": zero}
+
+    if spec.kind == "attn":
+        out, c = _self_attention(p["mix"], cfg, x, ctx["positions"],
+                                 causal=ctx.get("causal", True),
+                                 want_cache=want_cache)
+        h = h + out
+        if want_cache:
+            cache["self"] = c
+    elif spec.kind == "mla":
+        out, c = _mla_attention(p["mix"], cfg, x, ctx["positions"],
+                                want_cache=want_cache)
+        h = h + out
+        if want_cache:
+            cache["self"] = c
+    elif spec.kind == "xattn":
+        out, c = _cross_attention(p["mix"], cfg, x, ctx["memory"],
+                                  want_cache=want_cache)
+        h = h + jnp.tanh(p["gate_attn"]) * out
+        if want_cache:
+            cache["cross"] = c
+        if spec.ffn != "none":
+            f, aux = _ffn_apply(p["ffn"], cfg, norm(p["norm2"], h), spec.ffn)
+            h = h + jnp.tanh(p["gate_ffn"]) * f
+        return h, aux, (cache if want_cache else None)
+    elif spec.kind == "dec_attn":
+        out, c = _self_attention(p["mix"]["self"], cfg, x, ctx["positions"],
+                                 causal=True, want_cache=want_cache)
+        h = h + out
+        xc = norm(p["norm_cross"], h)
+        out2, c2 = _cross_attention(p["mix"]["cross"], cfg, xc,
+                                    ctx["memory"], want_cache=want_cache)
+        h = h + out2
+        if want_cache:
+            cache["self"], cache["cross"] = c, c2
+    elif spec.kind == "mamba":
+        res = ssm_lib.mamba_apply(p["mix"], x, d_state=cfg.mamba_d_state,
+                                  chunk=cfg.mamba_chunk,
+                                  return_state=want_cache)
+        out, st = res if want_cache else (res, None)
+        h = h + out
+        if want_cache:
+            cache["state"] = st
+    elif spec.kind == "mlstm":
+        res = ssm_lib.mlstm_apply(p["mix"], x, cfg.n_heads,
+                                  chunk=cfg.rnn_chunk,
+                                  return_state=want_cache)
+        out, st = res if want_cache else (res, None)
+        h = h + out
+        if want_cache:
+            cache["state"] = st
+    elif spec.kind == "slstm":
+        res = ssm_lib.slstm_apply(p["mix"], x, cfg.n_heads,
+                                  chunk=cfg.rnn_chunk,
+                                  return_state=want_cache)
+        out, st = res if want_cache else (res, None)
+        h = h + out
+        if want_cache:
+            cache["state"] = st
+    else:
+        raise ValueError(spec.kind)
+
+    if spec.ffn != "none":
+        f, aux = _ffn_apply(p["ffn"], cfg, norm(p["norm2"], h), spec.ffn)
+        h = h + f
+    return h, aux, (cache if want_cache else None)
+
+
+def _add_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+# ===========================================================================
+# Encoder (whisper)
+# ===========================================================================
+
+def encode(params: Params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d_model) post-conv stub embeddings -> (B, F, d)."""
+    _, norm = nn.make_norm(cfg.norm)
+    enc = params["enc"]
+    h = frames + enc["pos"]["table"][None, :frames.shape[1]]
+    spec = LayerSpec("attn", cfg.mlp_kind)
+    ctx = {"positions": jnp.arange(frames.shape[1]), "causal": False}
+
+    def body(h, lp):
+        h, _, _ = _layer_apply(lp, cfg, spec, h, ctx)
+        return constrain(h, "dp", None, None), None
+
+    h, _ = lax.scan(body, h, enc["blocks"])
+    return norm(enc["norm"], h)
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+
+def forward(params: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
+            *, want_cache: bool = False):
+    """inputs: {tokens (B,T)[, vision (B,Nv,d) | frames (B,F,d)]}.
+
+    -> (h_final (B,T,d), aux, cache|None). Apply ``logits``/``loss`` on top.
+    """
+    prologue, pattern, n_groups = _pattern(cfg)
+    _, norm = nn.make_norm(cfg.norm)
+    tokens = inputs["tokens"]
+    B, T = tokens.shape
+    h = nn.embedding(params["embed"], tokens)
+    h = constrain(h, "dp", None, None)
+    positions = jnp.arange(T)
+    if cfg.learned_pos:
+        h = h + params["pos_emb"]["table"][None, :T]
+
+    memory = None
+    if cfg.family == "encdec":
+        memory = encode(params, cfg, inputs["frames"])
+    elif cfg.family == "vlm":
+        memory = inputs["vision"]
+    ctx = {"positions": positions, "memory": memory, "causal": True}
+
+    zero = jnp.zeros((), jnp.float32)
+    aux = {"lb_loss": zero, "z_loss": zero, "drop_frac": zero}
+
+    pro_caches = {}
+    for i, spec in enumerate(prologue):
+        h, a, c = _layer_apply(params["prologue"][str(i)], cfg, spec, h, ctx,
+                               want_cache=want_cache)
+        aux = _add_aux(aux, a)
+        if want_cache:
+            pro_caches[str(i)] = c
+
+    def group_body(carry, gp):
+        h, aux = carry
+        caches = {}
+        for i, spec in enumerate(pattern):
+            h, a, c = _layer_apply(gp[str(i)], cfg, spec, h, ctx,
+                                   want_cache=want_cache)
+            h = constrain(h, "dp", None, None)
+            aux = _add_aux(aux, a)
+            if want_cache:
+                caches[str(i)] = c
+        return (h, aux), (caches if want_cache else None)
+
+    if cfg.remat == "full":
+        group_body = jax.checkpoint(group_body)
+    elif cfg.remat == "dots":
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat == "names":
+        # save attention outputs (small, bf16) so the backward never
+        # re-runs the flash forward; everything else recomputes
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.save_only_these_names("attn_out"))
+
+    (h, aux), blk_caches = lax.scan(group_body, (h, aux), params["blocks"])
+    h = norm(params["final_norm"], h)
+
+    cache = None
+    if want_cache:
+        cache = {"prologue": pro_caches, "blocks": blk_caches,
+                 "memory": memory}
+    return h, aux, cache
+
+
+def logits(params: Params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, params["embed"]["table"])
+    return nn.dense(params["lm_head"], h)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
+            *, loss_chunk: int = 512):
+    """Next-token CE, chunked over T so (B,T,V) logits are never resident."""
+    h, aux, _ = forward(params, cfg, inputs)
+    labels = inputs["labels"]
+    B, T, d = h.shape
+    ck = min(loss_chunk, T)
+    while T % ck:
+        ck //= 2
+    nck = T // ck
+
+    if cfg.tie_embeddings:
+        head = params["embed"]["table"]           # (V, d)
+        proj = lambda x: jnp.einsum("btd,vd->btv", x, head)
+    else:
+        w = params["lm_head"]["w"]                # (d, V)
+        proj = lambda x: jnp.einsum("btd,dv->btv", x, w)
+
+    def body(carry, i):
+        ce_sum, n_tok = carry
+        hs = lax.dynamic_slice_in_dim(h, i * ck, ck, axis=1)
+        ls = lax.dynamic_slice_in_dim(labels, i * ck, ck, axis=1)
+        lg = constrain(proj(hs).astype(jnp.float32), "dp", None, "tp")
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, ls[..., None], axis=-1)[..., 0]
+        valid = (ls >= 0).astype(jnp.float32)
+        ce_sum = ce_sum + jnp.sum((lse - ll) * valid)
+        n_tok = n_tok + jnp.sum(valid)
+        return (ce_sum, n_tok), None
+
+    (ce_sum, n_tok), _ = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(nck))
+    ce = ce_sum / jnp.maximum(n_tok, 1.0)
+    total = ce + cfg.lb_loss_weight * aux["lb_loss"] \
+        + cfg.z_loss_weight * aux["z_loss"]
+    metrics = {"ce": ce, "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"],
+               "drop_frac": aux["drop_frac"]}
+    return total, metrics
+
+
+# ===========================================================================
+# Cache + decode
+# ===========================================================================
+
+def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int):
+    dt = cfg.dtype()
+    hd, KH = cfg.hd(), cfg.n_kv_heads
+    d = cfg.d_model
+    if spec.kind in ("attn",):
+        return {"self": {"k": jnp.zeros((batch, max_len, KH, hd), dt),
+                         "v": jnp.zeros((batch, max_len, KH, hd), dt)}}
+    if spec.kind == "mla":
+        return {"self": {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dt)}}
+    if spec.kind == "xattn":
+        nv = cfg.n_vision_tokens
+        return {"cross": {"mk": jnp.zeros((batch, nv, KH, hd), dt),
+                          "mv": jnp.zeros((batch, nv, KH, hd), dt)}}
+    if spec.kind == "dec_attn":
+        nf = cfg.n_audio_frames
+        return {"self": {"k": jnp.zeros((batch, max_len, KH, hd), dt),
+                         "v": jnp.zeros((batch, max_len, KH, hd), dt)},
+                "cross": {"mk": jnp.zeros((batch, nf, KH, hd), dt),
+                          "mv": jnp.zeros((batch, nf, KH, hd), dt)}}
+    if spec.kind == "mamba":
+        dI = cfg.mamba_expand * d
+        return {"state": ssm_lib.mamba_init_state(
+            batch, dI, cfg.mamba_d_conv, cfg.mamba_d_state, dt)}
+    if spec.kind == "mlstm":
+        dI = int(cfg.mlstm_proj_factor * d)
+        return {"state": ssm_lib.mlstm_init_state(
+            batch, dI, cfg.n_heads, cfg.mamba_d_conv, dt)}
+    if spec.kind == "slstm":
+        return {"state": ssm_lib.slstm_init_state(
+            batch, cfg.n_heads, d // cfg.n_heads)}
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    prologue, pattern, n_groups = _pattern(cfg)
+
+    def group_cache(_):
+        return {str(i): _layer_cache(cfg, spec, batch, max_len)
+                for i, spec in enumerate(pattern)}
+
+    blocks = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape).copy()
+        if n_groups > 0 else x,
+        group_cache(None))
+    pro = {str(i): _layer_cache(cfg, spec, batch, max_len)
+           for i, spec in enumerate(prologue)}
+    cache = {"prologue": pro, "blocks": blocks}
+    if cfg.family in ("encdec", "vlm"):
+        pass  # cross kv lives inside the per-layer caches
+    return cache
+
+
+def _attn_decode(p, cfg: ArchConfig, x, c, pos):
+    """x: (B, d); c: {"k","v"} caches; write at ``pos`` then attend."""
+    B, d = x.shape
+    hd, H, KH = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    q = nn.dense(p["wq"], x).reshape(B, 1, H, hd)
+    k = nn.dense(p["wk"], x).reshape(B, 1, KH, hd)
+    v = nn.dense(p["wv"], x).reshape(B, 1, KH, hd)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q)
+        k = nn.rmsnorm(p["k_norm"], k)
+    if cfg.use_rope:
+        pp = jnp.full((1,), pos)
+        q = att.apply_rope(q, pp, cfg.rope_theta)
+        k = att.apply_rope(k, pp, cfg.rope_theta)
+    ck = lax.dynamic_update_slice_in_dim(c["k"], k.astype(c["k"].dtype),
+                                         pos, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(c["v"], v.astype(c["v"].dtype),
+                                         pos, axis=1)
+    o = att.decode_attention(q[:, 0], ck, cv, pos)
+    return nn.dense(p["wo"], o.reshape(B, H * hd)), {"k": ck, "v": cv}
+
+
+def _cross_decode(p, cfg: ArchConfig, x, c):
+    B, d = x.shape
+    hd, H = cfg.hd(), cfg.n_heads
+    q = nn.dense(p["wq"], x).reshape(B, 1, H, hd)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q)
+    S = c["mk"].shape[1]
+    o = att.decode_attention(q[:, 0], c["mk"], c["mv"], jnp.int32(S - 1))
+    return nn.dense(p["wo"], o.reshape(B, H * hd))
+
+
+def _mla_decode(p, cfg: ArchConfig, x, c, pos):
+    B, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    q = nn.dense(p["wq_b"], nn.rmsnorm(p["q_norm"], nn.dense(p["wq_a"], x)))
+    q = q.reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pp = jnp.full((1,), pos)
+    q_rope = att.apply_rope(q_rope, pp, cfg.rope_theta)
+
+    kv_a = nn.dense(p["wkv_a"], x)
+    ckv_new = nn.rmsnorm(p["kv_norm"], kv_a[..., :kr]).reshape(B, 1, kr)
+    krope_new = att.apply_rope(kv_a[..., kr:].reshape(B, 1, 1, dr), pp,
+                               cfg.rope_theta)[:, :, 0]
+    ckv = lax.dynamic_update_slice_in_dim(
+        c["ckv"], ckv_new.astype(c["ckv"].dtype), pos, axis=1)
+    krope = lax.dynamic_update_slice_in_dim(
+        c["krope"], krope_new.astype(c["krope"].dtype), pos, axis=1)
+
+    wkv_b = p["wkv_b"]["w"].reshape(kr, H, dn + dv)
+    w_kb_k = wkv_b[..., :dn].transpose(1, 0, 2)   # (H, R, dn)
+    w_kb_v = wkv_b[..., dn:].transpose(1, 0, 2)   # (H, R, dv)
+    o = att.mla_decode_attention(q_nope[:, 0], q_rope[:, 0], ckv, krope,
+                                 w_kb_k, w_kb_v, pos,
+                                 scale=(dn + dr) ** -0.5)
+    return nn.dense(p["wo"], o.reshape(B, H * dv)), \
+        {"ckv": ckv, "krope": krope}
+
+
+def _layer_decode(p, cfg: ArchConfig, spec: LayerSpec, h, c, pos):
+    """h: (B, d) -> (h, new_cache)."""
+    _, norm = nn.make_norm(cfg.norm)
+    x = norm(p["norm1"], h)
+    new_c = dict(c)
+    if spec.kind == "attn":
+        out, new_c["self"] = _attn_decode(p["mix"], cfg, x, c["self"], pos)
+        h = h + out
+    elif spec.kind == "mla":
+        out, new_c["self"] = _mla_decode(p["mix"], cfg, x, c["self"], pos)
+        h = h + out
+    elif spec.kind == "xattn":
+        out = _cross_decode(p["mix"], cfg, x, c["cross"])
+        h = h + jnp.tanh(p["gate_attn"]) * out
+        if spec.ffn != "none":
+            f, _ = _ffn_apply(p["ffn"], cfg, norm(p["norm2"], h)[:, None],
+                              spec.ffn, full_capacity=True)
+            h = h + jnp.tanh(p["gate_ffn"]) * f[:, 0]
+        return h, new_c
+    elif spec.kind == "dec_attn":
+        out, new_c["self"] = _attn_decode(p["mix"]["self"], cfg, x,
+                                          c["self"], pos)
+        h = h + out
+        xc = norm(p["norm_cross"], h)
+        h = h + _cross_decode(p["mix"]["cross"], cfg, xc, c["cross"])
+    elif spec.kind == "mamba":
+        out, new_c["state"] = ssm_lib.mamba_step(
+            p["mix"], c["state"], x, d_state=cfg.mamba_d_state)
+        h = h + out
+    elif spec.kind == "mlstm":
+        out, new_c["state"] = ssm_lib.mlstm_step(p["mix"], c["state"], x,
+                                                 cfg.n_heads)
+        h = h + out
+    elif spec.kind == "slstm":
+        out, new_c["state"] = ssm_lib.slstm_step(p["mix"], c["state"], x,
+                                                 cfg.n_heads)
+        h = h + out
+    else:
+        raise ValueError(spec.kind)
+
+    if spec.ffn != "none":
+        f, _ = _ffn_apply(p["ffn"], cfg, norm(p["norm2"], h)[:, None],
+                          spec.ffn, full_capacity=True)
+        h = h + f[:, 0]
+    return h, new_c
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache, token: jax.Array,
+                pos: jax.Array):
+    """token: (B,) int32; pos: scalar int32 (index the new token is written
+    at, i.e. current length). -> (logits (B, V), new cache)."""
+    prologue, pattern, n_groups = _pattern(cfg)
+    _, norm = nn.make_norm(cfg.norm)
+    h = nn.embedding(params["embed"], token)
+    if cfg.learned_pos:
+        h = h + jnp.take(params["pos_emb"]["table"], pos, axis=0)
+
+    new_pro = {}
+    for i, spec in enumerate(prologue):
+        h, new_pro[str(i)] = _layer_decode(
+            params["prologue"][str(i)], cfg, spec, h,
+            cache["prologue"][str(i)], pos)
+
+    def body(h, xs):
+        gp, gc = xs
+        new_gc = {}
+        for i, spec in enumerate(pattern):
+            h, new_gc[str(i)] = _layer_decode(gp[str(i)], cfg, spec, h,
+                                              gc[str(i)], pos)
+        return h, new_gc
+
+    h, new_blocks = lax.scan(body, h, (params["blocks"], cache["blocks"]))
+    h = norm(params["final_norm"], h)
+    lg = logits(params, cfg, h)
+    return lg, {"prologue": new_pro, "blocks": new_blocks}
+
+
+def prefill(params: Params, cfg: ArchConfig, inputs: Dict[str, jax.Array],
+            max_len: int):
+    """Run the full prompt, return (last_logits (B,V), decode-ready cache).
+
+    Attention K/V (and MLA latent) caches are padded from prompt length T to
+    ``max_len`` capacity; recurrent states transfer as-is.
+    """
+    h, aux, cache = forward(params, cfg, inputs, want_cache=True)
+    T = inputs["tokens"].shape[1]
+
+    def pad(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if any(k in ("mk", "mv") for k in keys):
+            return leaf  # cross-attn memory KV: fixed length
+        if any(k in ("k", "v", "ckv", "krope") for k in keys):
+            axis = 2 if keys[0] == "blocks" else 1
+            padw = [(0, 0)] * leaf.ndim
+            padw[axis] = (0, max_len - T)
+            return jnp.pad(leaf, padw)
+        return leaf
+
+    pro = jax.tree_util.tree_map_with_path(
+        pad, {"prologue": cache["prologue"], "blocks": cache["blocks"]})
+    lg = logits(params, cfg, h[:, -1])
+    return lg, {"prologue": pro["prologue"], "blocks": pro["blocks"]}
+
+
+# ===========================================================================
+# Parameter accounting (allocation-free via eval_shape)
+# ===========================================================================
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def count_params(cfg: ArchConfig) -> Dict[str, float]:
+    """-> {total, active, embed} parameter counts (MoE-aware)."""
+    shapes = param_shapes(cfg)
+    total = active = embed = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        total += n
+        if "embed" in keys or "pos_emb" in keys or "lm_head" in keys:
+            embed += n
+            active += n
+        elif "experts" in keys:
+            active += n * cfg.moe_top_k / max(cfg.n_routed_experts, 1)
+        else:
+            active += n
+    return {"total": float(total), "active": float(active),
+            "embed": float(embed)}

@@ -1,0 +1,195 @@
+"""Attention: RoPE, chunked flash-style softmax attention (GQA), decode path.
+
+The training/prefill path is an online-softmax (flash) formulation written in
+pure jnp with ``lax.scan`` over query and key/value chunks — this is the XLA
+path used by the dry-run (bounded memory at 32k context). The TPU Pallas
+kernel in ``repro/kernels/flash_attention.py`` implements the same math with
+explicit VMEM BlockSpecs and is validated against ``repro/kernels/ref.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+BIG_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """positions: (...,) int -> cos/sin of shape (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rot_dim: int | None = None) -> jax.Array:
+    """x: (B, T, H, D); positions: (T,) or (B, T). Rotates first rot_dim dims."""
+    D = x.shape[-1]
+    rot_dim = D if rot_dim is None else rot_dim
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    cos, sin = rope_angles(positions, rot_dim, theta)  # (..., rot_dim//2)
+    # broadcast across head axis: positions (T,) -> (1, T, 1, rd//2)
+    if cos.ndim == 2:  # (T, rd//2)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    elif cos.ndim == 3:  # (B, T, rd//2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (n=1500, want=1024 -> 750)."""
+    if n <= want:
+        return n
+    k = -(-n // want)  # ceil
+    while n % k:
+        k += 1
+    return n // k
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    q_chunk: int = 1024, k_chunk: int = 1024,
+                    q_offset: int = 0, p_bf16: bool = True) -> jax.Array:
+    """Online-softmax attention with GQA grouping.
+
+    q: (B, T, H, D); k, v: (B, S, KH, Dk/Dv) with H % KH == 0.
+    Never materialises the (T, S) score matrix nor the repeated KV heads:
+    scores live per (q_chunk, k_chunk) tile, grouped einsum handles GQA.
+    ``q_offset``: absolute position of q[0] for causal masking (prefill
+    continuation); q position i attends to k positions <= q_offset + i.
+    """
+    B, T, H, D = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    scale = (D ** -0.5) if scale is None else scale
+    # precision follows the compute dtype: bf16 prob tiles only for bf16
+    # models (fp32 smoke/reference paths stay bit-faithful to the oracle)
+    p_bf16 = p_bf16 and q.dtype == jnp.bfloat16
+    qc = _pick_chunk(T, q_chunk)
+    kc = _pick_chunk(S, k_chunk)
+    nq, nk = T // qc, S // kc
+
+    # (B, T, KH, G, D) grouped view
+    qg = q.reshape(B, nq, qc, KH, G, D).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    q_pos_base = jnp.arange(qc)
+    k_pos_base = jnp.arange(kc)
+
+    def q_chunk_body(_, i):
+        qi = qg[:, i]  # (B, qc, KH, G, D)
+        q_pos = q_offset + i * qc + q_pos_base  # (qc,)
+
+        def kv_body(carry, j):
+            m, l, acc = carry
+            kj = lax.dynamic_slice_in_dim(kf, j * kc, kc, axis=1)
+            vj = lax.dynamic_slice_in_dim(vf, j * kc, kc, axis=1)
+            # scores: (B, KH, G, qc, kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj)
+            if causal:
+                k_pos = j * kc + k_pos_base
+                mask = q_pos[:, None] >= k_pos[None, :]  # (qc, kc)
+                s = jnp.where(mask[None, None, None], s, BIG_NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(s <= BIG_NEG / 2, 0.0, p)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            # bf16 probability tiles (fp32 softmax stats + accumulator):
+            # halves the dominant HBM term of the XLA attention path
+            # (§Perf hillclimb #3); the Pallas kernel keeps tiles in VMEM.
+            pv = p.astype(jnp.bfloat16) if p_bf16 else p
+            vv = vj.astype(pv.dtype)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", pv, vv,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KH, G, qc), BIG_NEG, jnp.float32),
+                jnp.zeros((B, KH, G, qc), jnp.float32),
+                jnp.zeros((B, KH, G, qc, Dv), jnp.float32))
+        (m, l, acc), _ = lax.scan(kv_body, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]  # (B,KH,G,qc,Dv)
+        return None, out.transpose(0, 3, 1, 2, 4)      # (B,qc,KH,G,Dv)
+
+    _, outs = lax.scan(q_chunk_body, None, jnp.arange(nq))
+    # outs: (nq, B, qc, KH, G, Dv) -> (B, T, H, Dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, H, Dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token vs a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, scale: float | None = None) -> jax.Array:
+    """q: (B, H, D); caches: (B, S, KH, D[v]); pos: scalar current length-1.
+
+    Attends over cache slots <= pos (the new token's K/V must already be
+    written at index ``pos``). Memory: (B, H, S) scores — linear in context.
+    """
+    B, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    scale = (D ** -0.5) if scale is None else scale
+    # NO cache.astype(f32): that materialises a full fp32 cache copy
+    # (llama3-405b decode_32k measured 160 GiB/device before this; the
+    # einsums accumulate in fp32 via preferred_element_type instead)
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, BIG_NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+def mla_decode_attention(q_nope: jax.Array, q_rope: jax.Array,
+                         ckv_cache: jax.Array, krope_cache: jax.Array,
+                         w_kb_k: jax.Array, w_kb_v: jax.Array,
+                         pos: jax.Array, *, scale: float) -> jax.Array:
+    """Absorbed MLA decode (DeepSeek-V2/V3).
+
+    q_nope: (B, H, Dn); q_rope: (B, H, Dr); ckv_cache: (B, S, R);
+    krope_cache: (B, S, Dr); w_kb_k: (H, R, Dn) latent->k_nope per head;
+    w_kb_v: (H, R, Dv) latent->v per head. Attention runs in the compressed
+    latent space: scores and values touch only the (B, S, R) cache — the
+    memory-bandwidth win that motivates MLA.
+    """
+    B, H, Dn = q_nope.shape
+    S = ckv_cache.shape[1]
+    # absorb W^UK into q: (B, H, R); caches stay in storage dtype (no fp32
+    # materialisation — see decode_attention note)
+    q_lat = jnp.einsum("bhd,hrd->bhr", q_nope, w_kb_k,
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(ckv_cache.dtype), ckv_cache,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope, krope_cache,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    valid = jnp.arange(S)[None, None, :] <= pos
+    s = jnp.where(valid, s, BIG_NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p.astype(ckv_cache.dtype), ckv_cache,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhr,hrd->bhd", o_lat.astype(w_kb_v.dtype), w_kb_v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q_nope.dtype)

@@ -1,0 +1,138 @@
+"""Minimal functional parameter substrate.
+
+Params are plain pytrees (nested dicts of jnp arrays). Every layer is a pair
+of functions: ``<layer>_init(key, ...) -> params`` and
+``<layer>_apply(params, x, ...) -> y``. No classes, no tracing magic — this
+keeps everything transparently compatible with pjit/shard_map, scan-stacked
+parameters, and ShapeDtypeStruct abstract evaluation for the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> Params:
+    """Dense layer params. Default init: truncated-normal fan-in."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embedding(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def rmsnorm_init(d: int, *, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)).astype(dt)) * p["g"].astype(dt)
+
+
+def layernorm_init(d: int, *, dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(dt)) * p["g"].astype(dt) + p["b"].astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(f"unknown norm kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def relu2(x):
+    """Squared ReLU (Nemotron-4)."""
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": relu2,
+    "tanh": jnp.tanh,
+}
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_size(tree) -> int:
+    """Total number of elements in a pytree of arrays."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def stack_init(init_fn: Callable[[jax.Array], Params], key, n: int) -> Params:
+    """vmap an init function over ``n`` keys -> stacked (leading-dim n) params.
+
+    This is the scan-over-layers representation: one pytree whose every leaf
+    has a leading layer axis, consumed by ``jax.lax.scan``.
+    """
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def abstractify(tree, sharding_fn=None):
+    """Map a pytree of arrays to ShapeDtypeStructs (optionally with sharding)."""
+    def go(x):
+        sh = sharding_fn(x) if sharding_fn is not None else None
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh)
+    return jax.tree_util.tree_map(go, tree)

@@ -1,0 +1,165 @@
+"""Expert-parallel MoE via shard_map (§Perf hillclimb #2, beyond-baseline).
+
+Key observation (from the dry-run attribution): under pure GSPMD the
+capacity dispatch reshards the full (N*k, d) token payload and all-reduces
+(E, C, d_ff)-sized expert activations — ~2.1 TB of collective bytes per
+train step on deepseek-moe-16b. But activations are already REPLICATED over
+the ``model`` axis (they are sharded over pod/data only), so dispatch needs
+NO communication at all: every device routes its local tokens, keeps only
+the assignments that hit its own expert group (``axis_index("model")``), and
+runs its local experts. The only collective in the whole layer is one
+``psum`` of the (N_local, d) combined output over ``model``.
+
+Capacity is per-(data-shard, expert): statistically this drops slightly
+more tokens than a global capacity at equal capacity_factor (documented in
+EXPERIMENTS.md); with dropless settings the result is bitwise-comparable to
+``moe.moe_apply`` (tested on an 8-device mesh).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.distributed.act_sharding import current_mesh
+from .module import ACTIVATIONS
+
+Params = Dict[str, Any]
+
+
+def _dp_spec(mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def moe_apply_ep(p: Params, x: jax.Array, *, top_k: int, act: str = "silu",
+                 capacity_factor: float = 1.25,
+                 expert_axes: str = "model") -> tuple:
+    """Drop-in for moe.moe_apply when a mesh with a 'model' axis is active.
+
+    ``expert_axes``: "model" shards experts over the model axis only (tokens
+    stay dp-sharded; zero-communication dispatch). "data_model" spreads
+    experts over BOTH axes — required when E_loc expert weights would not
+    fit a device (deepseek-v3: 16 experts/device = 81 GB; 1/device = 5 GB);
+    tokens are then replicated (one all-gather) and slot-index gathering
+    keeps the dispatch buffer at (E_loc, C, d) instead of (N*k, d).
+    """
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        from . import moe as _moe
+        return _moe.moe_apply(p, x, top_k=top_k, act=act,
+                              capacity_factor=capacity_factor)
+
+    B, T, d = x.shape
+    E = p["router"].shape[-1]
+    e_axes = ("model",)
+    if expert_axes == "data_model" and "data" in mesh.axis_names \
+            and E % (mesh.shape["model"] * mesh.shape["data"]) == 0:
+        e_axes = ("data", "model")
+    ep = 1
+    for a in e_axes:
+        ep *= mesh.shape[a]
+    assert E % ep == 0, (E, ep)
+    E_loc = E // ep
+    dp = _dp_spec(mesh)
+    n_dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_dp *= mesh.shape[a]
+    tokens = x.reshape(-1, d)
+    N = tokens.shape[0]
+    if N % n_dp or "data" in e_axes:
+        # tokens replicated: tiny batches, or experts spread over the data
+        # axis too (the expert group then needs every dp shard's tokens)
+        dp = None
+        N_loc = N
+    else:
+        N_loc = N // n_dp
+    C = max(1, math.ceil(N_loc * top_k / E * capacity_factor))
+    a_fn = ACTIVATIONS[act]
+
+    def local_moe(tok, router, wg, wi, wo):
+        """Per-device: tok (N_loc, d); wg/wi/wo (E_loc, ...)."""
+        j = lax.axis_index("model")
+        if len(e_axes) == 2:
+            j = lax.axis_index("data") * mesh.shape["model"] + j
+        logits = tok.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = lax.top_k(probs, top_k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = top_i.reshape(-1)
+        flat_w = top_p.reshape(-1)
+        n = tok.shape[0]
+        tok_idx = jnp.broadcast_to(jnp.arange(n)[:, None],
+                                   (n, top_k)).reshape(-1)
+        # rank within expert (over ALL experts, locally computed)
+        sort_idx = jnp.argsort(flat_e)
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        rank_sorted = jnp.arange(n * top_k) - starts[flat_e[sort_idx]]
+        rank = jnp.zeros_like(rank_sorted).at[sort_idx].set(rank_sorted)
+        keep = rank < C
+
+        # keep only assignments owned by THIS device's expert group.
+        # Dispatch via SLOT INDICES: scatter token ids (cheap, no d dim)
+        # into the (E_loc, C) slot map, then ONE (E_loc*C, d) gather — the
+        # (N*k, d) payload tensor never exists.
+        local = (flat_e >= j * E_loc) & (flat_e < (j + 1) * E_loc) & keep
+        le = jnp.where(local, flat_e - j * E_loc, 0)
+        lr = jnp.where(local, rank, C)            # C == drop slot
+        slot_tok = jnp.full((E_loc, C + 1), n, jnp.int32).at[le, lr].set(
+            tok_idx.astype(jnp.int32), mode="drop")[:, :C]
+        slot_valid = (slot_tok < n)
+        tok_pad = jnp.concatenate(
+            [tok, jnp.zeros((1, d), tok.dtype)], axis=0)
+        buf = tok_pad[slot_tok.reshape(-1)].reshape(E_loc, C, d)
+
+        h = (a_fn(jnp.einsum("ecd,edf->ecf", buf, wg))
+             * jnp.einsum("ecd,edf->ecf", buf, wi))
+        y = jnp.einsum("ecf,efd->ecd", h, wo)               # (E_loc, C, d)
+        y = y * slot_valid[..., None].astype(y.dtype)
+
+        # combine back to token-major (non-local/dropped rows are zeroed)
+        slot_of_assign = le * C + jnp.minimum(lr, C - 1)
+        out_flat = y.reshape(E_loc * C, d)[slot_of_assign] * \
+            (flat_w.astype(y.dtype) * local.astype(y.dtype))[:, None]
+        out = out_flat.reshape(n, top_k, d).sum(axis=1)
+        out = lax.psum(out, "model")          # the layer's ONLY collective
+        if len(e_axes) == 2:
+            out = lax.psum(out, "data")
+
+        # aux (identical on every model shard after the psums)
+        me = probs.mean(axis=0)
+        cnt = jnp.bincount(flat_e, weights=keep.astype(jnp.float32),
+                           length=E) / max(n * top_k, 1)
+        lb = E * jnp.sum(me * cnt)
+        zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        drop = 1.0 - keep.astype(jnp.float32).mean()
+        aux = jnp.stack([lb, zl, drop])
+        aux = lax.pmean(aux, "model")
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                aux = lax.pmean(aux, ax)
+        return out, aux
+
+    pspec_e = P(e_axes if len(e_axes) > 1 else e_axes[0], None, None)
+    fn = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(dp, None), P(None, None), pspec_e, pspec_e, pspec_e),
+        out_specs=(P(dp, None), P()),
+        check_rep=False)
+    out, aux_v = fn(tokens, p["router"], p["experts"]["w_gate"],
+                    p["experts"]["w_in"], p["experts"]["w_out"])
+    aux = {"lb_loss": aux_v[0], "z_loss": aux_v[1], "drop_frac": aux_v[2]}
+
+    if "shared" in p:
+        from . import moe as _moe
+        out = out + _moe.gated_mlp(p["shared"], tokens, act)
+    return out.reshape(B, T, d), aux

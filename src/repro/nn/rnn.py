@@ -1,0 +1,52 @@
+"""GRU — the paper's AIP backbone (Appendix F, Eq. 11).
+
+``gru_sequence`` is the XLA path; ``repro/kernels/gru.py`` provides the fused
+Pallas TPU kernel (both matmuls + gate fusion in one VMEM-resident kernel),
+validated against ``repro/kernels/ref.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .module import dense_init
+
+Params = Dict[str, Any]
+
+
+def gru_init(key, d_in: int, d_hidden: int, *, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": dense_init(k1, d_in, 3 * d_hidden, dtype=dtype)["w"],
+        "wh": dense_init(k2, d_hidden, 3 * d_hidden, dtype=dtype)["w"],
+        "b": jnp.zeros((3 * d_hidden,), dtype),
+    }
+
+
+def gru_cell(p: Params, h: jax.Array, x: jax.Array) -> jax.Array:
+    """h: (..., H); x: (..., D) -> new h."""
+    H = h.shape[-1]
+    gx = x @ p["wx"] + p["b"]
+    gh = h @ p["wh"]
+    r = jax.nn.sigmoid(gx[..., :H] + gh[..., :H])
+    z = jax.nn.sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
+    n = jnp.tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
+    return (1.0 - z) * n + z * h
+
+
+def gru_sequence(p: Params, xs: jax.Array, h0: jax.Array | None = None):
+    """xs: (B, T, D) -> (hs (B, T, H), h_T)."""
+    B, T, _ = xs.shape
+    H = p["wh"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((B, H), xs.dtype)
+
+    def step(h, x):
+        h2 = gru_cell(p, h, x)
+        return h2, h2
+
+    hT, hs = lax.scan(step, h0, jnp.moveaxis(xs, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), hT

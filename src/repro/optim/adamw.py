@@ -1,0 +1,90 @@
+"""AdamW with global-norm clipping and schedules (optax is not available).
+
+Moments are fp32 regardless of param dtype; updates are computed in fp32 and
+cast back. State is a plain pytree so it shards/checkpoints like params.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(lr_val: float) -> Callable:
+    return lambda step: jnp.asarray(lr_val, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros32, params),
+                          nu=jax.tree_util.tree_map(zeros32, params))
+
+    def update(grads, state: AdamWState, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g32
+            v2 = b2 * v + (1 - b2) * g32 * g32
+            u = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        metrics = {"grad_norm": gnorm, "lr": lr_t}
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,236 @@
+"""PPO (Schulman et al. 2017) — the paper's RL algorithm (§5.1), pure JAX.
+
+Policies are FNNs over a stack of the last k observations (Appendix F:
+"policies are fed with a stack of the last 8 observations" in the warehouse;
+k=1 in traffic). One training iteration = vectorised rollout (vmap over
+environments, lax.scan over time) + GAE + clipped-objective epochs — a single
+jitted program, so it runs identically on a GS, an IALS, or any F-IALS
+variant, and shards over the mesh's data axes at scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.envs.api import Env
+from repro.nn.module import dense_init, dense
+from repro.optim.adamw import adamw
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    obs_dim: int
+    n_actions: int
+    frame_stack: int = 1
+    hidden: int = 128
+    n_envs: int = 16
+    rollout_len: int = 128
+    episode_len: int = 256        # periodic env reset (episodic tasks)
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip: float = 0.2
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    lr: float = 3e-4
+    epochs: int = 4
+    n_minibatches: int = 4
+
+
+# ---------------------------------------------------------------------------
+# Actor-critic network (FNN on frame-stacked obs)
+# ---------------------------------------------------------------------------
+
+def init_policy(cfg: PPOConfig, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in = cfg.obs_dim * cfg.frame_stack
+    return {
+        "l1": dense_init(k1, d_in, cfg.hidden, bias=True),
+        "l2": dense_init(k2, cfg.hidden, cfg.hidden, bias=True),
+        "pi": dense_init(k3, cfg.hidden, cfg.n_actions, bias=True,
+                         scale=0.01),
+        "v": dense_init(k4, cfg.hidden, 1, bias=True, scale=0.1),
+    }
+
+
+def policy_forward(params, x):
+    h = jnp.tanh(dense(params["l1"], x))
+    h = jnp.tanh(dense(params["l2"], h))
+    return dense(params["pi"], h), dense(params["v"], h)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Vectorised rollout with frame stacking + periodic resets
+# ---------------------------------------------------------------------------
+
+class RolloutState(NamedTuple):
+    env_state: Any
+    frames: jax.Array      # (n_envs, k, obs_dim)
+    t_in_ep: jax.Array     # (n_envs,) int32
+
+
+def _stack_obs(frames):
+    return frames.reshape(frames.shape[0], -1)
+
+
+def init_rollout_state(env: Env, cfg: PPOConfig, key) -> RolloutState:
+    keys = jax.random.split(key, cfg.n_envs)
+    env_state = jax.vmap(env.reset)(keys)
+    obs = jax.vmap(env.observe)(env_state)
+    frames = jnp.zeros((cfg.n_envs, cfg.frame_stack, cfg.obs_dim))
+    frames = frames.at[:, -1].set(obs)
+    return RolloutState(env_state=env_state, frames=frames,
+                        t_in_ep=jnp.zeros((cfg.n_envs,), jnp.int32))
+
+
+def rollout(env: Env, cfg: PPOConfig, params, rs: RolloutState, key):
+    """-> (new RolloutState, batch dict with (T, n_envs, ...) leaves)."""
+
+    def step(carry, k):
+        rs = carry
+        ka, ks, kr = jax.random.split(k, 3)
+        x = _stack_obs(rs.frames)
+        logits, value = policy_forward(params, x)
+        a = jax.random.categorical(ka, logits)
+        logp = jax.nn.log_softmax(logits)[jnp.arange(cfg.n_envs), a]
+
+        keys = jax.random.split(ks, cfg.n_envs)
+        env_state, obs, r, _ = jax.vmap(env.step)(rs.env_state, a, keys)
+        frames = jnp.concatenate(
+            [rs.frames[:, 1:], obs[:, None]], axis=1)
+
+        t = rs.t_in_ep + 1
+        done = t >= cfg.episode_len
+        rkeys = jax.random.split(kr, cfg.n_envs)
+        reset_state = jax.vmap(env.reset)(rkeys)
+        env_state = jax.tree_util.tree_map(
+            lambda n, i: jnp.where(
+                done.reshape((-1,) + (1,) * (n.ndim - 1)), i, n),
+            env_state, reset_state)
+        obs0 = jax.vmap(env.observe)(env_state)
+        frames0 = jnp.zeros_like(frames).at[:, -1].set(obs0)
+        frames = jnp.where(done[:, None, None], frames0, frames)
+        t = jnp.where(done, 0, t)
+
+        out = {"x": x, "a": a, "logp": logp, "v": value, "r": r,
+               "done": done.astype(jnp.float32)}
+        return RolloutState(env_state, frames, t), out
+
+    keys = jax.random.split(key, cfg.rollout_len)
+    rs, batch = lax.scan(step, rs, keys)
+    x_last = _stack_obs(rs.frames)
+    _, v_last = policy_forward(params, x_last)
+    return rs, batch, v_last
+
+
+def gae(batch, v_last, gamma, lam):
+    def back(carry, xs):
+        adv_next, v_next = carry
+        v, r, done = xs
+        nonterm = 1.0 - done
+        delta = r + gamma * v_next * nonterm - v
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = lax.scan(
+        back, (jnp.zeros_like(v_last), v_last),
+        (batch["v"], batch["r"], batch["done"]), reverse=True)
+    returns = advs + batch["v"]
+    return advs, returns
+
+
+# ---------------------------------------------------------------------------
+# PPO update
+# ---------------------------------------------------------------------------
+
+def ppo_loss(params, cfg: PPOConfig, mb):
+    logits, v = policy_forward(params, mb["x"])
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, mb["a"][..., None], -1)[..., 0]
+    ratio = jnp.exp(logp - mb["logp"])
+    adv = mb["adv"]
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    pg = -jnp.minimum(
+        ratio * adv,
+        jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip) * adv).mean()
+    v_loss = jnp.square(v - mb["ret"]).mean()
+    ent = -(jnp.exp(logp_all) * logp_all).sum(-1).mean()
+    total = pg + cfg.value_coef * v_loss - cfg.entropy_coef * ent
+    return total, {"pg_loss": pg, "v_loss": v_loss, "entropy": ent}
+
+
+def make_train_iteration(env: Env, cfg: PPOConfig):
+    opt = adamw(cfg.lr, weight_decay=0.0, b2=0.999, clip_norm=0.5)
+
+    @jax.jit
+    def train_iteration(params, opt_state, rs: RolloutState, key):
+        k_roll, k_upd = jax.random.split(key)
+        rs, batch, v_last = rollout(env, cfg, params, rs, k_roll)
+        adv, ret = gae(batch, v_last, cfg.gamma, cfg.lam)
+        T, N = batch["a"].shape
+        flat = {
+            "x": batch["x"].reshape(T * N, -1),
+            "a": batch["a"].reshape(T * N),
+            "logp": batch["logp"].reshape(T * N),
+            "adv": adv.reshape(T * N),
+            "ret": ret.reshape(T * N),
+        }
+        n_mb = cfg.n_minibatches
+        mb_size = (T * N) // n_mb
+
+        def epoch(carry, k):
+            params, opt_state = carry
+            perm = jax.random.permutation(k, T * N)[:n_mb * mb_size]
+            perm = perm.reshape(n_mb, mb_size)
+
+            def mb_step(carry, idx):
+                params, opt_state = carry
+                mb = jax.tree_util.tree_map(lambda v: v[idx], flat)
+                (l, m), g = jax.value_and_grad(ppo_loss, has_aux=True)(
+                    params, cfg, mb)
+                params, opt_state, _ = opt.update(g, opt_state, params)
+                return (params, opt_state), l
+
+            (params, opt_state), ls = lax.scan(mb_step,
+                                               (params, opt_state), perm)
+            return (params, opt_state), ls.mean()
+
+        (params, opt_state), losses = lax.scan(
+            epoch, (params, opt_state), jax.random.split(k_upd, cfg.epochs))
+        metrics = {"loss": losses.mean(),
+                   "mean_reward": batch["r"].mean(),
+                   "mean_value": batch["v"].mean()}
+        return params, opt_state, rs, metrics
+
+    return opt, train_iteration
+
+
+def evaluate(env: Env, cfg: PPOConfig, params, key, *, n_episodes: int = 8,
+             ep_len: int | None = None) -> float:
+    """Mean per-step reward of the greedy policy on ``env`` (the paper's
+    periodic evaluation on the GS)."""
+    ep_len = ep_len or cfg.episode_len
+
+    def episode(key):
+        k0, key = jax.random.split(key)
+        state = env.reset(k0)
+        frames = jnp.zeros((cfg.frame_stack, cfg.obs_dim))
+        frames = frames.at[-1].set(env.observe(state))
+
+        def step(carry, k):
+            state, frames = carry
+            x = frames.reshape(1, -1)
+            logits, _ = policy_forward(params, x)
+            a = jnp.argmax(logits[0])
+            state, obs, r, _ = env.step(state, a, k)
+            frames = jnp.concatenate([frames[1:], obs[None]], axis=0)
+            return (state, frames), r
+
+        _, rs = lax.scan(step, (state, frames), jax.random.split(key, ep_len))
+        return rs.mean()
+
+    keys = jax.random.split(key, n_episodes)
+    return float(jax.jit(jax.vmap(episode))(keys).mean())

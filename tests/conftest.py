@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device CPU (the dry-run alone forces 512 host devices,
+# and only in its own subprocess — see src/repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps, allclose vs the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_kernel
+from repro.kernels.gru import gru_sequence as gru_kernel
+from repro.kernels.rmsnorm import rmsnorm as rms_kernel
+
+
+@pytest.mark.parametrize("T,S,D,causal,dtype", [
+    (128, 128, 64, True, jnp.float32),
+    (128, 128, 64, False, jnp.float32),
+    (256, 256, 128, True, jnp.float32),
+    (128, 256, 64, False, jnp.float32),   # cross-attn shape (T != S)
+    (128, 128, 64, True, jnp.bfloat16),
+])
+def test_flash_attention_kernel(T, S, D, causal, dtype):
+    key = jax.random.PRNGKey(0)
+    BH = 4
+    q = jax.random.normal(key, (BH, T, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (BH, S, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (BH, S, D), dtype)
+    out = fa_kernel(q, k, v, causal=causal, bq=128, bk=128, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - want.astype(jnp.float32)).max()) < tol
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 32), (32, 128)])
+def test_flash_attention_block_shapes(bq, bk):
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 256, 64))
+    k = jax.random.normal(key, (2, 256, 64))
+    v = jax.random.normal(key, (2, 256, 64))
+    out = fa_kernel(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    assert float(jnp.abs(out - want).max()) < 2e-5
+
+
+def test_flash_attention_gqa_wrapper():
+    key = jax.random.PRNGKey(4)
+    B, T, H, KH, D = 2, 128, 8, 2, 64
+    q = jax.random.normal(key, (B, T, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(5), (B, T, KH, D))
+    v = jax.random.normal(jax.random.PRNGKey(6), (B, T, KH, D))
+    out = ops.flash_attention_mha(q, k, v, causal=True)
+    kf = jnp.repeat(k, H // KH, axis=2).transpose(0, 2, 1, 3).reshape(
+        B * H, T, D)
+    vf = jnp.repeat(v, H // KH, axis=2).transpose(0, 2, 1, 3).reshape(
+        B * H, T, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=True).reshape(
+        B, H, T, D).transpose(0, 2, 1, 3)
+    assert float(jnp.abs(out - want).max()) < 2e-5
+
+
+@pytest.mark.parametrize("B,T,D,H,dtype", [
+    (4, 20, 24, 32, jnp.float32),
+    (1, 1, 8, 16, jnp.float32),
+    (8, 64, 40, 64, jnp.float32),
+    (2, 16, 12, 32, jnp.bfloat16),
+])
+def test_gru_kernel(B, T, D, H, dtype):
+    key = jax.random.PRNGKey(7)
+    wx = jax.random.normal(key, (D, 3 * H), dtype) * 0.2
+    wh = jax.random.normal(jax.random.PRNGKey(8), (H, 3 * H), dtype) * 0.2
+    b = jnp.zeros((3 * H,), dtype)
+    x = jax.random.normal(jax.random.PRNGKey(9), (B, T, D), dtype)
+    h0 = jnp.zeros((B, H), dtype)
+    hs, hT = gru_kernel(x, wx, wh, b, h0, interpret=True)
+    hs_r, hT_r = ref.gru_sequence_ref(x, wx, wh, b, h0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    assert float(jnp.abs(hs.astype(jnp.float32)
+                         - hs_r.astype(jnp.float32)).max()) < tol
+    assert float(jnp.abs(hT.astype(jnp.float32)
+                         - hT_r.astype(jnp.float32)).max()) < tol
+
+
+def test_gru_kernel_matches_nn_rnn():
+    """The kernel is a drop-in for repro.nn.rnn.gru_sequence."""
+    from repro.nn.rnn import gru_init, gru_sequence
+    key = jax.random.PRNGKey(10)
+    p = gru_init(key, 16, 32)
+    x = jax.random.normal(key, (3, 12, 16))
+    hs_k, _ = ops.gru_sequence(p, x)
+    hs_x, _ = gru_sequence(p, x)
+    assert float(jnp.abs(hs_k - hs_x).max()) < 1e-5
+
+
+@pytest.mark.parametrize("N,d,dtype", [
+    (256, 128, jnp.float32),
+    (1000, 512, jnp.float32),     # N not divisible by default block
+    (64, 256, jnp.bfloat16),
+])
+def test_rmsnorm_kernel(N, d, dtype):
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (N, d), dtype)
+    g = jax.random.normal(jax.random.PRNGKey(12), (d,), jnp.float32)
+    out = rms_kernel(x, g, interpret=True)
+    want = ref.rmsnorm_ref(x, g)
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - want.astype(jnp.float32)).max()) < 1e-2

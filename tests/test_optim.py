@@ -1,0 +1,93 @@
+"""Optimizer + gradient compression tests (unit + hypothesis properties)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import (adamw, clip_by_global_norm, cosine_schedule,
+                               global_norm)
+from repro.optim import grad_compress as gc
+
+SET = dict(deadline=None, max_examples=15)
+
+
+def test_adamw_converges_on_quadratic():
+    opt = adamw(0.1, weight_decay=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    st_ = opt.init(params)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, st_, _ = opt.update(g, st_, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_preserves_structure_and_dtype():
+    opt = adamw(1e-3)
+    params = {"a": jnp.ones((3, 4), jnp.bfloat16),
+              "b": {"c": jnp.zeros((2,), jnp.float32)}}
+    st_ = opt.init(params)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    p2, st2, m = opt.update(g, st_, params)
+    assert jax.tree_util.tree_structure(p2) == \
+        jax.tree_util.tree_structure(params)
+    assert p2["a"].dtype == jnp.bfloat16
+    assert st2.mu["a"].dtype == jnp.float32  # moments always fp32
+    assert bool(jnp.isfinite(m["grad_norm"]))
+
+
+@given(scale=st.floats(0.1, 100.0))
+@settings(**SET)
+def test_clip_bounds_global_norm(scale):
+    tree = {"w": jnp.full((8, 8), scale)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-4
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.int32(100))) < 1e-3
+    assert float(lr(jnp.int32(5))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 1000))
+@settings(**SET)
+def test_compress_error_bounded_by_half_step(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1024,)) * 3.0
+    q, scale = gc.compress(x, block=256)
+    y = gc.decompress(q, scale, x.shape, x.dtype)
+    # per-block quantisation step = scale; error <= scale/2 elementwise
+    step = jnp.repeat(scale, 256)[:1024]
+    assert bool((jnp.abs(x - y) <= step / 2 + 1e-6).all())
+
+
+def test_error_feedback_removes_bias():
+    """With error feedback, the running sum of decompressed grads tracks the
+    running sum of true grads (bias does not accumulate)."""
+    key = jax.random.PRNGKey(0)
+    err = jnp.zeros((512,))
+    true_sum = jnp.zeros((512,))
+    approx_sum = jnp.zeros((512,))
+    for i in range(50):
+        key, k = jax.random.split(key)
+        g = jax.random.normal(k, (512,)) * 0.1 + 0.05
+        q, scale, err = gc.compress_with_feedback(g, err, block=128)
+        approx_sum = approx_sum + gc.decompress(q, scale, g.shape,
+                                                jnp.float32)
+        true_sum = true_sum + g
+    # residual error is bounded by one quantisation step, NOT growing ~ O(T)
+    resid = float(jnp.abs(true_sum - approx_sum).max())
+    assert resid < 0.05, resid
+
+
+def test_compression_ratio():
+    r = gc.compression_ratio((1024, 1024), jnp.float32, block=256)
+    assert 3.5 < r < 4.0

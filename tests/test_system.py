@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests: the paper's pipeline produces its claims.
+
+These are integration tests over the REAL components (GS -> Algorithm 1 ->
+AIP -> IALS -> PPO), at CPU-budget scale. Statistical assertions use
+generous margins; the full-strength versions live in benchmarks/.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import collect, influence, ials
+from repro.envs.traffic import make_traffic_env, make_local_traffic_env
+from repro.envs.warehouse import make_warehouse_env, make_local_warehouse_env
+from repro.rl import ppo
+
+
+@pytest.fixture(scope="module")
+def traffic_pipeline():
+    key = jax.random.PRNGKey(0)
+    gs = make_traffic_env()
+    ls = make_local_traffic_env()
+    data = collect.collect_dataset(gs, key, n_episodes=24, ep_len=96)
+    acfg = influence.AIPConfig(kind="fnn", d_in=gs.spec.dset_dim,
+                               n_out=gs.spec.n_influence, hidden=64, stack=8)
+    aip, metrics = influence.train_aip(acfg, data["d"], data["u"],
+                                       jax.random.PRNGKey(1), epochs=8)
+    return gs, ls, data, acfg, aip, metrics
+
+
+def test_algorithm1_collects_influence_pairs(traffic_pipeline):
+    gs, ls, data, *_ = traffic_pipeline
+    assert data["d"].shape[-1] == gs.spec.dset_dim
+    assert data["u"].shape[-1] == gs.spec.n_influence
+    rate = float(data["u"].mean())
+    assert 0.01 < rate < 0.5     # influence events occur but are sparse
+
+
+def test_trained_aip_beats_untrained(traffic_pipeline):
+    gs, ls, data, acfg, aip, metrics = traffic_pipeline
+    untrained = influence.init_aip(acfg, jax.random.PRNGKey(99))
+    xe_tr = float(influence.xent_loss(aip, acfg, data["d"], data["u"]))
+    xe_un = float(influence.xent_loss(untrained, acfg,
+                                      data["d"], data["u"]))
+    assert xe_tr < xe_un * 0.75  # Fig. 3 bottom: clear gap
+
+
+def test_ials_faster_than_gs(traffic_pipeline):
+    """Fig. 3 middle: the IALS simulates faster than the GS (25x fewer
+    intersections -> less work per step)."""
+    gs, ls, data, acfg, aip, _ = traffic_pipeline
+    sim = ials.make_ials(ls, aip, acfg)
+    from jax import lax
+
+    def make_roll(env):
+        def run(key):
+            keys = jax.random.split(key, 8)
+            st = jax.vmap(env.reset)(keys)
+
+            def step(c, k):
+                a = jax.random.randint(k, (8,), 0, 2)
+                st, o, r, _ = jax.vmap(env.step)(c, a,
+                                                 jax.random.split(k, 8))
+                return st, r
+            st, rs = lax.scan(step, st, jax.random.split(key, 64))
+            return rs.sum()
+        return jax.jit(run)
+
+    key = jax.random.PRNGKey(5)
+    t = {}
+    for name, env in (("gs", gs), ("ials", sim)):
+        fn = make_roll(env)
+        jax.block_until_ready(fn(key))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = fn(key)
+        jax.block_until_ready(out)
+        t[name] = time.perf_counter() - t0
+    assert t["ials"] < t["gs"], t
+
+
+def test_ppo_on_ials_evaluates_on_gs(traffic_pipeline):
+    gs, ls, data, acfg, aip, _ = traffic_pipeline
+    sim = ials.make_ials(ls, aip, acfg)
+    pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim, n_actions=2, n_envs=8,
+                         rollout_len=64, episode_len=96)
+    key = jax.random.PRNGKey(7)
+    params = ppo.init_policy(pcfg, key)
+    opt, it_fn = ppo.make_train_iteration(sim, pcfg)
+    ost = opt.init(params)
+    rs = ppo.init_rollout_state(sim, pcfg, key)
+    for _ in range(3):
+        key, k = jax.random.split(key)
+        params, ost, rs, m = it_fn(params, ost, rs, k)
+    r = ppo.evaluate(gs, pcfg, params, key, n_episodes=4, ep_len=64)
+    assert 0.0 <= r <= 1.0
+    assert jnp.isfinite(jnp.asarray(m["loss"]))
+
+
+def test_warehouse_pipeline_end_to_end():
+    key = jax.random.PRNGKey(1)
+    gs = make_warehouse_env()
+    ls = make_local_warehouse_env()
+    data = collect.collect_dataset(gs, key, n_episodes=12, ep_len=64)
+    acfg = influence.AIPConfig(kind="gru", d_in=gs.spec.dset_dim,
+                               n_out=gs.spec.n_influence, hidden=32)
+    aip, m = influence.train_aip(acfg, data["d"], data["u"],
+                                 jax.random.PRNGKey(2), epochs=4)
+    sim = ials.make_ials(ls, aip, acfg)
+    pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim, n_actions=5,
+                         frame_stack=8, n_envs=4, rollout_len=32,
+                         episode_len=64)
+    params = ppo.init_policy(pcfg, key)
+    opt, it_fn = ppo.make_train_iteration(sim, pcfg)
+    params, ost, rs, metrics = it_fn(params, opt.init(params),
+                                     ppo.init_rollout_state(sim, pcfg, key),
+                                     key)
+    assert jnp.isfinite(jnp.asarray(metrics["loss"]))
+
+
+def test_f_ials_marginal_mode():
+    """App. E: the F-IALS drives the LS with a fixed marginal."""
+    ls = make_local_traffic_env()
+    acfg = influence.AIPConfig(kind="fnn", d_in=ls.spec.dset_dim, n_out=4,
+                               hidden=8, stack=1)
+    aip = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    sim = ials.make_ials(ls, aip, acfg, fixed_marginal=0.1)
+    key = jax.random.PRNGKey(4)
+    s = sim.reset(key)
+    us = []
+    for _ in range(128):
+        key, k = jax.random.split(key)
+        s, o, r, info = jax.jit(sim.step)(s, jnp.int32(0), k)
+        us.append(info["u"])
+    rate = float(jnp.stack(us).mean())
+    assert abs(rate - 0.1) < 0.06
