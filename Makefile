@@ -1,0 +1,17 @@
+PY := PYTHONPATH=src python
+
+# Tier-1: fast suite, `slow`-marked tests excluded via pyproject addopts.
+test-fast:
+	$(PY) -m pytest -x -q
+
+# Everything, including the multi-minute jit-heavy tests.
+test-all:
+	$(PY) -m pytest -q -m "slow or not slow"
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick
+
+multi-agent-bench:
+	$(PY) -m benchmarks.run --quick --only multi_agent_throughput
+
+.PHONY: test-fast test-all bench-quick multi-agent-bench

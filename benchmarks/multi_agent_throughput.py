@@ -1,0 +1,145 @@
+"""Multi-agent batched IALS throughput (the Distributed-IALS scaling story).
+
+Aggregate agent-steps/second for, per domain:
+
+  gs            the full global simulator (one agent extracted)
+  gs-multi      the global simulator with every region as an agent
+  ials-1        a single local IALS (the paper's Fig. 3/5 setting)
+  multi-ials    N local IALS + N AIPs stacked into one vmapped program
+  loop-ials     the same N simulators stepped in a Python loop — what the
+                batched construction replaces (dispatch-bound)
+
+The acceptance bar: multi-ials > 5x the aggregate steps/s of loop-ials.
+One agent-step = one agent's local simulator advancing one tick; the GS rows
+count n_agents per global tick since one global step services every region.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import row, save_json, time_fn
+
+
+def rollout_fn(env, n_envs: int, T: int):
+    a_shape = ((n_envs, env.spec.n_agents) if env.spec.n_agents > 1
+               else (n_envs,))
+
+    def run(key):
+        keys = jax.random.split(key, n_envs)
+        state = jax.vmap(env.reset)(keys)
+
+        def step(carry, k):
+            state = carry
+            ka, ks = jax.random.split(k)
+            a = jax.random.randint(ka, a_shape, 0, env.spec.n_actions)
+            state, obs, r, _ = jax.vmap(env.step)(
+                state, a, jax.random.split(ks, n_envs))
+            return state, r
+
+        _, rs = lax.scan(step, state, jax.random.split(key, T))
+        return rs.sum()
+
+    return jax.jit(run)
+
+
+def loop_rollout(single_envs, n_envs: int, T: int):
+    """Step each agent's IALS separately — one jitted program per agent, a
+    Python loop over agents per tick (the pre-batching baseline)."""
+    steps = [jax.jit(jax.vmap(e.step)) for e in single_envs]
+    resets = [jax.jit(jax.vmap(e.reset)) for e in single_envs]
+
+    def run(key):
+        states = [r(jax.random.split(jax.random.fold_in(key, i), n_envs))
+                  for i, r in enumerate(resets)]
+        total = 0.0
+        for t in range(T):
+            kt = jax.random.fold_in(key, 1000 + t)
+            a = jax.random.randint(kt, (n_envs,), 0,
+                                   single_envs[0].spec.n_actions)
+            ks = jax.random.split(kt, n_envs)
+            for i, st in enumerate(steps):
+                states[i], _, r, _ = st(states[i], a, ks)
+            total = total + r.sum()
+        return total
+
+    return run
+
+
+def run(quick: bool = False):
+    from repro.core import collect, influence, ials as ials_lib, multi_ials
+    from repro.envs.traffic import (TrafficConfig, make_traffic_env,
+                                    make_local_traffic_env,
+                                    make_multi_traffic_env)
+    from repro.envs.warehouse import (WarehouseConfig, make_warehouse_env,
+                                      make_local_warehouse_env,
+                                      make_multi_warehouse_env)
+
+    out = []
+    n_envs, T = (4, 32) if quick else (16, 128)
+    iters = 3 if quick else 10
+    domains = ["traffic"] if quick else ["traffic", "warehouse"]
+    for domain in domains:
+        key = jax.random.PRNGKey(0)
+        if domain == "traffic":
+            cfg = TrafficConfig()
+            G = cfg.grid
+            agents = [(i, j) for i in range(G) for j in range(G)]
+            gs = make_traffic_env(cfg)
+            gs_multi = make_multi_traffic_env(cfg, agents)
+            ls = make_local_traffic_env(cfg)
+            aip_kind, stack = "fnn", 8
+        else:
+            cfg = WarehouseConfig()
+            G = cfg.grid
+            agents = [(i, j) for i in range(G) for j in range(G)]
+            gs = make_warehouse_env(cfg)
+            gs_multi = make_multi_warehouse_env(cfg, agents)
+            ls = make_local_warehouse_env(cfg)
+            aip_kind, stack = "gru", 1
+        A = len(agents)
+
+        k1, k2 = jax.random.split(key)
+        data = collect.per_agent(collect.collect_dataset(
+            gs_multi, k1, n_episodes=4 if quick else 16,
+            ep_len=32 if quick else 64))
+        acfg = influence.AIPConfig(kind=aip_kind, d_in=gs.spec.dset_dim,
+                                   n_out=gs.spec.n_influence, hidden=64,
+                                   stack=stack)
+        aips, _ = influence.train_aip_batched(
+            acfg, data["d"], data["u"], jax.random.split(k2, A),
+            epochs=1 if quick else 4)
+        aip0 = jax.tree_util.tree_map(lambda l: l[0], aips)
+
+        sims = {
+            "gs": (gs, A),          # one global tick services all A regions
+            "gs-multi": (gs_multi, A),
+            "ials-1": (ials_lib.make_ials(ls, aip0, acfg), 1),
+            "multi-ials": (multi_ials.make_multi_ials(ls, aips, acfg, A), A),
+        }
+        rates = {}
+        for name, (env, agents_per_step) in sims.items():
+            fn = rollout_fn(env, n_envs, T)
+            us = time_fn(fn, key, warmup=1, iters=iters)
+            rates[name] = n_envs * T * agents_per_step / (us / 1e6)
+            out.append(row(f"multi_agent/{domain}/{name}",
+                           us / (n_envs * T),
+                           {"agent_steps_per_s": round(rates[name])}))
+
+        loop_envs = [ials_lib.make_ials(
+            ls, jax.tree_util.tree_map(lambda l, i=i: l[i], aips), acfg)
+            for i in range(A)]
+        fn = loop_rollout(loop_envs, n_envs, T)
+        us = time_fn(fn, key, warmup=1, iters=max(1, iters // 3))
+        rates["loop-ials"] = n_envs * T * A / (us / 1e6)
+        out.append(row(f"multi_agent/{domain}/loop-ials", us / (n_envs * T),
+                       {"agent_steps_per_s": round(rates["loop-ials"])}))
+
+        speedup = rates["multi-ials"] / rates["loop-ials"]
+        out.append(row(f"multi_agent/{domain}/batched_over_loop", 0.0,
+                       {"speedup": round(speedup, 1),
+                        "n_agents": A,
+                        "acceptance": "> 5x required"}))
+        save_json(f"multi_agent_throughput_{domain}", rates)
+    return out

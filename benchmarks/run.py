@@ -5,6 +5,7 @@
 Prints ``name,us_per_call,derived`` CSV lines (derived is a JSON dict).
 Mapping to the paper:
     simulator_throughput  Fig. 3/5 middle (GS vs IALS total runtime)
+    multi_agent_throughput  Distributed-IALS: N batched IALS vs Python loop
     aip_accuracy          Fig. 3/5 bottom + App. E Eq. 9/10
     learning_curves       Fig. 3/5 top + App. E Fig. 11/12 (F-IALS)
     memory_dependence     Fig. 6 (Theorem 1)
@@ -23,6 +24,7 @@ MODULES = [
     "kernel_bench",
     "roofline_report",
     "simulator_throughput",
+    "multi_agent_throughput",
     "aip_accuracy",
     "dset_ablation",
     "memory_dependence",

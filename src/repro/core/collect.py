@@ -4,6 +4,11 @@ Rollouts under an exploratory policy π₀ (uniform random by default —
 satisfying the support condition of §4.2), vmapped over episodes so the whole
 collection is one jitted program. Returns stacked sequences so the AIP can be
 trained with (optionally truncated) BPTT.
+
+Multi-agent GS (``env.spec.n_agents = A > 1``): the same single rollout
+yields every agent's (d_t, u_t) pairs at once — leaves come back as
+(N, T, A, ...); ``per_agent`` transposes them to the (A, N, T, ...) layout
+that ``influence.train_aip_batched`` consumes.
 """
 from __future__ import annotations
 
@@ -24,11 +29,15 @@ def collect_dataset(env: Env, key, *, n_episodes: int, ep_len: int,
     ``policy(key, obs) -> action`` defaults to uniform random (π₀).
     ``dset_key`` chooses "dset" (the d-separating set) or "dset_full"
     (d-set + confounders — the App. B ablation input).
+
+    On a multi-agent GS each leaf gains an agent axis after T:
+    d (N, T, A, Dd), u (N, T, A, M), reward (N, T, A).
     """
     n_actions = env.spec.n_actions
+    a_shape = (env.spec.n_agents,) if env.spec.n_agents > 1 else ()
 
     def pi0(k, obs):
-        return jax.random.randint(k, (), 0, n_actions)
+        return jax.random.randint(k, a_shape, 0, n_actions)
 
     pol = policy or pi0
 
@@ -54,6 +63,23 @@ def collect_dataset(env: Env, key, *, n_episodes: int, ep_len: int,
     return traj
 
 
-def empirical_marginal(us: jax.Array) -> jax.Array:
-    """P̂(u) per head from collected data — the F-IALS baseline (App. E)."""
+def per_agent(data: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """(N, T, A, ...) multi-agent collection -> (A, N, T, ...) per-agent
+    datasets (the layout ``train_aip_batched`` maps over)."""
+    return {k: jnp.moveaxis(v, 2, 0) for k, v in data.items()}
+
+
+def empirical_marginal(us: jax.Array, *, per_agent: bool = False
+                       ) -> jax.Array:
+    """P̂(u) per head from collected data — the F-IALS baseline (App. E).
+
+    (N, T, M) -> (M,). With ``per_agent=True`` expects the ``per_agent``
+    layout (A, N, T, M) and returns (A, M); the flag is explicit because a
+    raw multi-agent collection (N, T, A, M) is also 4-D and would silently
+    average the wrong axes."""
+    if per_agent:
+        if us.ndim != 4:
+            raise ValueError(f"per_agent expects (A, N, T, M), got "
+                             f"{us.shape}")
+        return us.mean(axis=(1, 2))
     return us.reshape(-1, us.shape[-1]).mean(0)

@@ -105,13 +105,13 @@ def accuracy(params: Params, cfg: AIPConfig, dsets, us) -> jax.Array:
     return (pred == us).astype(jnp.float32).mean()
 
 
-def train_aip(cfg: AIPConfig, dsets, us, key, *, epochs: int = 10,
-              batch_size: int = 32, lr: float = 3e-3,
-              window: int = 0) -> Tuple[Params, Dict]:
-    """Fit the AIP on (N, T, d_in)/(N, T, M) sequences from Algorithm 1.
+def _train_core(cfg: AIPConfig, dsets, us, key, *, epochs: int,
+                batch_size: int, lr: float, window: int):
+    """Pure training loop: (N, T, ...) data -> (params, (epochs,) losses).
 
-    ``window`` > 0 truncates each sampled sequence to that many steps
-    (Theorem 1: match it to the agent's memory k).
+    Everything is scanned (epochs included), so the whole fit is one jitted
+    program — and, crucially, it vmaps: ``train_aip_batched`` maps it over a
+    leading agent axis to fit N per-agent AIPs in a single batched pass.
     """
     N, T = dsets.shape[:2]
     if window and window < T:
@@ -125,9 +125,15 @@ def train_aip(cfg: AIPConfig, dsets, us, key, *, epochs: int = 10,
     batch_size = min(batch_size, N)
     n_batches = max(1, N // batch_size)
 
-    @jax.jit
-    def epoch(params, ost, key):
-        perm = jax.random.permutation(key, N)[:n_batches * batch_size]
+    # same split chain as the historical per-epoch Python loop
+    def split_chain(k, _):
+        k, ke = jax.random.split(k)
+        return k, ke
+    _, epoch_keys = lax.scan(split_chain, key, None, length=epochs)
+
+    def epoch(carry, ke):
+        params, ost = carry
+        perm = jax.random.permutation(ke, N)[:n_batches * batch_size]
         perm = perm.reshape(n_batches, batch_size)
 
         def body(carry, idx):
@@ -138,13 +144,44 @@ def train_aip(cfg: AIPConfig, dsets, us, key, *, epochs: int = 10,
             return (params, ost), l
 
         (params, ost), losses = lax.scan(body, (params, ost), perm)
-        return params, ost, losses.mean()
+        return (params, ost), losses.mean()
 
-    history = []
-    for e in range(epochs):
-        key, ke = jax.random.split(key)
-        params, ost, l = epoch(params, ost, ke)
-        history.append(float(l))
+    (params, _), losses = lax.scan(epoch, (params, ost), epoch_keys)
+    return params, losses
+
+
+def train_aip(cfg: AIPConfig, dsets, us, key, *, epochs: int = 10,
+              batch_size: int = 32, lr: float = 3e-3,
+              window: int = 0) -> Tuple[Params, Dict]:
+    """Fit the AIP on (N, T, d_in)/(N, T, M) sequences from Algorithm 1.
+
+    ``window`` > 0 truncates each sampled sequence to that many steps
+    (Theorem 1: match it to the agent's memory k).
+    """
+    fit = jax.jit(lambda d, u, k: _train_core(
+        cfg, d, u, k, epochs=epochs, batch_size=batch_size, lr=lr,
+        window=window))
+    params, losses = fit(dsets, us, key)
+    history = [float(l) for l in losses]
     metrics = {"loss_history": history,
                "final_loss": history[-1] if history else float("nan")}
+    return params, metrics
+
+
+def train_aip_batched(cfg: AIPConfig, dsets, us, keys, *, epochs: int = 10,
+                      batch_size: int = 32, lr: float = 3e-3,
+                      window: int = 0) -> Tuple[Params, Dict]:
+    """Fit A independent AIPs in one batched pass — ``vmap`` of the training
+    loop over a leading agent axis (the Distributed-IALS construction).
+
+    ``dsets``: (A, N, T, d_in), ``us``: (A, N, T, M), ``keys``: (A,) PRNG
+    keys. Returns params with (A, ...) stacked leaves + per-agent losses.
+    """
+    fit = jax.jit(jax.vmap(lambda d, u, k: _train_core(
+        cfg, d, u, k, epochs=epochs, batch_size=batch_size, lr=lr,
+        window=window)))
+    params, losses = fit(dsets, us, keys)
+    final = losses[:, -1] if losses.shape[-1] else losses.sum(-1)
+    metrics = {"final_loss_per_agent": [float(l) for l in final],
+               "final_loss": float(final.mean())}
     return params, metrics

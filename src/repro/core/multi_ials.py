@@ -1,0 +1,87 @@
+"""Distributed IALS (Suau et al. 2022): N local simulators in one program.
+
+Every agent region gets its own IALS — a LocalEnv plus a per-agent AIP — and
+all N are stacked into a single ``Env`` whose step is one ``vmap`` over the
+agent axis. Combined with the PPO rollout's vmap over environments and scan
+over time, the whole 5x5 traffic grid (25 agents) or 6x6 warehouse floor
+(36 agents) simulates as one jitted program; this is the batched-simulation
+throughput lever (Shacklett et al. 2021) applied to the IALS construction.
+
+State / action / obs / reward all carry a leading (A, ...) agent axis, the
+same convention as the multi-agent GS factories in ``repro.envs``, so the
+RL layer treats an A-agent IALS exactly like a multi-agent GS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import influence
+from repro.envs.api import Env, LocalEnv
+
+
+class MultiIALSState(NamedTuple):
+    ls_state: object      # LocalEnv state with (A, ...) stacked leaves
+    aip_state: jax.Array  # (A, ...) per-agent AIP recurrent state
+
+
+def make_multi_ials(local_env: LocalEnv, aip_params,
+                    aip_cfg: influence.AIPConfig, n_agents: int, *,
+                    fixed_marginal: Optional[float] = None,
+                    fixed_marginal_vec=None) -> Env:
+    """-> Env with the multi-agent GS signature.
+
+    ``aip_params``: pytree with (A, ...) stacked leaves — one AIP per agent
+    (from ``influence.train_aip_batched`` or a ``vmap`` of ``init_aip``).
+    ``fixed_marginal`` (scalar) or ``fixed_marginal_vec`` ((M,) shared or
+    (A, M) per-agent) switch every simulator into F-IALS mode.
+    """
+    A = n_agents
+    M = local_env.spec.n_influence
+    spec = dataclasses.replace(local_env.spec,
+                               name=local_env.spec.name + "+multi-ials",
+                               n_agents=A)
+    if fixed_marginal_vec is not None:
+        marg = jnp.broadcast_to(
+            jnp.asarray(fixed_marginal_vec, jnp.float32), (A, M))
+    elif fixed_marginal is not None:
+        marg = jnp.full((A, M), fixed_marginal, jnp.float32)
+    else:
+        marg = None
+
+    def reset(key):
+        ls = jax.vmap(local_env.reset)(jax.random.split(key, A))
+        return MultiIALSState(ls_state=ls,
+                              aip_state=influence.init_state(aip_cfg, (A,)))
+
+    def single_step(params, ls_state, aip_state, action, u_probs_fixed, key):
+        k_u, k_env = jax.random.split(key)
+        d_t = local_env.dset_fn(ls_state, action)
+        logits, new_aip = influence.step(params, aip_cfg, aip_state, d_t)
+        probs = (u_probs_fixed if marg is not None
+                 else jax.nn.sigmoid(logits))
+        u = jax.random.bernoulli(k_u, probs).astype(jnp.float32)
+        ls2, obs, r, info = local_env.step(ls_state, action, u, k_env)
+        info = dict(info)
+        info["u"] = u
+        info["u_probs"] = probs
+        return ls2, new_aip, obs, r, info
+
+    vstep = jax.vmap(single_step)
+
+    def step(state: MultiIALSState, actions, key):
+        keys = jax.random.split(key, A)
+        fixed = (marg if marg is not None
+                 else jnp.zeros((A, M), jnp.float32))
+        ls2, new_aip, obs, r, info = vstep(
+            aip_params, state.ls_state, state.aip_state, actions, fixed,
+            keys)
+        return MultiIALSState(ls_state=ls2, aip_state=new_aip), obs, r, info
+
+    def observe(state: MultiIALSState):
+        return jax.vmap(local_env.observe)(state.ls_state)
+
+    return Env(spec=spec, reset=reset, step=step, observe=observe)

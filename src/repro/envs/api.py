@@ -12,11 +12,20 @@ LS step:  (state, action, u_t, key)     -> (state, obs, reward, info)
   - "u": influence sources u_t  (what the AIP learns to predict)
   - "dset": the d-separating-set features d_t (AIP input)
   - "dset_full": d_t plus confounder variables (for the App. B ablation)
+
+Multi-agent GS (Distributed IALS, Suau et al. 2022): the same signature with
+``spec.n_agents = A > 1``; ``action`` is (A,), and obs / reward / info leaves
+carry a leading (A, ...) agent axis — one local view per agent region, all
+extracted from a single global step. Agent coordinates are ordinary traced
+arrays, so per-agent extraction vmaps over them.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, NamedTuple
+
+import jax.numpy as jnp
 
 
 @dataclass(frozen=True)
@@ -27,6 +36,7 @@ class EnvSpec:
     n_influence: int      # M influence source bits
     dset_dim: int         # d-set feature size
     dset_full_dim: int    # d-set + confounders (ablation input)
+    n_agents: int = 1     # leading agent axis of obs/action/reward/info
 
 
 class Env(NamedTuple):
@@ -43,3 +53,19 @@ class LocalEnv(NamedTuple):
     observe: Callable
     dset_fn: Callable  # (state, action) -> d_t features (used by the IALS
     #                    to query the AIP *before* stepping)
+
+
+def squeeze_agent_env(multi: Env, name: str) -> Env:
+    """A 1-agent multi-agent GS presented through the single-agent protocol:
+    scalar action in, the leading agent axis squeezed off every output."""
+    spec = dataclasses.replace(multi.spec, name=name, n_agents=1)
+
+    def observe(state):
+        return multi.observe(state)[0]
+
+    def step(state, action, key):
+        state, obs, r, info = multi.step(state, jnp.asarray(action)[None],
+                                         key)
+        return state, obs[0], r[0], {k: v[0] for k, v in info.items()}
+
+    return Env(spec=spec, reset=multi.reset, step=step, observe=observe)

@@ -19,6 +19,17 @@ local region (open boundary).
 d-set (paper: 37-bit car-location vector, lights EXCLUDED to avoid the App. B
 spurious correlation): occupancy of the 4 incoming lanes = 4L bits.
 ``dset_full`` appends the light phase (the confounder) for the ablation.
+
+Multi-agent (Distributed IALS): ``make_multi_traffic_env(cfg, agents)`` puts
+an agent at every listed intersection — agent coordinates are ordinary traced
+int arrays, so the per-agent obs/reward/u/d-set extraction is a ``vmap`` over
+them and the whole grid (up to all G*G intersections) steps in one program.
+
+``ext_influence`` widens u_t from 4 to 8 bits: the extra 4 bits mark "the
+downstream tail of lane d is occupied" — the congestion feedback the 4-bit
+paper version ignores. With them the LS replay of a GS rollout is *exact*
+(same obs/reward sequence given the true u_t), which is what the GS<->LS
+consistency tests check.
 """
 from __future__ import annotations
 
@@ -28,7 +39,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from .api import Env, EnvSpec, LocalEnv
+from .api import Env, EnvSpec, LocalEnv, squeeze_agent_env
 
 
 @dataclass(frozen=True)
@@ -39,6 +50,7 @@ class TrafficConfig:
     agent: Tuple[int, int] = (2, 2)
     min_phase: int = 2          # actuated controller hysteresis (steps)
     queue_window: int = 5       # cells from stop line counted as queue
+    ext_influence: bool = False  # 8-bit u_t (+4 downstream-blocked bits)
 
 
 class TrafficState(NamedTuple):
@@ -78,16 +90,34 @@ _DI = (1, -1, 0, 0)
 _DJ = (0, 0, -1, 1)
 
 
-def make_traffic_env(cfg: TrafficConfig = TrafficConfig()):
+def local_traffic_state(state: TrafficState, i, j) -> LocalTrafficState:
+    """Local view of a global state at intersection (i, j). ``i``/``j`` may
+    be traced, so this vmaps over a vector of agent coordinates."""
+    return LocalTrafficState(lanes=state.lanes[i, j], phase=state.phase[i, j])
+
+
+def make_multi_traffic_env(cfg: TrafficConfig, agents) -> Env:
+    """GS with an agent at every listed intersection.
+
+    ``agents``: (A, 2) int array of (i, j) coordinates. ``step`` takes (A,)
+    actions; obs / reward / info leaves carry a leading agent axis.
+    """
     G, L = cfg.grid, cfg.lane_len
-    ai, aj = cfg.agent
-    spec = EnvSpec(name="traffic-gs", obs_dim=4 * L + 1, n_actions=2,
-                   n_influence=4, dset_dim=4 * L, dset_full_dim=4 * L + 1)
+    agents = jnp.asarray(agents, jnp.int32)
+    A = agents.shape[0]
+    ais, ajs = agents[:, 0], agents[:, 1]
+    agent_mask = jnp.zeros((G, G), bool).at[ais, ajs].set(True)
+    M = 8 if cfg.ext_influence else 4
+    spec = EnvSpec(name="traffic-gs-multi", obs_dim=4 * L + 1, n_actions=2,
+                   n_influence=M, dset_dim=4 * L, dset_full_dim=4 * L + 1,
+                   n_agents=A)
 
     def observe(state: TrafficState):
-        local = state.lanes[ai, aj].reshape(-1).astype(jnp.float32)
-        return jnp.concatenate(
-            [local, state.phase[ai, aj][None].astype(jnp.float32)])
+        def one(i, j):
+            local = state.lanes[i, j].reshape(-1).astype(jnp.float32)
+            return jnp.concatenate(
+                [local, state.phase[i, j][None].astype(jnp.float32)])
+        return jax.vmap(one)(ais, ajs)
 
     def reset(key):
         k1, k2 = jax.random.split(key)
@@ -96,9 +126,9 @@ def make_traffic_env(cfg: TrafficConfig = TrafficConfig()):
         return TrafficState(lanes=lanes, phase=phase,
                             timer=jnp.zeros((G, G), jnp.int32))
 
-    def step(state: TrafficState, action, key):
+    def step(state: TrafficState, actions, key):
         lanes, phase, timer = state
-        phase = phase.at[ai, aj].set(action.astype(jnp.int8))
+        phase = phase.at[ais, ajs].set(actions.astype(jnp.int8))
         green = _green(phase, G)
 
         # crossing feasibility: downstream tail must be free (edges exit)
@@ -154,34 +184,54 @@ def make_traffic_env(cfg: TrafficConfig = TrafficConfig()):
         want_switch = (red_q > green_q) & (timer >= cfg.min_phase)
         new_phase = jnp.where(want_switch, 1 - phase, phase).astype(jnp.int8)
         new_timer = jnp.where(want_switch, 0, timer + 1)
-        new_phase = new_phase.at[ai, aj].set(phase[ai, aj])
-        new_timer = new_timer.at[ai, aj].set(0)
-
-        # reward: average speed over the agent's incoming lanes
-        n_cars = lanes[ai, aj].sum()
-        n_moved = moved[ai, aj].sum()
-        reward = jnp.where(n_cars > 0, n_moved / jnp.maximum(n_cars, 1), 1.0)
+        new_phase = jnp.where(agent_mask, phase, new_phase).astype(jnp.int8)
+        new_timer = jnp.where(agent_mask, 0, new_timer)
 
         new_state = TrafficState(lanes=new_lanes, phase=new_phase,
                                  timer=new_timer)
-        dset = lanes[ai, aj].reshape(-1).astype(jnp.float32)     # x_t
-        info = {
-            "u": inj[ai, aj].astype(jnp.float32),                # u_t (4,)
-            "dset": dset,
-            "dset_full": jnp.concatenate(
-                [dset, phase[ai, aj][None].astype(jnp.float32)]),
-            "n_cars": n_cars,
-        }
-        return new_state, observe(new_state), reward, info
+
+        def view(i, j):
+            # reward: average speed over this agent's incoming lanes
+            n_cars = lanes[i, j].sum()
+            n_moved = moved[i, j].sum()
+            reward = jnp.where(n_cars > 0,
+                               n_moved / jnp.maximum(n_cars, 1), 1.0)
+            dset = lanes[i, j].reshape(-1).astype(jnp.float32)   # x_t
+            u = inj[i, j].astype(jnp.float32)                    # u_t (4,)
+            if cfg.ext_influence:
+                u = jnp.concatenate(
+                    [u, (~dest_free[i, j]).astype(jnp.float32)])
+            obs = jnp.concatenate(
+                [new_lanes[i, j].reshape(-1).astype(jnp.float32),
+                 new_phase[i, j][None].astype(jnp.float32)])
+            info = {
+                "u": u,
+                "dset": dset,
+                "dset_full": jnp.concatenate(
+                    [dset, phase[i, j][None].astype(jnp.float32)]),
+                "n_cars": n_cars,
+            }
+            return obs, reward, info
+
+        obs, reward, info = jax.vmap(view)(ais, ajs)
+        return new_state, obs, reward, info
 
     return Env(spec=spec, reset=reset, step=step, observe=observe)
 
 
+def make_traffic_env(cfg: TrafficConfig = TrafficConfig()):
+    """Single-agent GS: the multi-agent env at ``cfg.agent``, squeezed."""
+    multi = make_multi_traffic_env(cfg, jnp.array([cfg.agent], jnp.int32))
+    return squeeze_agent_env(multi, "traffic-gs")
+
+
 def make_local_traffic_env(cfg: TrafficConfig = TrafficConfig()):
-    """LS: the agent's 4 incoming lanes; u_t drives boundary injection."""
+    """LS: the agent's 4 incoming lanes; u_t drives boundary injection (and,
+    with ``ext_influence``, blocks crossing on congested downstream tails)."""
     L = cfg.lane_len
+    M = 8 if cfg.ext_influence else 4
     spec = EnvSpec(name="traffic-ls", obs_dim=4 * L + 1, n_actions=2,
-                   n_influence=4, dset_dim=4 * L, dset_full_dim=4 * L + 1)
+                   n_influence=M, dset_dim=4 * L, dset_full_dim=4 * L + 1)
 
     def observe(state: LocalTrafficState):
         return jnp.concatenate(
@@ -197,9 +247,13 @@ def make_local_traffic_env(cfg: TrafficConfig = TrafficConfig()):
         phase = action.astype(jnp.int8)
         ns = (phase == 0)
         green = jnp.stack([ns, ns, ~ns, ~ns])                    # (4,)
-        # crossing cars exit the local region freely (open boundary)
-        new_lanes, moved, _ = _advance_lane(lanes, green)
-        inj = u.astype(bool) & ~new_lanes[:, 0]
+        # crossing cars exit the local region freely (open boundary) unless
+        # the 8-bit u_t marks the downstream tail as occupied
+        can_cross = green
+        if cfg.ext_influence:
+            can_cross = green & ~u[4:].astype(bool)
+        new_lanes, moved, _ = _advance_lane(lanes, can_cross)
+        inj = u[:4].astype(bool) & ~new_lanes[:, 0]
         new_lanes = new_lanes.at[:, 0].set(new_lanes[:, 0] | inj)
 
         n_cars = lanes.sum()

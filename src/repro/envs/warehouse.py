@@ -21,6 +21,11 @@ for the App. B-style ablation.
 
 ``vanish_after`` (paper §5.4): items disappear after exactly k steps
 (default 0 = disabled) — the finite-memory experiment's modified dynamics.
+
+Multi-agent (Distributed IALS): ``make_multi_warehouse_env(cfg, agents)``
+trains the robot of every listed region — the rest stay scripted. Agent
+coordinates are traced int arrays; the per-agent extraction vmaps over them,
+so the full 6x6 = 36-robot floor steps as one program.
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from .api import Env, EnvSpec, LocalEnv
+from .api import Env, EnvSpec, LocalEnv, squeeze_agent_env
 
 # item cell coordinates inside a 5x5 region, in fixed order:
 # top edge (0,1..3), bottom (4,1..3), left (1..3,0), right (1..3,4)
@@ -103,16 +108,34 @@ def _obs_from(pos, ages, region):
     return jnp.concatenate([bitmap, (ages > 0).astype(jnp.float32)])
 
 
-def make_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
+def local_warehouse_state(state: WarehouseState, i, j) -> LocalWarehouseState:
+    """Local view of a global state for region (i, j). ``i``/``j`` may be
+    traced, so this vmaps over a vector of agent coordinates."""
+    return LocalWarehouseState(
+        pos=state.pos[i, j],
+        items=_region_items(state.items_h, state.items_v, i, j))
+
+
+def make_multi_warehouse_env(cfg: WarehouseConfig, agents) -> Env:
+    """GS with a trained agent in every listed region.
+
+    ``agents``: (A, 2) int array of region coordinates. ``step`` takes (A,)
+    actions; obs / reward / info leaves carry a leading agent axis.
+    """
     R, S = cfg.grid, cfg.region
-    ai, aj = cfg.agent
+    agents = jnp.asarray(agents, jnp.int32)
+    A = agents.shape[0]
+    ais, ajs = agents[:, 0], agents[:, 1]
     nobs = S * S + 12
-    spec = EnvSpec(name="warehouse-gs", obs_dim=nobs, n_actions=5,
-                   n_influence=12, dset_dim=24, dset_full_dim=24 + S * S)
+    spec = EnvSpec(name="warehouse-gs-multi", obs_dim=nobs, n_actions=5,
+                   n_influence=12, dset_dim=24, dset_full_dim=24 + S * S,
+                   n_agents=A)
 
     def observe(state: WarehouseState):
-        ages = _region_items(state.items_h, state.items_v, ai, aj)
-        return _obs_from(state.pos[ai, aj], ages, S)
+        def one(i, j):
+            ages = _region_items(state.items_h, state.items_v, i, j)
+            return _obs_from(state.pos[i, j], ages, S)
+        return jax.vmap(one)(ais, ajs)
 
     def reset(key):
         k1, k2, k3 = jax.random.split(key, 3)
@@ -125,17 +148,16 @@ def make_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
 
     ii, jj = jnp.meshgrid(jnp.arange(R), jnp.arange(R), indexing="ij")
 
-    def step(state: WarehouseState, action, key):
+    def step(state: WarehouseState, actions, key):
         pos, items_h, items_v = state
-        ages_before = _region_items(items_h, items_v, ai, aj)
 
         # all regions' item views (R, R, 12)
         region_ages = jax.vmap(jax.vmap(
             lambda i, j: _region_items(items_h, items_v, i, j)))(ii, jj)
 
-        # scripted actions for every robot; agent overridden
+        # scripted actions for every robot; agents overridden
         acts = jax.vmap(jax.vmap(_greedy_action))(pos, region_ages)
-        acts = acts.at[ai, aj].set(action.astype(acts.dtype))
+        acts = acts.at[ais, ajs].set(actions.astype(acts.dtype))
 
         new_pos = jnp.clip(pos + _MOVE[acts], 0, S - 1)
 
@@ -154,10 +176,6 @@ def make_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
         collected_h = (occ_h > 0) & (items_h > 0)
         collected_v = (occ_v > 0) & (items_v > 0)
 
-        # agent reward: items the agent itself stands on (active ones)
-        agent_at = _at_item_mask(new_pos[ai, aj])
-        reward = jnp.sum(agent_at & (ages_before > 0)).astype(jnp.float32)
-
         # age / vanish / spawn
         key, kh, kv = jax.random.split(key, 3)
         def upd(items, collected, kk):
@@ -171,29 +189,48 @@ def make_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
         new_h = upd(items_h, collected_h, kh)
         new_v = upd(items_v, collected_v, kv)
 
-        # influence sources: neighbour robots standing on the agent's cells
-        # (exclude the agent's own occupancy)
-        occ_agent_region = jnp.concatenate([
-            occ_h[ai, aj], occ_h[ai + 1, aj],
-            occ_v[ai, aj], occ_v[ai, aj + 1]])
-        u = ((occ_agent_region - agent_at.astype(jnp.int32)) > 0)
-        if cfg.vanish_after > 0:
-            # §5.4 variant: the influence event is the deterministic
-            # disappearance itself (age hit the limit this step)
-            u = u | (ages_before >= cfg.vanish_after)
-
         new_state = WarehouseState(pos=new_pos, items_h=new_h, items_v=new_v)
-        at_before = _at_item_mask(pos[ai, aj])
-        dset = jnp.concatenate([(ages_before > 0).astype(jnp.float32),
-                                (at_before | agent_at).astype(jnp.float32)])
-        bitmap = jnp.zeros((S, S), jnp.float32).at[
-            pos[ai, aj, 0], pos[ai, aj, 1]].set(1.0).reshape(-1)
-        info = {"u": u.astype(jnp.float32), "dset": dset,
-                "dset_full": jnp.concatenate([dset, bitmap]),
-                "ages": ages_before}
-        return new_state, observe(new_state), reward, info
+
+        def view(i, j):
+            ages_before = region_ages[i, j]
+            agent_at = _at_item_mask(new_pos[i, j])
+            # agent reward: items the agent itself stands on (active ones)
+            reward = jnp.sum(agent_at & (ages_before > 0)).astype(jnp.float32)
+
+            # influence sources: neighbour robots standing on the agent's
+            # cells (exclude the agent's own occupancy)
+            occ_agent_region = jnp.concatenate([
+                occ_h[i, j], occ_h[i + 1, j],
+                occ_v[i, j], occ_v[i, j + 1]])
+            u = ((occ_agent_region - agent_at.astype(jnp.int32)) > 0)
+            if cfg.vanish_after > 0:
+                # §5.4 variant: the influence event is the deterministic
+                # disappearance itself (age hit the limit this step)
+                u = u | (ages_before >= cfg.vanish_after)
+
+            at_before = _at_item_mask(pos[i, j])
+            dset = jnp.concatenate(
+                [(ages_before > 0).astype(jnp.float32),
+                 (at_before | agent_at).astype(jnp.float32)])
+            bitmap = jnp.zeros((S, S), jnp.float32).at[
+                pos[i, j, 0], pos[i, j, 1]].set(1.0).reshape(-1)
+            obs = _obs_from(new_pos[i, j],
+                            _region_items(new_h, new_v, i, j), S)
+            info = {"u": u.astype(jnp.float32), "dset": dset,
+                    "dset_full": jnp.concatenate([dset, bitmap]),
+                    "ages": ages_before}
+            return obs, reward, info
+
+        obs, reward, info = jax.vmap(view)(ais, ajs)
+        return new_state, obs, reward, info
 
     return Env(spec=spec, reset=reset, step=step, observe=observe)
+
+
+def make_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
+    """Single-agent GS: the multi-agent env at ``cfg.agent``, squeezed."""
+    multi = make_multi_warehouse_env(cfg, jnp.array([cfg.agent], jnp.int32))
+    return squeeze_agent_env(multi, "warehouse-gs")
 
 
 def make_local_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):

@@ -1,0 +1,16 @@
+"""Version shims for the Pallas TPU API."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """pltpu compiler params across the TPUCompilerParams -> CompilerParams
+    rename; raises a clear error if this jax exposes neither."""
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; unsupported jax version")
+    return cls(**kwargs)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _gru_kernel(x_ref, wx_ref, wh_ref, b_ref, h0_ref, hs_ref, h_scr, *,
                 H: int, T: int):
@@ -63,7 +65,7 @@ def gru_sequence(x, wx, wh, b, h0, *, interpret: bool = True):
         out_specs=pl.BlockSpec((B, 1, H), lambda t: (0, t, 0)),
         out_shape=jax.ShapeDtypeStruct((B, T, H), x.dtype),
         scratch_shapes=[pltpu.VMEM((B, H), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, wx, wh, b, h0)

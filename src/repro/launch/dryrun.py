@@ -96,6 +96,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):        # older jax wraps it in a 1-elem list
+        ca = ca[0] if ca else {}
     hlo = analyze(compiled.as_text())
 
     counts = lm.count_params(cfg)

@@ -9,6 +9,14 @@ Pipeline per the paper (§5.1):
   3. train PPO on the chosen simulator: gs | ials | untrained-ials | f-ials
   4. periodically evaluate on the GS (the deployment environment)
 
+Multi-agent (Distributed IALS, ``--n-agents A``): one GS rollout collects
+every agent's (d_t, u_t) pairs, A per-agent AIPs train in a single batched
+pass (vmap of the training loop), PPO is parameter-shared across agents with
+the agent axis as extra batch dimension, and evaluation reports per-agent GS
+rewards. ``--n-agents 25`` on traffic = every intersection of the 5x5 grid;
+``--n-agents 36`` on warehouse = every robot region. Rollout batches are
+placed on the mesh ``data`` axis when more than one device is visible.
+
 Emits a JSON history of (iteration, wallclock, train reward, GS eval reward)
 — the learning-curves benchmark reads this.
 """
@@ -22,20 +30,46 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.core import collect, influence, ials as ials_lib
+from repro.core import collect, influence, ials as ials_lib, multi_ials
 from repro.envs.traffic import (TrafficConfig, make_traffic_env,
-                                make_local_traffic_env)
+                                make_local_traffic_env,
+                                make_multi_traffic_env)
 from repro.envs.warehouse import (WarehouseConfig, make_warehouse_env,
-                                  make_local_warehouse_env)
+                                  make_local_warehouse_env,
+                                  make_multi_warehouse_env)
+from repro.launch.mesh import make_host_mesh
 from repro.rl import ppo
 
 
-def build_domain(domain: str, vanish_after: int = 0):
+def grid_agents(grid: int, n_agents: int):
+    """First ``n_agents`` cells of a grid x grid board, row-major."""
+    cells = [(i, j) for i in range(grid) for j in range(grid)]
+    if n_agents > len(cells):
+        raise ValueError(f"n_agents={n_agents} > {grid}x{grid} grid")
+    return jnp.asarray(cells[:n_agents], jnp.int32)
+
+
+def build_domain(domain: str, vanish_after: int = 0, n_agents: int = 1):
+    """-> (gs, ls, frame_stack); gs is multi-agent when n_agents > 1."""
     if domain == "traffic":
         cfg = TrafficConfig()
-        return make_traffic_env(cfg), make_local_traffic_env(cfg), 1
+        if n_agents > 1:
+            gs = make_multi_traffic_env(cfg, grid_agents(cfg.grid, n_agents))
+        else:
+            gs = make_traffic_env(cfg)
+        return gs, make_local_traffic_env(cfg), 1
     cfg = WarehouseConfig(vanish_after=vanish_after)
-    return make_warehouse_env(cfg), make_local_warehouse_env(cfg), 8
+    if n_agents > 1:
+        gs = make_multi_warehouse_env(cfg, grid_agents(cfg.grid, n_agents))
+    else:
+        gs = make_warehouse_env(cfg)
+    return gs, make_local_warehouse_env(cfg), 8
+
+
+def _make_sim(ls, params, acfg, n_agents, **kw):
+    if n_agents > 1:
+        return multi_ials.make_multi_ials(ls, params, acfg, n_agents, **kw)
+    return ials_lib.make_ials(ls, params, acfg, **kw)
 
 
 def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
@@ -45,37 +79,68 @@ def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
     diag = {}
     if simulator == "gs":
         return gs, diag
+    A = gs.spec.n_agents
     acfg = influence.AIPConfig(
         kind=aip_kind, d_in=gs.spec.dset_dim, n_out=gs.spec.n_influence,
         hidden=64, stack=8 if aip_kind == "fnn" else 1)
     k1, k2 = jax.random.split(key)
+
+    def agent_data(n_eps):
+        data = collect.collect_dataset(gs, k1, n_episodes=n_eps,
+                                       ep_len=ep_len)
+        if A > 1:
+            data = collect.per_agent(data)      # (A, N, T, ...)
+        return data
+
     if simulator == "untrained-ials":
-        params = influence.init_aip(acfg, k2)
-        data = collect.collect_dataset(gs, k1, n_episodes=8, ep_len=ep_len)
-        diag["aip_xent"] = float(influence.xent_loss(
-            params, acfg, data["d"], data["u"]))
-        return ials_lib.make_ials(ls, params, acfg), diag
+        data = agent_data(8)
+        if A > 1:
+            params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+                jax.random.split(k2, A))
+            diag["aip_xent"] = float(jnp.mean(jax.vmap(
+                lambda p, d, u: influence.xent_loss(p, acfg, d, u))(
+                    params, data["d"], data["u"])))
+        else:
+            params = influence.init_aip(acfg, k2)
+            diag["aip_xent"] = float(influence.xent_loss(
+                params, acfg, data["d"], data["u"]))
+        return _make_sim(ls, params, acfg, A), diag
+
     t0 = time.time()
-    data = collect.collect_dataset(gs, k1, n_episodes=collect_episodes,
-                                   ep_len=ep_len)
+    data = agent_data(collect_episodes)
     if simulator == "f-ials":
-        marg = (jnp.full((gs.spec.n_influence,), fixed_marginal)
-                if fixed_marginal is not None
-                else collect.empirical_marginal(data["u"]))
-        params = influence.init_aip(acfg, k2)
-        env = ials_lib.make_ials(ls, params, acfg, fixed_marginal_vec=marg)
+        M = gs.spec.n_influence
+        if fixed_marginal is not None:
+            marg = jnp.full((A, M) if A > 1 else (M,), fixed_marginal)
+        else:
+            marg = collect.empirical_marginal(data["u"], per_agent=A > 1)
+        if A > 1:
+            params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+                jax.random.split(k2, A))
+        else:
+            params = influence.init_aip(acfg, k2)
+        env = _make_sim(ls, params, acfg, A, fixed_marginal_vec=marg)
         # XE of the fixed marginal on held-out data
         p = jnp.clip(marg, 1e-6, 1 - 1e-6)
+        if A > 1:
+            p = p[:, None, None, :]             # broadcast over (A, N, T, M)
         xe = -(data["u"] * jnp.log(p) + (1 - data["u"]) * jnp.log(1 - p))
         diag["aip_xent"] = float(xe.sum(-1).mean())
         diag["aip_train_time_s"] = time.time() - t0
         return env, diag
+
     # trained IALS
-    params, m = influence.train_aip(acfg, data["d"], data["u"], k2,
-                                    epochs=aip_epochs, window=aip_window)
+    if A > 1:
+        params, m = influence.train_aip_batched(
+            acfg, data["d"], data["u"], jax.random.split(k2, A),
+            epochs=aip_epochs, window=aip_window)
+        diag["aip_xent_per_agent"] = m["final_loss_per_agent"]
+    else:
+        params, m = influence.train_aip(acfg, data["d"], data["u"], k2,
+                                        epochs=aip_epochs, window=aip_window)
     diag["aip_xent"] = m["final_loss"]
     diag["aip_train_time_s"] = time.time() - t0
-    return ials_lib.make_ials(ls, params, acfg), diag
+    return _make_sim(ls, params, acfg, A), diag
 
 
 def main(argv=None):
@@ -86,6 +151,9 @@ def main(argv=None):
                     choices=["gs", "ials", "untrained-ials", "f-ials"])
     ap.add_argument("--aip", default=None, choices=[None, "gru", "fnn"])
     ap.add_argument("--fixed-marginal", type=float, default=None)
+    ap.add_argument("--n-agents", type=int, default=1,
+                    help="agents trained at once (25 = full 5x5 traffic "
+                         "grid, 36 = full 6x6 warehouse floor)")
     ap.add_argument("--iterations", type=int, default=40)
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--n-envs", type=int, default=16)
@@ -99,7 +167,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
-    gs, ls, frame_stack = build_domain(args.domain, args.vanish_after)
+    gs, ls, frame_stack = build_domain(args.domain, args.vanish_after,
+                                       args.n_agents)
     aip_kind = args.aip or ("gru" if args.domain == "warehouse" else "fnn")
 
     t_start = time.time()
@@ -113,24 +182,35 @@ def main(argv=None):
                          n_actions=gs.spec.n_actions,
                          frame_stack=frame_stack, n_envs=args.n_envs,
                          rollout_len=args.rollout_len,
-                         episode_len=args.episode_len)
+                         episode_len=args.episode_len,
+                         n_agents=args.n_agents)
     key, k0, k1 = jax.random.split(key, 3)
     params = ppo.init_policy(pcfg, k0)
     opt, iteration = ppo.make_train_iteration(env, pcfg)
     ost = opt.init(params)
     rs = ppo.init_rollout_state(env, pcfg, k1)
+    if len(jax.devices()) > 1 and args.n_envs % len(jax.devices()) == 0:
+        rs = ppo.shard_rollout(rs, make_host_mesh())
 
+    steps_per_iter = args.n_envs * args.rollout_len * max(args.n_agents, 1)
     history = []
     for it in range(args.iterations):
         key, k = jax.random.split(key)
         params, ost, rs, m = iteration(params, ost, rs, k)
         row = {"iter": it, "wallclock_s": round(time.time() - t_start, 2),
                "train_reward": float(m["mean_reward"]),
-               "env_steps": (it + 1) * args.n_envs * args.rollout_len}
+               "env_steps": (it + 1) * steps_per_iter}
         if it % args.eval_every == 0 or it == args.iterations - 1:
             key, ke = jax.random.split(key)
-            row["gs_eval_reward"] = ppo.evaluate(gs, pcfg, params, ke,
-                                                 n_episodes=8)
+            if args.n_agents > 1:
+                per = ppo.evaluate(gs, pcfg, params, ke, n_episodes=8,
+                                   per_agent=True)
+                row["gs_eval_reward_per_agent"] = [
+                    round(float(r), 4) for r in per]
+                row["gs_eval_reward"] = float(per.mean())
+            else:
+                row["gs_eval_reward"] = ppo.evaluate(gs, pcfg, params, ke,
+                                                     n_episodes=8)
         history.append(row)
         print(json.dumps(row))
 

@@ -6,6 +6,12 @@ k=1 in traffic). One training iteration = vectorised rollout (vmap over
 environments, lax.scan over time) + GAE + clipped-objective epochs — a single
 jitted program, so it runs identically on a GS, an IALS, or any F-IALS
 variant, and shards over the mesh's data axes at scale.
+
+Multi-agent (``PPOConfig.n_agents = A > 1``, parameter-shared): the env emits
+(A, ...) per-agent obs/rewards; the agent axis rides along as an extra batch
+dimension everywhere — one policy network, T * n_envs * A samples per update.
+``shard_rollout`` places the env batch on the mesh ``data`` axis so rollouts
+scale across devices.
 """
 from __future__ import annotations
 
@@ -38,6 +44,11 @@ class PPOConfig:
     lr: float = 3e-4
     epochs: int = 4
     n_minibatches: int = 4
+    n_agents: int = 1             # leading agent axis of the env (1 = none)
+
+    @property
+    def agent_shape(self) -> tuple:
+        return (self.n_agents,) if self.n_agents > 1 else ()
 
 
 # ---------------------------------------------------------------------------
@@ -68,26 +79,48 @@ def policy_forward(params, x):
 
 class RolloutState(NamedTuple):
     env_state: Any
-    frames: jax.Array      # (n_envs, k, obs_dim)
+    frames: jax.Array      # (n_envs, *agent_shape, k, obs_dim)
     t_in_ep: jax.Array     # (n_envs,) int32
 
 
 def _stack_obs(frames):
-    return frames.reshape(frames.shape[0], -1)
+    return frames.reshape(frames.shape[:-2] + (-1,))
 
 
 def init_rollout_state(env: Env, cfg: PPOConfig, key) -> RolloutState:
     keys = jax.random.split(key, cfg.n_envs)
     env_state = jax.vmap(env.reset)(keys)
     obs = jax.vmap(env.observe)(env_state)
-    frames = jnp.zeros((cfg.n_envs, cfg.frame_stack, cfg.obs_dim))
-    frames = frames.at[:, -1].set(obs)
+    frames = jnp.zeros((cfg.n_envs,) + cfg.agent_shape
+                       + (cfg.frame_stack, cfg.obs_dim))
+    frames = frames.at[..., -1, :].set(obs)
     return RolloutState(env_state=env_state, frames=frames,
                         t_in_ep=jnp.zeros((cfg.n_envs,), jnp.int32))
 
 
+def shard_rollout(rs: RolloutState, mesh) -> RolloutState:
+    """Place the env batch on the mesh ``data`` axis (n_envs must divide).
+
+    Under jit the computation follows the input sharding, so the whole
+    rollout (env steps included) executes data-parallel across devices.
+    No-op when the mesh has a single data device."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if mesh is None or mesh.shape.get("data", 1) == 1:
+        return rs
+    n_data = mesh.shape["data"]
+
+    def put(x):
+        spec = (P("data") if x.ndim >= 1 and x.shape[0] % n_data == 0
+                else P())
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, rs)
+
+
 def rollout(env: Env, cfg: PPOConfig, params, rs: RolloutState, key):
-    """-> (new RolloutState, batch dict with (T, n_envs, ...) leaves)."""
+    """-> (new RolloutState, batch with (T, n_envs, *agent_shape, ...)
+    leaves). The agent axis (if any) is just extra batch dimension: one
+    parameter-shared policy acts for every agent of every env copy."""
 
     def step(carry, k):
         rs = carry
@@ -95,12 +128,13 @@ def rollout(env: Env, cfg: PPOConfig, params, rs: RolloutState, key):
         x = _stack_obs(rs.frames)
         logits, value = policy_forward(params, x)
         a = jax.random.categorical(ka, logits)
-        logp = jax.nn.log_softmax(logits)[jnp.arange(cfg.n_envs), a]
+        logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
+                                   a[..., None], -1)[..., 0]
 
         keys = jax.random.split(ks, cfg.n_envs)
         env_state, obs, r, _ = jax.vmap(env.step)(rs.env_state, a, keys)
         frames = jnp.concatenate(
-            [rs.frames[:, 1:], obs[:, None]], axis=1)
+            [rs.frames[..., 1:, :], obs[..., None, :]], axis=-2)
 
         t = rs.t_in_ep + 1
         done = t >= cfg.episode_len
@@ -111,12 +145,15 @@ def rollout(env: Env, cfg: PPOConfig, params, rs: RolloutState, key):
                 done.reshape((-1,) + (1,) * (n.ndim - 1)), i, n),
             env_state, reset_state)
         obs0 = jax.vmap(env.observe)(env_state)
-        frames0 = jnp.zeros_like(frames).at[:, -1].set(obs0)
-        frames = jnp.where(done[:, None, None], frames0, frames)
+        frames0 = jnp.zeros_like(frames).at[..., -1, :].set(obs0)
+        done_f = done.reshape((-1,) + (1,) * (frames.ndim - 1))
+        frames = jnp.where(done_f, frames0, frames)
         t = jnp.where(done, 0, t)
 
+        done_b = jnp.broadcast_to(
+            done.reshape((-1,) + (1,) * (r.ndim - 1)), r.shape)
         out = {"x": x, "a": a, "logp": logp, "v": value, "r": r,
-               "done": done.astype(jnp.float32)}
+               "done": done_b.astype(jnp.float32)}
         return RolloutState(env_state, frames, t), out
 
     keys = jax.random.split(key, cfg.rollout_len)
@@ -170,20 +207,20 @@ def make_train_iteration(env: Env, cfg: PPOConfig):
         k_roll, k_upd = jax.random.split(key)
         rs, batch, v_last = rollout(env, cfg, params, rs, k_roll)
         adv, ret = gae(batch, v_last, cfg.gamma, cfg.lam)
-        T, N = batch["a"].shape
+        total = batch["a"].size          # T * n_envs * n_agents samples
         flat = {
-            "x": batch["x"].reshape(T * N, -1),
-            "a": batch["a"].reshape(T * N),
-            "logp": batch["logp"].reshape(T * N),
-            "adv": adv.reshape(T * N),
-            "ret": ret.reshape(T * N),
+            "x": batch["x"].reshape(total, -1),
+            "a": batch["a"].reshape(total),
+            "logp": batch["logp"].reshape(total),
+            "adv": adv.reshape(total),
+            "ret": ret.reshape(total),
         }
         n_mb = cfg.n_minibatches
-        mb_size = (T * N) // n_mb
+        mb_size = total // n_mb
 
         def epoch(carry, k):
             params, opt_state = carry
-            perm = jax.random.permutation(k, T * N)[:n_mb * mb_size]
+            perm = jax.random.permutation(k, total)[:n_mb * mb_size]
             perm = perm.reshape(n_mb, mb_size)
 
             def mb_step(carry, idx):
@@ -209,28 +246,34 @@ def make_train_iteration(env: Env, cfg: PPOConfig):
 
 
 def evaluate(env: Env, cfg: PPOConfig, params, key, *, n_episodes: int = 8,
-             ep_len: int | None = None) -> float:
+             ep_len: int | None = None, per_agent: bool = False):
     """Mean per-step reward of the greedy policy on ``env`` (the paper's
-    periodic evaluation on the GS)."""
+    periodic evaluation on the GS). With ``per_agent`` on a multi-agent env,
+    returns the (n_agents,) per-agent means instead of the overall mean."""
     ep_len = ep_len or cfg.episode_len
+    ash = cfg.agent_shape
 
     def episode(key):
         k0, key = jax.random.split(key)
         state = env.reset(k0)
-        frames = jnp.zeros((cfg.frame_stack, cfg.obs_dim))
-        frames = frames.at[-1].set(env.observe(state))
+        frames = jnp.zeros(ash + (cfg.frame_stack, cfg.obs_dim))
+        frames = frames.at[..., -1, :].set(env.observe(state))
 
         def step(carry, k):
             state, frames = carry
-            x = frames.reshape(1, -1)
+            x = frames.reshape(ash + (-1,)) if ash else frames.reshape(1, -1)
             logits, _ = policy_forward(params, x)
-            a = jnp.argmax(logits[0])
+            a = (jnp.argmax(logits, -1) if ash else jnp.argmax(logits[0]))
             state, obs, r, _ = env.step(state, a, k)
-            frames = jnp.concatenate([frames[1:], obs[None]], axis=0)
+            frames = jnp.concatenate(
+                [frames[..., 1:, :], obs[..., None, :]], axis=-2)
             return (state, frames), r
 
         _, rs = lax.scan(step, (state, frames), jax.random.split(key, ep_len))
-        return rs.mean()
+        return rs.mean(axis=0)        # () or (n_agents,)
 
     keys = jax.random.split(key, n_episodes)
-    return float(jax.jit(jax.vmap(episode))(keys).mean())
+    rewards = jax.jit(jax.vmap(episode))(keys).mean(axis=0)
+    if per_agent and ash:
+        return rewards
+    return float(rewards.mean())

@@ -5,5 +5,26 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# Identical programs re-jitted from fresh closures (every test builds its own
+# env/step fns) hit this cache instead of recompiling — cuts the tier-1 wall
+# clock severalfold, both within a run and across runs.
+jax.config.update("jax_compilation_cache_dir", "/tmp/repro-jax-test-cache")
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _force_cpu():
+    """Belt-and-braces: some modules re-touch jax config at import time."""
+    jax.config.update("jax_platform_name", "cpu")
+    yield
+
+
+@pytest.fixture(scope="session")
+def small_sizes():
+    """Default scale for new tests: keep jit times in the tens of ms."""
+    return dict(n_envs=4, rollout_len=8, ep_len=16, n_episodes=4,
+                hidden=16, epochs=2)

@@ -1,0 +1,71 @@
+"""Pure-pytest fallback for ``hypothesis`` (not installed in this image).
+
+Test modules guard their import:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypcompat import given, settings, st
+
+When hypothesis is missing, ``@given`` degrades to a deterministic
+``pytest.mark.parametrize`` over the strategy's bounds, so every property's
+core assertion still runs as a plain pytest case; ``settings`` becomes a
+no-op.
+"""
+from __future__ import annotations
+
+import itertools
+
+import pytest
+
+
+class _Strategy:
+    def __init__(self, examples):
+        # dedupe, preserving order (e.g. integers(0, 1) -> [0, 1])
+        seen, out = set(), []
+        for e in examples:
+            if e not in seen:
+                seen.add(e)
+                out.append(e)
+        self.examples = out
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=0):
+        return _Strategy([min_value, max_value])
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy([min_value, max_value])
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+    @staticmethod
+    def sampled_from(elements):
+        return _Strategy(list(elements))
+
+
+st = _Strategies()
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**kwargs):
+    names = list(kwargs)
+    grids = [kwargs[n].examples for n in names]
+    rows = list(itertools.product(*grids))
+
+    def deco(fn):
+        if len(names) == 1:
+            return pytest.mark.parametrize(
+                names[0], [r[0] for r in rows])(fn)
+        return pytest.mark.parametrize(",".join(names), rows)(fn)
+
+    return deco

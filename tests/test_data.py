@@ -1,7 +1,11 @@
 """Data pipeline: determinism, host sharding, file source."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pure-pytest fallback (hypcompat)
+    from hypcompat import given, settings, st
 
 from repro.data.pipeline import DataConfig, TokenPipeline, write_token_file
 

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pure-pytest fallback (hypcompat)
+    from hypcompat import given, settings, st
 
 from repro.envs.traffic import (TrafficConfig, make_traffic_env,
                                 make_local_traffic_env)
@@ -22,7 +26,7 @@ def test_traffic_occupancy_is_boolean_and_bounded(seed, action):
     env = make_traffic_env()
     key = jax.random.PRNGKey(seed)
     s = env.reset(key)
-    s2, obs, r, info = env.step(s, jnp.int32(action), key)
+    s2, obs, r, info = jax.jit(env.step)(s, jnp.int32(action), key)
     assert s2.lanes.dtype == jnp.bool_
     assert 0.0 <= float(r) <= 1.0
     assert obs.shape == (env.spec.obs_dim,)
@@ -84,7 +88,7 @@ def test_warehouse_robots_stay_in_region(seed, action):
     env = make_warehouse_env()
     key = jax.random.PRNGKey(seed)
     s = env.reset(key)
-    s2, obs, r, info = env.step(s, jnp.int32(action), key)
+    s2, obs, r, info = jax.jit(env.step)(s, jnp.int32(action), key)
     assert bool((s2.pos >= 0).all()) and bool((s2.pos <= 4).all())
     assert float(r) >= 0.0
     assert info["u"].shape == (12,)
@@ -97,9 +101,10 @@ def test_warehouse_vanish_after_bounds_age(seed):
     env = make_warehouse_env(WarehouseConfig(vanish_after=8))
     key = jax.random.PRNGKey(seed)
     s = env.reset(key)
+    step = jax.jit(env.step)
     for t in range(12):
         key, k = jax.random.split(key)
-        s, _, _, _ = env.step(s, jnp.int32(0), k)
+        s, _, _, _ = step(s, jnp.int32(0), k)
     assert int(s.items_h.max()) <= 8
     assert int(s.items_v.max()) <= 8
 

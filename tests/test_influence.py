@@ -31,6 +31,7 @@ def test_fnn_aip_learns_memoryless_rule():
     assert acc > 0.97, acc
 
 
+@pytest.mark.slow
 def test_gru_aip_learns_memoryful_rule_fnn_cannot():
     key = jax.random.PRNGKey(1)
     d, u = _synthetic_memoryful(key)
@@ -46,6 +47,7 @@ def test_gru_aip_learns_memoryful_rule_fnn_cannot():
     assert acc_fnn < 0.8, acc_fnn
 
 
+@pytest.mark.slow
 def test_fnn_stack_k_matches_theorem1_window():
     """A k-stacked FNN AIP suffices when the dependence is k steps
     (Theorem 1: AIP memory need == agent/window memory)."""

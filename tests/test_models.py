@@ -13,6 +13,9 @@ from repro.launch import steps as steps_lib
 from repro.models import lm
 from repro.optim.adamw import adamw
 
+# every arch jit-compiles a full model: minutes in aggregate -> tier-2
+pytestmark = pytest.mark.slow
+
 ARCHS = list_configs()
 
 

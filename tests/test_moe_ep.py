@@ -13,6 +13,7 @@ import pytest
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
+@pytest.mark.slow
 def test_single_device_fallback_matches_gspmd():
     """Without a mesh, moe_apply_ep must be exactly moe_apply."""
     from repro.nn import moe as moe_lib

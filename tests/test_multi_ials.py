@@ -1,0 +1,271 @@
+"""Multi-agent batched IALS: GS<->LS consistency, shapes, determinism,
+F-IALS branches — the Distributed-IALS construction's correctness suite."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import collect, ials, influence, multi_ials
+from repro.envs.traffic import (TrafficConfig, make_local_traffic_env,
+                                make_multi_traffic_env, make_traffic_env,
+                                local_traffic_state)
+from repro.envs.warehouse import (WarehouseConfig, make_local_warehouse_env,
+                                  make_multi_warehouse_env,
+                                  local_warehouse_state)
+
+AGENTS4 = jnp.array([[0, 0], [1, 3], [2, 2], [4, 1]])
+
+
+def _gs_rollout(gs, key, T, n_actions):
+    """-> (initial state, (T,) or (T, A) actions, stacked step outputs)."""
+    k0, key = jax.random.split(key)
+    s0 = gs.reset(k0)
+    a_shape = (T, gs.spec.n_agents) if gs.spec.n_agents > 1 else (T,)
+    acts = jax.random.randint(key, a_shape, 0, n_actions)
+
+    def step(carry, xs):
+        s = carry
+        a, k = xs
+        s, obs, r, info = gs.step(s, a, k)
+        return s, {"obs": obs, "r": r, "u": info["u"]}
+
+    _, traj = jax.lax.scan(step, s0, (acts, jax.random.split(key, T)))
+    return s0, acts, traj
+
+
+def _ls_replay(ls, s_loc, acts, us):
+    """Replay recorded (a_t, u_t) through a local simulator."""
+    def step(carry, xs):
+        s = carry
+        a, u = xs
+        s, obs, r, _ = ls.step(s, a, u, jax.random.PRNGKey(0))
+        return s, {"obs": obs, "r": r}
+
+    _, traj = jax.lax.scan(step, s_loc, (acts, us))
+    return traj
+
+
+# ---------------------------------------------------------------------------
+# GS <-> LS consistency: the true u_t drives the LS onto the GS trajectory
+# ---------------------------------------------------------------------------
+
+def test_traffic_ls_replay_matches_gs():
+    """With the 8-bit (ext_influence) u_t, replaying a GS rollout's true
+    influence sources through the LS reproduces the agent's observations and
+    rewards exactly — the defining property of the IALS construction."""
+    cfg = TrafficConfig(ext_influence=True)
+    gs = make_traffic_env(cfg)
+    ls = make_local_traffic_env(cfg)
+    key = jax.random.PRNGKey(0)
+    s0, acts, traj = _gs_rollout(gs, key, T=24, n_actions=2)
+    ai, aj = cfg.agent
+    s_loc = local_traffic_state(s0, ai, aj)
+    replay = _ls_replay(ls, s_loc, acts, traj["u"])
+    assert jnp.array_equal(replay["obs"], traj["obs"])
+    assert jnp.allclose(replay["r"], traj["r"], atol=1e-6)
+
+
+def test_traffic_multi_ls_replay_matches_gs_per_agent():
+    """Same exactness for every agent of a multi-agent GS rollout."""
+    cfg = TrafficConfig(ext_influence=True)
+    gs = make_multi_traffic_env(cfg, AGENTS4)
+    ls = make_local_traffic_env(cfg)
+    key = jax.random.PRNGKey(1)
+    s0, acts, traj = _gs_rollout(gs, key, T=20, n_actions=2)
+
+    def replay_agent(i, j, a_seq, u_seq):
+        return _ls_replay(ls, local_traffic_state(s0, i, j), a_seq, u_seq)
+
+    replay = jax.vmap(replay_agent)(
+        AGENTS4[:, 0], AGENTS4[:, 1],
+        jnp.moveaxis(acts, 1, 0), jnp.moveaxis(traj["u"], 1, 0))
+    assert jnp.array_equal(replay["obs"],
+                           jnp.moveaxis(traj["obs"], 1, 0))
+    assert jnp.allclose(replay["r"], jnp.moveaxis(traj["r"], 1, 0),
+                        atol=1e-6)
+
+
+def test_warehouse_ls_replay_matches_gs():
+    """Warehouse replay is exact modulo item spawns (independent noise in
+    both simulators), so test with spawning disabled."""
+    cfg = WarehouseConfig(p_item=0.0)
+    gs = make_multi_warehouse_env(cfg, AGENTS4)
+    ls = make_local_warehouse_env(cfg)
+    key = jax.random.PRNGKey(2)
+    s0, acts, traj = _gs_rollout(gs, key, T=16, n_actions=5)
+
+    def replay_agent(i, j, a_seq, u_seq):
+        return _ls_replay(ls, local_warehouse_state(s0, i, j), a_seq, u_seq)
+
+    replay = jax.vmap(replay_agent)(
+        AGENTS4[:, 0], AGENTS4[:, 1],
+        jnp.moveaxis(acts, 1, 0), jnp.moveaxis(traj["u"], 1, 0))
+    assert jnp.array_equal(replay["obs"],
+                           jnp.moveaxis(traj["obs"], 1, 0))
+    assert jnp.allclose(replay["r"], jnp.moveaxis(traj["r"], 1, 0),
+                        atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Multi-agent GS invariants
+# ---------------------------------------------------------------------------
+
+def test_multi_gs_shapes_and_single_agent_equivalence():
+    cfg = TrafficConfig()
+    multi = make_multi_traffic_env(cfg, jnp.array([cfg.agent]))
+    single = make_traffic_env(cfg)
+    key = jax.random.PRNGKey(3)
+    sm, ss = multi.reset(key), single.reset(key)
+    am = jnp.zeros((1,), jnp.int32)
+    sm2, om, rm, im = multi.step(sm, am, key)
+    ss2, os_, rs_, is_ = single.step(ss, jnp.int32(0), key)
+    assert om.shape == (1, single.spec.obs_dim)
+    # the single-agent env is the squeezed 1-agent multi env
+    assert jnp.array_equal(om[0], os_)
+    assert float(rm[0]) == float(rs_)
+    assert jnp.array_equal(im["u"][0], is_["u"])
+
+
+def test_multi_warehouse_gs_shapes():
+    cfg = WarehouseConfig()
+    env = make_multi_warehouse_env(cfg, AGENTS4)
+    key = jax.random.PRNGKey(4)
+    s = env.reset(key)
+    s2, obs, r, info = jax.jit(env.step)(s, jnp.zeros((4,), jnp.int32), key)
+    assert obs.shape == (4, env.spec.obs_dim)
+    assert r.shape == (4,)
+    assert info["u"].shape == (4, 12)
+    assert info["dset"].shape == (4, 24)
+    assert env.spec.n_agents == 4
+
+
+# ---------------------------------------------------------------------------
+# multi_ials: shapes, determinism, batched == loop
+# ---------------------------------------------------------------------------
+
+def _traffic_multi_ials(A=4, **kw):
+    ls = make_local_traffic_env()
+    acfg = influence.AIPConfig(kind="gru", d_in=ls.spec.dset_dim,
+                               n_out=ls.spec.n_influence, hidden=8)
+    params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+        jax.random.split(jax.random.PRNGKey(0), A))
+    return ls, acfg, params, multi_ials.make_multi_ials(
+        ls, params, acfg, A, **kw)
+
+
+def test_multi_ials_shapes_and_determinism():
+    ls, acfg, params, env = _traffic_multi_ials()
+    key = jax.random.PRNGKey(5)
+    s = env.reset(key)
+    acts = jnp.zeros((4,), jnp.int32)
+    s2, obs, r, info = jax.jit(env.step)(s, acts, key)
+    assert obs.shape == (4, ls.spec.obs_dim)
+    assert r.shape == (4,)
+    assert info["u"].shape == (4, ls.spec.n_influence)
+    assert info["u_probs"].shape == (4, ls.spec.n_influence)
+    assert env.observe(s2).shape == (4, ls.spec.obs_dim)
+    # same key -> identical transition
+    s3, obs3, r3, _ = jax.jit(env.step)(s, acts, key)
+    assert jnp.array_equal(obs, obs3) and jnp.array_equal(r, r3)
+
+
+def test_multi_ials_agent_i_matches_single_ials():
+    """Agent i of the batched construction == a single IALS built from the
+    same AIP, stepped with the same key."""
+    ls, acfg, params, env = _traffic_multi_ials()
+    key = jax.random.PRNGKey(6)
+    s = env.reset(key)
+    acts = jnp.array([0, 1, 0, 1], jnp.int32)
+    keys = jax.random.split(key, 4)
+    s2, obs, r, info = env.step(s, acts, key)
+    for i in (0, 2):
+        p_i = jax.tree_util.tree_map(lambda l: l[i], params)
+        single = ials.make_ials(ls, p_i, acfg)
+        s_i = ials.IALSState(
+            ls_state=jax.tree_util.tree_map(lambda l: l[i], s.ls_state),
+            aip_state=s.aip_state[i])
+        _, obs_i, r_i, info_i = single.step(s_i, acts[i], keys[i])
+        assert jnp.array_equal(obs_i, obs[i])
+        assert jnp.array_equal(info_i["u"], info["u"][i])
+
+
+def test_multi_ials_vmaps_over_env_batch():
+    """The A-agent IALS itself vmaps over an env batch (PPO's layout)."""
+    _, _, _, env = _traffic_multi_ials()
+    keys = jax.random.split(jax.random.PRNGKey(7), 8)
+    states = jax.vmap(env.reset)(keys)
+    acts = jnp.zeros((8, 4), jnp.int32)
+    s2, obs, r, info = jax.jit(jax.vmap(env.step))(states, acts, keys)
+    assert obs.shape == (8, 4, env.spec.obs_dim)
+    assert r.shape == (8, 4)
+
+
+# ---------------------------------------------------------------------------
+# F-IALS branches (fixed marginal / fixed per-head vector)
+# ---------------------------------------------------------------------------
+
+def _u_rate(env, key, A, T=192):
+    s = env.reset(key)
+
+    def step(carry, k):
+        s = carry
+        s, _, _, info = env.step(s, jnp.zeros((A,), jnp.int32), k)
+        return s, info["u"]
+
+    _, us = jax.lax.scan(step, s, jax.random.split(key, T))
+    return us
+
+
+def test_f_ials_fixed_marginal_scalar():
+    _, _, _, env = _traffic_multi_ials(fixed_marginal=0.3)
+    us = _u_rate(env, jax.random.PRNGKey(8), A=4)
+    assert abs(float(us.mean()) - 0.3) < 0.05
+
+
+def test_f_ials_fixed_marginal_vec_per_agent():
+    """(A, M) per-agent marginals: each agent's LS sees its own rate."""
+    marg = jnp.stack([jnp.full((4,), p) for p in (0.05, 0.2, 0.5, 0.8)])
+    _, _, _, env = _traffic_multi_ials(fixed_marginal_vec=marg)
+    us = _u_rate(env, jax.random.PRNGKey(9), A=4)   # (T, A, M)
+    rates = us.mean(axis=(0, 2))
+    assert jnp.all(jnp.abs(rates - jnp.array([0.05, 0.2, 0.5, 0.8])) < 0.07)
+
+
+def test_single_ials_fixed_marginal_vec_branch():
+    """core/ials.py fixed_marginal_vec branch: per-head probabilities."""
+    ls = make_local_traffic_env()
+    acfg = influence.AIPConfig(kind="fnn", d_in=ls.spec.dset_dim,
+                               n_out=4, hidden=8, stack=1)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    vec = jnp.array([0.0, 1.0, 0.0, 1.0])
+    env = ials.make_ials(ls, params, acfg, fixed_marginal_vec=vec)
+    key = jax.random.PRNGKey(10)
+    s = env.reset(key)
+    for t in range(8):
+        key, k = jax.random.split(key)
+        s, _, _, info = jax.jit(env.step)(s, jnp.int32(0), k)
+        assert jnp.array_equal(info["u_probs"], vec)
+        assert jnp.array_equal(info["u"], vec)   # p in {0,1} is deterministic
+
+
+# ---------------------------------------------------------------------------
+# Batched AIP training
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_aip_batched_matches_loop():
+    """vmapped batched fit == fitting each agent's AIP separately."""
+    key = jax.random.PRNGKey(11)
+    A, N, T, D, M = 3, 8, 12, 6, 2
+    d = jax.random.bernoulli(key, 0.5, (A, N, T, D)).astype(jnp.float32)
+    u = d[..., :M]
+    acfg = influence.AIPConfig(kind="fnn", d_in=D, n_out=M, hidden=8,
+                               stack=1)
+    keys = jax.random.split(jax.random.PRNGKey(12), A)
+    bp, bm = influence.train_aip_batched(acfg, d, u, keys, epochs=3)
+    assert len(bm["final_loss_per_agent"]) == A
+    for i in range(A):
+        sp, sm = influence.train_aip(acfg, d[i], u[i], keys[i], epochs=3)
+        assert abs(sm["final_loss"] - bm["final_loss_per_agent"][i]) < 1e-4
+        for bl, sl in zip(jax.tree_util.tree_leaves(bp),
+                          jax.tree_util.tree_leaves(sp)):
+            assert jnp.allclose(bl[i], sl, atol=1e-5)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pure-pytest fallback (hypcompat)
+    from hypcompat import given, settings, st
 
 from repro.optim.adamw import (adamw, clip_by_global_norm, cosine_schedule,
                                global_norm)

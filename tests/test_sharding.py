@@ -21,6 +21,7 @@ class _FakeMesh:
     shape = {"pod": 2, "data": 16, "model": 16}
 
 
+@pytest.mark.slow
 def test_param_specs_respect_divisibility_all_archs():
     from repro.distributed.sharding import param_specs
     mesh = _FakeMesh()

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pure-pytest fallback (hypcompat)
+    from hypcompat import given, settings, st
 
 from repro.nn.ssm import (mlstm_apply, mlstm_init, mlstm_init_state,
                           mlstm_step, mamba_apply, mamba_init,
@@ -34,6 +38,7 @@ def test_chunkwise_state_handoff_matches():
     assert float(jnp.abs(st.m - st2.m).max()) < 1e-6
 
 
+@pytest.mark.slow
 @given(scale=st.floats(0.1, 6.0), seed=st.integers(0, 100))
 @settings(**SET)
 def test_chunkwise_stable_under_extreme_gates(scale, seed):
@@ -48,6 +53,7 @@ def test_chunkwise_stable_under_extreme_gates(scale, seed):
                for l in jax.tree_util.tree_leaves(g))
 
 
+@pytest.mark.slow
 @given(seed=st.integers(0, 200))
 @settings(**SET)
 def test_mamba_full_matches_step(seed):

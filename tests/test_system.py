@@ -11,6 +11,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import collect, influence, ials
+
+# full GS collections + AIP fits + PPO iterations: minutes -> tier-2
+pytestmark = pytest.mark.slow
 from repro.envs.traffic import make_traffic_env, make_local_traffic_env
 from repro.envs.warehouse import make_warehouse_env, make_local_warehouse_env
 from repro.rl import ppo
