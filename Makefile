@@ -14,4 +14,9 @@ bench-quick:
 multi-agent-bench:
 	$(PY) -m benchmarks.run --quick --only multi_agent_throughput
 
-.PHONY: test-fast test-all bench-quick multi-agent-bench
+# Regression gate: re-measure the throughput benches and fail on a >30%
+# steps/s drop vs the committed results/bench baselines (side-effect-free).
+bench-check:
+	$(PY) -m benchmarks.run --check
+
+.PHONY: test-fast test-all bench-quick multi-agent-bench bench-check

@@ -26,7 +26,7 @@ def run(quick: bool = False):
     out = []
     for domain in ("traffic", "warehouse"):
         key = jax.random.PRNGKey(1)
-        sims, ls, (aip, aip0, acfg), data, diag = build_sims(
+        sims, ls, (aip, aip0, acfg), data, diag, _bls = build_sims(
             domain, key, collect_episodes=8 if quick else 48)
         # held-out data from the GS
         held = collect.collect_dataset(sims["gs"], jax.random.PRNGKey(123),

@@ -46,6 +46,28 @@ def run(quick: bool = False):
     out.append(row("kernel/gru_sequence", us_ref,
                    {"max_err_vs_ref": float(jnp.abs(hs_k - hs_r).max())}))
 
+    # fused aip step (the IALS tick: GRU cell + head + sigmoid + draw)
+    from repro.kernels.aip_step import aip_step as aip_kernel
+    D, Hh, M, Bb = 24, 64, 12, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 7)
+    d = jax.random.normal(ks[0], (Bb, D))
+    h = jax.random.normal(ks[1], (Bb, Hh)) * 0.3
+    wx = jax.random.normal(ks[2], (D, 3 * Hh)) * 0.2
+    wh = jax.random.normal(ks[3], (Hh, 3 * Hh)) * 0.2
+    b = jnp.zeros((3 * Hh,))
+    hw = jax.random.normal(ks[4], (Hh, M)) * 0.2
+    hb = jnp.zeros((M,))
+    bits = jax.random.bits(ks[5], (Bb, M), jnp.uint32)
+    h2k, lgk, uk = aip_kernel(d, h, wx, wh, b, hw, hb, bits,
+                              interpret=True)
+    h2r, lgr, ur = ref.aip_step_ref(d, h, wx, wh, b, hw, hb, bits)
+    us_ref = time_fn(jax.jit(lambda d, h, bits: ref.aip_step_ref(
+        d, h, wx, wh, b, hw, hb, bits)), d, h, bits, warmup=1, iters=10)
+    out.append(row("kernel/aip_step", us_ref,
+                   {"max_err_vs_ref": float(jnp.abs(lgk - lgr).max()),
+                    "u_bits_equal": bool(jnp.array_equal(uk, ur)),
+                    "note": "us= jnp oracle (the CPU dispatch path)"}))
+
     # rmsnorm
     x = jax.random.normal(key, (4096, 512), jnp.bfloat16)
     g = jnp.ones((512,))

@@ -42,11 +42,13 @@ def run(quick: bool = False):
     iters = 6 if quick else 16
     for domain in ("traffic", "warehouse"):
         key = jax.random.PRNGKey(2)
-        sims, ls, (aip, aip0, acfg), data, diag = build_sims(
+        sims, ls, (aip, aip0, acfg), data, diag, bls = build_sims(
             domain, key, collect_episodes=8 if quick else 48)
         marg = collect.empirical_marginal(data["u"])
-        sims["f-ials"] = ials_lib.make_ials(ls, aip0, acfg,
-                                            fixed_marginal_vec=marg)
+        # batched engine like the other IALS rows, so wallclock is
+        # engine-vs-engine rather than engine-vs-vmap-adapter
+        sims["f-ials"] = ials_lib.make_batched_ials(bls, aip0, acfg,
+                                                    fixed_marginal_vec=marg)
         fs = 8 if domain == "warehouse" else 1
         pcfg = ppo.PPOConfig(obs_dim=sims["gs"].spec.obs_dim,
                              n_actions=sims["gs"].spec.n_actions,

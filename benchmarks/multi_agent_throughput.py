@@ -4,8 +4,10 @@ Aggregate agent-steps/second for, per domain:
 
   gs            the full global simulator (one agent extracted)
   gs-multi      the global simulator with every region as an agent
-  ials-1        a single local IALS (the paper's Fig. 3/5 setting)
-  multi-ials    N local IALS + N AIPs stacked into one vmapped program
+  ials-1        a single local IALS on the fused batched engine
+  multi-ials    N local IALS + N AIPs as ONE fused-step batched program
+                (native BatchedEnv: bulk random bits, fused AIP tick,
+                one vectorized LS transition for all N·B lanes)
   loop-ials     the same N simulators stepped in a Python loop — what the
                 batched construction replaces (dispatch-bound)
 
@@ -17,31 +19,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from .common import row, save_json, time_fn
-
-
-def rollout_fn(env, n_envs: int, T: int):
-    a_shape = ((n_envs, env.spec.n_agents) if env.spec.n_agents > 1
-               else (n_envs,))
-
-    def run(key):
-        keys = jax.random.split(key, n_envs)
-        state = jax.vmap(env.reset)(keys)
-
-        def step(carry, k):
-            state = carry
-            ka, ks = jax.random.split(k)
-            a = jax.random.randint(ka, a_shape, 0, env.spec.n_actions)
-            state, obs, r, _ = jax.vmap(env.step)(
-                state, a, jax.random.split(ks, n_envs))
-            return state, r
-
-        _, rs = lax.scan(step, state, jax.random.split(key, T))
-        return rs.sum()
-
-    return jax.jit(run)
+from .simulator_throughput import rollout_fn
 
 
 def loop_rollout(single_envs, n_envs: int, T: int):
@@ -70,9 +50,11 @@ def loop_rollout(single_envs, n_envs: int, T: int):
 def run(quick: bool = False):
     from repro.core import collect, influence, ials as ials_lib, multi_ials
     from repro.envs.traffic import (TrafficConfig, make_traffic_env,
+                                    make_batched_local_traffic_env,
                                     make_local_traffic_env,
                                     make_multi_traffic_env)
     from repro.envs.warehouse import (WarehouseConfig, make_warehouse_env,
+                                      make_batched_local_warehouse_env,
                                       make_local_warehouse_env,
                                       make_multi_warehouse_env)
 
@@ -89,6 +71,7 @@ def run(quick: bool = False):
             gs = make_traffic_env(cfg)
             gs_multi = make_multi_traffic_env(cfg, agents)
             ls = make_local_traffic_env(cfg)
+            bls = make_batched_local_traffic_env(cfg)
             aip_kind, stack = "fnn", 8
         else:
             cfg = WarehouseConfig()
@@ -97,6 +80,7 @@ def run(quick: bool = False):
             gs = make_warehouse_env(cfg)
             gs_multi = make_multi_warehouse_env(cfg, agents)
             ls = make_local_warehouse_env(cfg)
+            bls = make_batched_local_warehouse_env(cfg)
             aip_kind, stack = "gru", 1
         A = len(agents)
 
@@ -115,8 +99,9 @@ def run(quick: bool = False):
         sims = {
             "gs": (gs, A),          # one global tick services all A regions
             "gs-multi": (gs_multi, A),
-            "ials-1": (ials_lib.make_ials(ls, aip0, acfg), 1),
-            "multi-ials": (multi_ials.make_multi_ials(ls, aips, acfg, A), A),
+            "ials-1": (ials_lib.make_batched_ials(bls, aip0, acfg), 1),
+            "multi-ials": (multi_ials.make_batched_multi_ials(
+                bls, aips, acfg, A), A),
         }
         rates = {}
         for name, (env, agents_per_step) in sims.items():

@@ -10,25 +10,31 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+
+from repro.envs.api import as_batched, env_rollout
 
 from .common import build_sims, row, save_json, time_fn
 
 
-def rollout_fn(env, n_envs: int, T: int):
+def rollout_fn(env, n_envs: int, T: int, *, unroll: int = 8):
+    """Random-policy rollout through the batched env protocol: a native
+    BatchedEnv (the fused IALS engine) rolls the whole horizon in one
+    ``env_rollout`` call — its native rollout when it has one, an unrolled
+    scan of ``step`` otherwise (the two agree bitwise); a scalar Env (the
+    GS) goes through the vmap adapter. The reset, bulk action draw, and
+    per-step keys come from independent subkeys (a single key used to
+    seed reset and steps was the old harness's PRNG-reuse bug)."""
+    benv = as_batched(env)
+    a_shape = ((n_envs, env.spec.n_agents) if env.spec.n_agents > 1
+               else (n_envs,))
+
     def run(key):
-        keys = jax.random.split(key, n_envs)
-        state = jax.vmap(env.reset)(keys)
-
-        def step(carry, k):
-            state = carry
-            ka, ks = jax.random.split(k)
-            a = jax.random.randint(ka, (n_envs,), 0, env.spec.n_actions)
-            state, obs, r, _ = jax.vmap(env.step)(
-                state, a, jax.random.split(ks, n_envs))
-            return state, r
-
-        _, rs = lax.scan(step, state, jax.random.split(key, T))
+        k_reset, k_act, k_steps = jax.random.split(key, 3)
+        state = benv.reset(k_reset, n_envs)
+        acts = jax.random.randint(k_act, (T,) + a_shape, 0,
+                                  env.spec.n_actions)   # bulk, not per tick
+        _, rs = env_rollout(benv, state, acts,
+                            jax.random.split(k_steps, T), unroll=unroll)
         return rs.sum()
 
     return jax.jit(run)
@@ -39,8 +45,8 @@ def run(quick: bool = False):
     n_envs, T = (8, 64) if quick else (16, 256)
     for domain in ("traffic", "warehouse"):
         key = jax.random.PRNGKey(0)
-        sims, *_ , diag = build_sims(domain, key,
-                                     collect_episodes=8 if quick else 48)
+        sims, *_ = build_sims(domain, key,
+                              collect_episodes=8 if quick else 48)
         rates = {}
         for name, env in sims.items():
             fn = rollout_fn(env, n_envs, T)

@@ -17,6 +17,16 @@ The whole step is pure JAX, so IALS rollouts vmap over thousands of
 environments and shard over the ``data``/``pod`` mesh axes — each pod
 simulates its own batch; this is the framework's scaling story for the
 paper's "make data generation fast" contribution.
+
+Two constructions:
+  - ``make_ials``: the scalar ``Env`` protocol (one simulator; batch by
+    vmapping it) — kept for composability and the loop baselines.
+  - ``make_batched_ials``: the fused rollout engine — a ``BatchedEnv``
+    whose step is ONE fused AIP invocation (GRU cell + head + sigmoid +
+    Bernoulli threshold-compare, ``kernels/aip_step.py`` on TPU) plus ONE
+    vectorized LS transition for the whole env batch, with all per-tick
+    randomness drawn in bulk from a single key. This is what makes the
+    IALS actually faster than the GS (ISSUE 2 / paper Fig. 3/5 middle).
 """
 from __future__ import annotations
 
@@ -27,7 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import influence
-from repro.envs.api import Env, LocalEnv
+from repro.envs.api import BatchedEnv, BatchedLocalEnv, Env, LocalEnv
+from repro.nn.act import fast_sigmoid, uniform_from_bits
 
 
 class IALSState(NamedTuple):
@@ -63,7 +74,7 @@ def make_ials(local_env: LocalEnv, aip_params, aip_cfg: influence.AIPConfig,
         elif fixed_marginal is not None:
             probs = jnp.full((spec.n_influence,), fixed_marginal)
         else:
-            probs = jax.nn.sigmoid(logits)
+            probs = fast_sigmoid(logits)
         u = jax.random.bernoulli(k_u, probs).astype(jnp.float32)
         ls2, obs, r, info = local_env.step(state.ls_state, action, u, k_env)
         info = dict(info)
@@ -75,3 +86,56 @@ def make_ials(local_env: LocalEnv, aip_params, aip_cfg: influence.AIPConfig,
         return local_env.observe(state.ls_state)
 
     return Env(spec=spec, reset=reset, step=step, observe=observe)
+
+
+def make_batched_ials(local_env: BatchedLocalEnv, aip_params,
+                      aip_cfg: influence.AIPConfig, *,
+                      fixed_marginal: Optional[float] = None,
+                      fixed_marginal_vec=None) -> BatchedEnv:
+    """The fused-step rollout engine: a natively batched IALS.
+
+    One tick for the whole (B,) env batch = one bulk uint32 bits draw, one
+    fused AIP step (``influence.step_sample`` -> ``kernels.ops.aip_step``
+    for the GRU backbone), one vectorized LS transition. The F-IALS
+    switches (``fixed_marginal`` / ``fixed_marginal_vec``) behave as in
+    ``make_ials``.
+    """
+    spec = dataclasses.replace(local_env.spec,
+                               name=local_env.spec.name + "+ials")
+    M = spec.n_influence
+    if fixed_marginal_vec is not None:
+        marg = jnp.asarray(fixed_marginal_vec, jnp.float32)
+    elif fixed_marginal is not None:
+        marg = jnp.full((M,), fixed_marginal, jnp.float32)
+    else:
+        marg = None
+
+    def reset(key, n_envs: int):
+        return IALSState(ls_state=local_env.reset(key, n_envs),
+                         aip_state=influence.init_state(aip_cfg, (n_envs,)))
+
+    def step(state: IALSState, actions, key):
+        k_u, k_env = jax.random.split(key)
+        d_t = local_env.dset_fn(state.ls_state, actions)       # (B, Dd)
+        B = d_t.shape[0]
+        bits = jax.random.bits(k_u, (B, M), jnp.uint32)
+        if marg is None:
+            logits, new_aip, u = influence.step_sample(
+                aip_params, aip_cfg, state.aip_state, d_t, bits)
+            probs = fast_sigmoid(logits)
+        else:
+            _, new_aip = influence.step(aip_params, aip_cfg,
+                                        state.aip_state, d_t)
+            probs = jnp.broadcast_to(marg, (B, M))
+            u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
+        ls2, obs, r, info = local_env.step(state.ls_state, actions, u,
+                                           k_env)
+        info = dict(info)
+        info["u"] = u
+        info["u_probs"] = probs
+        return IALSState(ls_state=ls2, aip_state=new_aip), obs, r, info
+
+    def observe(state: IALSState):
+        return local_env.observe(state.ls_state)
+
+    return BatchedEnv(spec=spec, reset=reset, step=step, observe=observe)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.nn.act import fast_sigmoid, uniform_from_bits
 from repro.nn.module import dense_init, dense
 from repro.nn.rnn import gru_init, gru_cell
 from repro.optim.adamw import adamw
@@ -74,6 +75,71 @@ def step(params: Params, cfg: AIPConfig, state, d_t: jax.Array):
     h = jax.nn.relu(dense(params["l1"], x))
     h = jax.nn.relu(dense(params["l2"], h))
     return dense(params["head"], h), buf
+
+
+def step_sample(params: Params, cfg: AIPConfig, state, d_t: jax.Array,
+                bits: jax.Array):
+    """One fused AIP tick WITH the Bernoulli draw: d_t (B, d_in) and
+    counter-based random bits (B, M) uint32 -> (logits, new state, u).
+
+    This is the rollout engine's inner call: for the GRU backbone it routes
+    through ``kernels.ops.aip_step`` — one Pallas invocation on TPU (cell +
+    head + sigmoid + threshold-compare in VMEM), the identical-math jnp
+    oracle elsewhere. The FNN backbone has no recurrent matmul to fuse, so
+    it reuses ``step`` and applies the same threshold-compare convention.
+    """
+    from repro.kernels import ops  # deferred: keeps kernels optional
+
+    if cfg.kind == "gru":
+        h2, logits, u = ops.aip_step(
+            d_t, state, params["gru"]["wx"], params["gru"]["wh"],
+            params["gru"]["b"], params["head"]["w"], params["head"]["b"],
+            bits)
+        return logits, h2, u
+    logits, new_state = step(params, cfg, state, d_t)
+    u = (uniform_from_bits(bits) < fast_sigmoid(logits)
+         ).astype(jnp.float32)
+    return logits, new_state, u
+
+
+def _fnn_step_multi(params: Params, cfg: AIPConfig, state, d_t):
+    """Per-agent FNN step in (B, A, ...) layout without moving the stack
+    buffer: params leaves are (A, ...); einsum contracts per agent in
+    place. (The vmap-over-agents alternative transposes the whole
+    (B, A, stack, d_in) buffer twice per tick — measurably slower.)"""
+    buf = jnp.concatenate([state[..., 1:, :], d_t[..., None, :]], axis=-2)
+    x = buf.reshape(*buf.shape[:-2], -1)
+    h = jax.nn.relu(jnp.einsum('baf,afk->bak', x, params["l1"]["w"])
+                    + params["l1"]["b"])
+    h = jax.nn.relu(jnp.einsum('bak,akj->baj', h, params["l2"]["w"])
+                    + params["l2"]["b"])
+    logits = jnp.einsum('baj,ajm->bam', h, params["head"]["w"]) \
+        + params["head"]["b"]
+    return logits, buf
+
+
+def step_multi(params: Params, cfg: AIPConfig, state, d_t):
+    """A per-agent AIPs in one call: params leaves (A, ...), state/d_t
+    leading (B, A). -> (logits (B, A, M), new state)."""
+    if cfg.kind == "fnn":
+        return _fnn_step_multi(params, cfg, state, d_t)
+    return jax.vmap(lambda p, h, d: step(p, cfg, h, d),
+                    in_axes=(0, 1, 1), out_axes=(1, 1))(params, state, d_t)
+
+
+def step_sample_multi(params: Params, cfg: AIPConfig, state, d_t, bits):
+    """``step_sample`` for A per-agent AIPs: bits (B, A, M) uint32 ->
+    (logits, new state, u), all leading (B, A). GRU routes through the
+    fused kernel op agent-by-agent (a vmap lifts it into one batched
+    invocation); FNN samples on top of the in-place einsum step."""
+    if cfg.kind == "fnn":
+        logits, new_state = _fnn_step_multi(params, cfg, state, d_t)
+        u = (uniform_from_bits(bits) < fast_sigmoid(logits)
+             ).astype(jnp.float32)
+        return logits, new_state, u
+    return jax.vmap(lambda p, h, d, bt: step_sample(p, cfg, h, d, bt),
+                    in_axes=(0, 1, 1, 1), out_axes=(1, 1, 1))(
+                        params, state, d_t, bits)
 
 
 def apply_sequence(params: Params, cfg: AIPConfig, dsets: jax.Array):

@@ -10,6 +10,13 @@ throughput lever (Shacklett et al. 2021) applied to the IALS construction.
 State / action / obs / reward all carry a leading (A, ...) agent axis, the
 same convention as the multi-agent GS factories in ``repro.envs``, so the
 RL layer treats an A-agent IALS exactly like a multi-agent GS.
+
+``make_multi_ials`` is the scalar-protocol construction (vmap of scalar
+simulators). ``make_batched_multi_ials`` is the fused rollout engine: all
+A·B lanes (A agents x B env copies) advance as ONE vectorized LS
+transition, and the A per-agent AIPs run as one agent-vmapped fused AIP
+step (``kernels/aip_step.py``) per tick, with the whole tick's random bits
+drawn in bulk — the Distributed-IALS scaling story made real.
 """
 from __future__ import annotations
 
@@ -20,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import influence
-from repro.envs.api import Env, LocalEnv
+from repro.core.ials import IALSState
+from repro.envs.api import BatchedEnv, BatchedLocalEnv, Env, LocalEnv
+from repro.nn.act import fast_sigmoid, uniform_from_bits
 
 
 class MultiIALSState(NamedTuple):
@@ -62,7 +71,7 @@ def make_multi_ials(local_env: LocalEnv, aip_params,
         d_t = local_env.dset_fn(ls_state, action)
         logits, new_aip = influence.step(params, aip_cfg, aip_state, d_t)
         probs = (u_probs_fixed if marg is not None
-                 else jax.nn.sigmoid(logits))
+                 else fast_sigmoid(logits))
         u = jax.random.bernoulli(k_u, probs).astype(jnp.float32)
         ls2, obs, r, info = local_env.step(ls_state, action, u, k_env)
         info = dict(info)
@@ -85,3 +94,76 @@ def make_multi_ials(local_env: LocalEnv, aip_params,
         return jax.vmap(local_env.observe)(state.ls_state)
 
     return Env(spec=spec, reset=reset, step=step, observe=observe)
+
+
+def make_batched_multi_ials(local_env: BatchedLocalEnv, aip_params,
+                            aip_cfg: influence.AIPConfig, n_agents: int, *,
+                            fixed_marginal: Optional[float] = None,
+                            fixed_marginal_vec=None) -> BatchedEnv:
+    """Fused Distributed IALS: (B, A, ...) leaves, one fused tick.
+
+    ``local_env`` is a natively batched LS; its (B·A,)-lane batch axis
+    carries every agent of every env copy, so the LS transition is a single
+    vectorized call. The A per-agent AIPs ((A, ...)-stacked ``aip_params``)
+    advance as one agent-axis vmap of the fused AIP step. Exposes the
+    multi-agent ``BatchedEnv`` signature PPO consumes: actions (B, A), obs
+    (B, A, obs_dim).
+    """
+    A = n_agents
+    M = local_env.spec.n_influence
+    spec = dataclasses.replace(local_env.spec,
+                               name=local_env.spec.name + "+multi-ials",
+                               n_agents=A)
+    if fixed_marginal_vec is not None:
+        marg = jnp.broadcast_to(
+            jnp.asarray(fixed_marginal_vec, jnp.float32), (A, M))
+    elif fixed_marginal is not None:
+        marg = jnp.full((A, M), fixed_marginal, jnp.float32)
+    else:
+        marg = None
+
+    def _flat(tree, B):
+        return jax.tree_util.tree_map(
+            lambda l: l.reshape((B * A,) + l.shape[2:]), tree)
+
+    def _unflat(tree, B):
+        return jax.tree_util.tree_map(
+            lambda l: l.reshape((B, A) + l.shape[1:]), tree)
+
+    def reset(key, n_envs: int):
+        ls = _unflat(local_env.reset(key, n_envs * A), n_envs)
+        return IALSState(
+            ls_state=ls,
+            aip_state=influence.init_state(aip_cfg, (n_envs, A)))
+
+    def step(state: IALSState, actions, key):
+        B = actions.shape[0]
+        k_u, k_env = jax.random.split(key)
+        ls_flat = _flat(state.ls_state, B)
+        a_flat = actions.reshape(B * A)
+        d_t = local_env.dset_fn(ls_flat, a_flat)       # (B·A, Dd)
+        d_t = d_t.reshape(B, A, -1)
+        bits = jax.random.bits(k_u, (B, A, M), jnp.uint32)
+        if marg is None:
+            logits, new_aip, u = influence.step_sample_multi(
+                aip_params, aip_cfg, state.aip_state, d_t, bits)
+            probs = fast_sigmoid(logits)
+        else:
+            _, new_aip = influence.step_multi(aip_params, aip_cfg,
+                                              state.aip_state, d_t)
+            probs = jnp.broadcast_to(marg, (B, A, M))
+            u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
+        ls2, obs, r, info = local_env.step(ls_flat, a_flat,
+                                           u.reshape(B * A, M), k_env)
+        info = dict(_unflat(info, B))
+        info["u"] = u
+        info["u_probs"] = probs
+        return (IALSState(ls_state=_unflat(ls2, B), aip_state=new_aip),
+                obs.reshape(B, A, -1), r.reshape(B, A), info)
+
+    def observe(state: IALSState):
+        B = jax.tree_util.tree_leaves(state.ls_state)[0].shape[0]
+        obs = local_env.observe(_flat(state.ls_state, B))
+        return obs.reshape(B, A, -1)
+
+    return BatchedEnv(spec=spec, reset=reset, step=step, observe=observe)

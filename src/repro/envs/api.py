@@ -8,6 +8,16 @@ parallelism is a ``vmap`` — this is the TPU-native answer to the paper's
 GS step:  (state, action, key)          -> (state, obs, reward, info)
 LS step:  (state, action, u_t, key)     -> (state, obs, reward, info)
 
+Batched protocol (the fused rollout engine's native layer): ``BatchedEnv``
+and ``BatchedLocalEnv`` carry a leading env-batch axis through every leaf —
+``reset(key, n)`` builds n environments from ONE key, ``step`` takes (B, ...)
+actions and ONE key and draws all of its randomness in bulk. This is what
+lets an IALS tick be one fused AIP kernel + one vectorized LS transition
+instead of a vmap of B scalar programs each splitting its own keys.
+``batch_env`` / ``batch_local_env`` lift any scalar env into the batched
+protocol (vmap adapter); ``unbatch_env`` squeezes a batched env back down to
+the scalar signature — so both protocols interoperate everywhere.
+
 ``info`` carries the IBA quantities extracted from the GS (Algorithm 1):
   - "u": influence sources u_t  (what the AIP learns to predict)
   - "dset": the d-separating-set features d_t (AIP input)
@@ -25,6 +35,7 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -53,6 +64,115 @@ class LocalEnv(NamedTuple):
     observe: Callable
     dset_fn: Callable  # (state, action) -> d_t features (used by the IALS
     #                    to query the AIP *before* stepping)
+
+
+class BatchedEnv(NamedTuple):
+    spec: EnvSpec
+    reset: Callable   # (key, n_envs) -> state with (B, ...) leaves
+    step: Callable    # (state, actions (B, ...), key) -> (state, obs, r,
+    #                    info), every output leaf (B, ...)
+    observe: Callable  # state -> obs (B, ...)
+    rollout: Any = None  # optional (state, actions (T, B, ...), keys (T,))
+    #                      -> (state, rewards (T, ...)): a whole-horizon
+    #                      native rollout, bitwise-equal to scanning step
+    #                      but free to exploit the static horizon (ring
+    #                      buffers, static phases). Use ``env_rollout``.
+
+
+class BatchedLocalEnv(NamedTuple):
+    spec: EnvSpec
+    reset: Callable   # (key, n_envs) -> state with (B, ...) leaves
+    step: Callable    # (state, actions, u (B, M), key) -> (state, obs, r,
+    #                    info)
+    observe: Callable
+    dset_fn: Callable  # (state, actions) -> d_t features (B, dset_dim)
+
+
+def _batch_size(state) -> int:
+    return jax.tree_util.tree_leaves(state)[0].shape[0]
+
+
+def batch_env(env: Env) -> BatchedEnv:
+    """vmap adapter: any scalar Env through the batched protocol.
+
+    Key derivation matches the historical vmap-of-scalar rollout exactly:
+    reset and step both fan one key out into B subkeys."""
+    vreset, vstep = jax.vmap(env.reset), jax.vmap(env.step)
+
+    def reset(key, n_envs: int):
+        return vreset(jax.random.split(key, n_envs))
+
+    def step(state, actions, key):
+        return vstep(state, actions, jax.random.split(key,
+                                                      _batch_size(state)))
+
+    return BatchedEnv(spec=env.spec, reset=reset, step=step,
+                      observe=jax.vmap(env.observe))
+
+
+def batch_local_env(env: LocalEnv) -> BatchedLocalEnv:
+    """vmap adapter for the LS signature (generic fallback; the domains
+    provide native batched LS implementations for the hot path)."""
+    vreset, vstep = jax.vmap(env.reset), jax.vmap(env.step)
+
+    def reset(key, n_envs: int):
+        return vreset(jax.random.split(key, n_envs))
+
+    def step(state, actions, u, key):
+        return vstep(state, actions, u,
+                     jax.random.split(key, _batch_size(state)))
+
+    return BatchedLocalEnv(spec=env.spec, reset=reset, step=step,
+                           observe=jax.vmap(env.observe),
+                           dset_fn=jax.vmap(env.dset_fn))
+
+
+def as_batched(env) -> BatchedEnv:
+    """Env | BatchedEnv -> BatchedEnv (identity when already batched)."""
+    if isinstance(env, BatchedEnv):
+        return env
+    return batch_env(env)
+
+
+def env_rollout(benv: BatchedEnv, state, actions, keys, *,
+                unroll: int = 8):
+    """Whole-horizon rollout: actions (T, B, ...), keys (T,) ->
+    (final state, rewards (T, ...)). Dispatches the env's native
+    ``rollout`` when it has one (the fused engines exploit the static
+    horizon there); otherwise an unrolled scan of ``step``. Both paths
+    derive per-tick randomness from the same keys, so they agree
+    bitwise."""
+    if benv.rollout is not None:
+        return benv.rollout(state, actions, keys)
+
+    def step(carry, xs):
+        a, k = xs
+        s, _, r, _ = benv.step(carry, a, k)
+        return s, r
+
+    return jax.lax.scan(step, state, (actions, keys), unroll=unroll)
+
+
+def unbatch_env(benv: BatchedEnv, name: str | None = None) -> Env:
+    """Squeeze adapter: a batched env through the scalar Env protocol.
+
+    State stays the B=1 batched state internally (it is opaque to
+    callers); every exposed leaf has the batch axis squeezed off."""
+    spec = (dataclasses.replace(benv.spec, name=name) if name
+            else benv.spec)
+
+    def reset(key):
+        return benv.reset(key, 1)
+
+    def step(state, action, key):
+        state, obs, r, info = benv.step(
+            state, jnp.asarray(action)[None], key)
+        return state, obs[0], r[0], {k: v[0] for k, v in info.items()}
+
+    def observe(state):
+        return benv.observe(state)[0]
+
+    return Env(spec=spec, reset=reset, step=step, observe=observe)
 
 
 def squeeze_agent_env(multi: Env, name: str) -> Env:

@@ -1,0 +1,97 @@
+"""Fused AIP step Pallas TPU kernel — one invocation per simulator tick.
+
+The IALS inner loop (Algorithm 2 lines 5-8) is: query the AIP on d_t, turn
+the logits into per-head Bernoulli probabilities, and draw u_t. Dispatched
+op-by-op that is a GRU cell, a head matmul, a sigmoid, a uniform draw and a
+compare — five round-trips through HBM for a (B, H) state that fits in one
+VMEM tile. This kernel fuses the whole thing: both GRU matmuls on the MXU,
+the gate nonlinearities, the head projection, the head sigmoid, and the
+Bernoulli threshold-compare against caller-supplied counter-based random
+bits, with every intermediate resident in VMEM.
+
+Randomness is *passed in* as uint32 bits (one `jax.random.bits` call per
+tick, generated in bulk by the rollout engine) so the kernel itself is a
+pure function — the same bits give the same u_t on every backend, which is
+what the parity tests pin down against ``ref.aip_step_ref``.
+
+Weights are laid out (D, 3H)/(H, 3H) gate-major [r|z|n] like
+``repro/nn/rnn.py``; activations are the shared rational gates from
+``repro.nn.act`` (identical in the oracle), so kernel-vs-oracle agreement
+is exact up to matmul association order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import tpu_compiler_params
+from repro.nn.act import fast_sigmoid, fast_tanh, uniform_from_bits
+
+
+def _aip_step_kernel(d_ref, h_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
+                     bits_ref, h2_ref, logits_ref, u_ref, *, H: int):
+    d = d_ref[...].astype(jnp.float32)                 # (B, D)
+    h = h_ref[...].astype(jnp.float32)                 # (B, H)
+    gx = jax.lax.dot_general(d, wx_ref[...].astype(jnp.float32),
+                             (((1,), (0,)), ((), ()))) + \
+        b_ref[...].astype(jnp.float32)
+    gh = jax.lax.dot_general(h, wh_ref[...].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())))
+    r = fast_sigmoid(gx[:, :H] + gh[:, :H])
+    z = fast_sigmoid(gx[:, H:2 * H] + gh[:, H:2 * H])
+    n = fast_tanh(gx[:, 2 * H:] + r * gh[:, 2 * H:])
+    h2 = (1.0 - z) * n + z * h
+    logits = jax.lax.dot_general(h2, hw_ref[...].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ()))) + \
+        hb_ref[...].astype(jnp.float32)
+    probs = fast_sigmoid(logits)
+    u01 = uniform_from_bits(bits_ref[...])
+    h2_ref[...] = h2.astype(h2_ref.dtype)
+    logits_ref[...] = logits.astype(logits_ref.dtype)
+    u_ref[...] = (u01 < probs).astype(u_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def aip_step(d, h, wx, wh, b, hw, hb, bits, *, interpret: bool | None = None):
+    """d: (B, D); h: (B, H); wx: (D, 3H); wh: (H, 3H); b: (3H,);
+    hw: (H, M); hb: (M,); bits: (B, M) uint32
+    -> (h_new (B, H), logits (B, M) f32, u (B, M) f32 in {0, 1}).
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, D = d.shape
+    H = wh.shape[0]
+    M = hw.shape[1]
+    kernel = functools.partial(_aip_step_kernel, H=H)
+    h2, logits, u = pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec((B, D), lambda: (0, 0)),
+            pl.BlockSpec((B, H), lambda: (0, 0)),
+            pl.BlockSpec((D, 3 * H), lambda: (0, 0)),
+            pl.BlockSpec((H, 3 * H), lambda: (0, 0)),
+            pl.BlockSpec((3 * H,), lambda: (0,)),
+            pl.BlockSpec((H, M), lambda: (0, 0)),
+            pl.BlockSpec((M,), lambda: (0,)),
+            pl.BlockSpec((B, M), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, H), lambda: (0, 0)),
+            pl.BlockSpec((B, M), lambda: (0, 0)),
+            pl.BlockSpec((B, M), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), h.dtype),
+            jax.ShapeDtypeStruct((B, M), jnp.float32),
+            jax.ShapeDtypeStruct((B, M), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(),
+        interpret=interpret,
+    )(d, h, wx, wh, b, hw, hb, bits)
+    return h2, logits, u

@@ -20,6 +20,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.nn.act import fast_sigmoid, fast_tanh
 
 
 def _gru_kernel(x_ref, wx_ref, wh_ref, b_ref, h0_ref, hs_ref, h_scr, *,
@@ -37,18 +38,23 @@ def _gru_kernel(x_ref, wx_ref, wh_ref, b_ref, h0_ref, hs_ref, h_scr, *,
         b_ref[...].astype(jnp.float32)
     gh = jax.lax.dot_general(h, wh_ref[...].astype(jnp.float32),
                              (((1,), (0,)), ((), ())))
-    r = jax.nn.sigmoid(gx[:, :H] + gh[:, :H])
-    z = jax.nn.sigmoid(gx[:, H:2 * H] + gh[:, H:2 * H])
-    n = jnp.tanh(gx[:, 2 * H:] + r * gh[:, 2 * H:])
+    r = fast_sigmoid(gx[:, :H] + gh[:, :H])
+    z = fast_sigmoid(gx[:, H:2 * H] + gh[:, H:2 * H])
+    n = fast_tanh(gx[:, 2 * H:] + r * gh[:, 2 * H:])
     h_new = (1.0 - z) * n + z * h
     h_scr[...] = h_new
     hs_ref[:, 0, :] = h_new.astype(hs_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def gru_sequence(x, wx, wh, b, h0, *, interpret: bool = True):
+def gru_sequence(x, wx, wh, b, h0, *, interpret: bool | None = None):
     """x: (B, T, D); wx: (D, 3H); wh: (H, 3H); b: (3H,); h0: (B, H)
-    -> (hs (B, T, H), h_T)."""
+    -> (hs (B, T, H), h_T).
+
+    ``interpret=None`` auto-detects the backend: compiled on TPU,
+    interpret mode everywhere else."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, T, D = x.shape
     H = wh.shape[0]
     kernel = functools.partial(_gru_kernel, H=H, T=T)

@@ -9,8 +9,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import aip_step as _aip
 from . import flash_attention as _fa
 from . import gru as _gru
+from . import ref as _ref
 from . import rmsnorm as _rms
 
 
@@ -46,6 +48,21 @@ def gru_sequence(params, xs, h0=None):
         h0 = jnp.zeros((B, H), xs.dtype)
     return _gru.gru_sequence(xs, params["wx"], params["wh"], params["b"],
                              h0, interpret=_default_interpret())
+
+
+def aip_step(d, h, wx, wh, b, hw, hb, bits):
+    """Fused IALS AIP tick: GRU cell + head + sigmoid + Bernoulli draw.
+
+    On TPU this is one compiled Pallas invocation with the state resident
+    in VMEM. Elsewhere it dispatches the pure-jnp oracle directly — the
+    same math as the kernel (shared ``repro.nn.act`` gates and
+    threshold-compare), but without interpret-mode's per-grid-point
+    emulation overhead, because this op sits on the rollout hot path.
+    """
+    if jax.default_backend() == "tpu":
+        return _aip.aip_step(d, h, wx, wh, b, hw, hb, bits,
+                             interpret=False)
+    return _ref.aip_step_ref(d, h, wx, wh, b, hw, hb, bits)
 
 
 def rmsnorm(x, g, *, eps: float = 1e-6):

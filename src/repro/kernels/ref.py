@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.nn.act import fast_sigmoid, fast_tanh, uniform_from_bits
+
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         scale: float | None = None):
@@ -21,21 +23,40 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return o.astype(q.dtype)
 
 
+def _gru_cell_ref(wx, wh, b, h, xt):
+    H = wh.shape[0]
+    gx = xt @ wx + b
+    gh = h @ wh
+    r = fast_sigmoid(gx[..., :H] + gh[..., :H])
+    z = fast_sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
+    n = fast_tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
+    return (1.0 - z) * n + z * h
+
+
 def gru_sequence_ref(x, wx, wh, b, h0):
     """x: (B, T, D); wx: (D, 3H); wh: (H, 3H); b: (3H,); h0: (B, H)."""
-    H = wh.shape[0]
 
     def cell(h, xt):
-        gx = xt @ wx + b
-        gh = h @ wh
-        r = jax.nn.sigmoid(gx[..., :H] + gh[..., :H])
-        z = jax.nn.sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
-        n = jnp.tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
-        h2 = (1.0 - z) * n + z * h
+        h2 = _gru_cell_ref(wx, wh, b, h, xt)
         return h2, h2
 
     hT, hs = jax.lax.scan(cell, h0, jnp.moveaxis(x, 1, 0))
     return jnp.moveaxis(hs, 0, 1), hT
+
+
+def aip_step_ref(d, h, wx, wh, b, hw, hb, bits):
+    """Fused AIP step oracle: GRU cell + head + sigmoid + Bernoulli draw.
+
+    d: (B, D); h: (B, H); wx: (D, 3H); wh: (H, 3H); b: (3H,); hw: (H, M);
+    hb: (M,); bits: (B, M) uint32 counter-based random bits.
+    -> (h_new (B, H), logits (B, M), u (B, M) f32 in {0, 1}).
+    """
+    h2 = _gru_cell_ref(wx, wh, b, h.astype(jnp.float32),
+                       d.astype(jnp.float32))
+    logits = h2 @ hw + hb
+    probs = fast_sigmoid(logits)
+    u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
+    return h2, logits, u
 
 
 def rmsnorm_ref(x, g, *, eps: float = 1e-6):

@@ -32,9 +32,11 @@ import jax.numpy as jnp
 
 from repro.core import collect, influence, ials as ials_lib, multi_ials
 from repro.envs.traffic import (TrafficConfig, make_traffic_env,
+                                make_batched_local_traffic_env,
                                 make_local_traffic_env,
                                 make_multi_traffic_env)
 from repro.envs.warehouse import (WarehouseConfig, make_warehouse_env,
+                                  make_batched_local_warehouse_env,
                                   make_local_warehouse_env,
                                   make_multi_warehouse_env)
 from repro.launch.mesh import make_host_mesh
@@ -50,26 +52,32 @@ def grid_agents(grid: int, n_agents: int):
 
 
 def build_domain(domain: str, vanish_after: int = 0, n_agents: int = 1):
-    """-> (gs, ls, frame_stack); gs is multi-agent when n_agents > 1."""
+    """-> (gs, ls, batched_ls, frame_stack); gs is multi-agent when
+    n_agents > 1. ``batched_ls`` is the natively batched LS the fused IALS
+    rollout engine steps; ``ls`` keeps the scalar protocol for tooling."""
     if domain == "traffic":
         cfg = TrafficConfig()
         if n_agents > 1:
             gs = make_multi_traffic_env(cfg, grid_agents(cfg.grid, n_agents))
         else:
             gs = make_traffic_env(cfg)
-        return gs, make_local_traffic_env(cfg), 1
+        return (gs, make_local_traffic_env(cfg),
+                make_batched_local_traffic_env(cfg), 1)
     cfg = WarehouseConfig(vanish_after=vanish_after)
     if n_agents > 1:
         gs = make_multi_warehouse_env(cfg, grid_agents(cfg.grid, n_agents))
     else:
         gs = make_warehouse_env(cfg)
-    return gs, make_local_warehouse_env(cfg), 8
+    return (gs, make_local_warehouse_env(cfg),
+            make_batched_local_warehouse_env(cfg), 8)
 
 
 def _make_sim(ls, params, acfg, n_agents, **kw):
+    """``ls``: a BatchedLocalEnv — PPO trains on the fused batched engine."""
     if n_agents > 1:
-        return multi_ials.make_multi_ials(ls, params, acfg, n_agents, **kw)
-    return ials_lib.make_ials(ls, params, acfg, **kw)
+        return multi_ials.make_batched_multi_ials(ls, params, acfg,
+                                                  n_agents, **kw)
+    return ials_lib.make_batched_ials(ls, params, acfg, **kw)
 
 
 def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
@@ -167,8 +175,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
-    gs, ls, frame_stack = build_domain(args.domain, args.vanish_after,
-                                       args.n_agents)
+    gs, _, ls, frame_stack = build_domain(args.domain, args.vanish_after,
+                                          args.n_agents)
     aip_kind = args.aip or ("gru" if args.domain == "warehouse" else "fnn")
 
     t_start = time.time()

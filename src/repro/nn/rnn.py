@@ -3,6 +3,10 @@
 ``gru_sequence`` is the XLA path; ``repro/kernels/gru.py`` provides the fused
 Pallas TPU kernel (both matmuls + gate fusion in one VMEM-resident kernel),
 validated against ``repro/kernels/ref.py``.
+
+Gates use the rational activations from ``repro.nn.act`` — the cell is the
+IALS rollout engine's per-tick hot loop, and exact tanh/logistic were its
+dominant cost (see act.py). Training and rollout share this definition.
 """
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .act import fast_sigmoid, fast_tanh
 from .module import dense_init
 
 Params = Dict[str, Any]
@@ -31,9 +36,9 @@ def gru_cell(p: Params, h: jax.Array, x: jax.Array) -> jax.Array:
     H = h.shape[-1]
     gx = x @ p["wx"] + p["b"]
     gh = h @ p["wh"]
-    r = jax.nn.sigmoid(gx[..., :H] + gh[..., :H])
-    z = jax.nn.sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
-    n = jnp.tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
+    r = fast_sigmoid(gx[..., :H] + gh[..., :H])
+    z = fast_sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
+    n = fast_tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
     return (1.0 - z) * n + z * h
 
 

@@ -12,8 +12,18 @@ Multi-agent (``PPOConfig.n_agents = A > 1``, parameter-shared): the env emits
 dimension everywhere — one policy network, T * n_envs * A samples per update.
 ``shard_rollout`` places the env batch on the mesh ``data`` axis so rollouts
 scale across devices.
+
+Rollouts run on the batched env protocol: a native ``BatchedEnv`` (the
+fused IALS engine) steps the whole env batch with one key per tick and its
+randomness drawn in bulk; a scalar ``Env`` is lifted through the
+``batch_env`` vmap adapter, which reproduces the historical
+split-keys-then-vmap derivation exactly. ``train_iteration`` donates its
+(params, opt_state, rollout-state) arguments, so each PPO iteration
+updates in place instead of round-tripping fresh buffers.
 """
 from __future__ import annotations
+
+import functools
 
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, NamedTuple, Tuple
@@ -22,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.envs.api import Env
+from repro.envs.api import BatchedEnv, Env, as_batched
 from repro.nn.module import dense_init, dense
 from repro.optim.adamw import adamw
 
@@ -87,10 +97,10 @@ def _stack_obs(frames):
     return frames.reshape(frames.shape[:-2] + (-1,))
 
 
-def init_rollout_state(env: Env, cfg: PPOConfig, key) -> RolloutState:
-    keys = jax.random.split(key, cfg.n_envs)
-    env_state = jax.vmap(env.reset)(keys)
-    obs = jax.vmap(env.observe)(env_state)
+def init_rollout_state(env, cfg: PPOConfig, key) -> RolloutState:
+    benv = as_batched(env)
+    env_state = benv.reset(key, cfg.n_envs)
+    obs = benv.observe(env_state)
     frames = jnp.zeros((cfg.n_envs,) + cfg.agent_shape
                        + (cfg.frame_stack, cfg.obs_dim))
     frames = frames.at[..., -1, :].set(obs)
@@ -117,10 +127,15 @@ def shard_rollout(rs: RolloutState, mesh) -> RolloutState:
     return jax.tree_util.tree_map(put, rs)
 
 
-def rollout(env: Env, cfg: PPOConfig, params, rs: RolloutState, key):
+def rollout(env, cfg: PPOConfig, params, rs: RolloutState, key):
     """-> (new RolloutState, batch with (T, n_envs, *agent_shape, ...)
     leaves). The agent axis (if any) is just extra batch dimension: one
-    parameter-shared policy acts for every agent of every env copy."""
+    parameter-shared policy acts for every agent of every env copy.
+
+    ``env`` may be a scalar ``Env`` or a native ``BatchedEnv``; either
+    way the scan body is one batched env step per tick, with the per-step
+    key array pre-split outside the scan."""
+    benv = as_batched(env)
 
     def step(carry, k):
         rs = carry
@@ -131,20 +146,18 @@ def rollout(env: Env, cfg: PPOConfig, params, rs: RolloutState, key):
         logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
                                    a[..., None], -1)[..., 0]
 
-        keys = jax.random.split(ks, cfg.n_envs)
-        env_state, obs, r, _ = jax.vmap(env.step)(rs.env_state, a, keys)
+        env_state, obs, r, _ = benv.step(rs.env_state, a, ks)
         frames = jnp.concatenate(
             [rs.frames[..., 1:, :], obs[..., None, :]], axis=-2)
 
         t = rs.t_in_ep + 1
         done = t >= cfg.episode_len
-        rkeys = jax.random.split(kr, cfg.n_envs)
-        reset_state = jax.vmap(env.reset)(rkeys)
+        reset_state = benv.reset(kr, cfg.n_envs)
         env_state = jax.tree_util.tree_map(
             lambda n, i: jnp.where(
                 done.reshape((-1,) + (1,) * (n.ndim - 1)), i, n),
             env_state, reset_state)
-        obs0 = jax.vmap(env.observe)(env_state)
+        obs0 = benv.observe(env_state)
         frames0 = jnp.zeros_like(frames).at[..., -1, :].set(obs0)
         done_f = done.reshape((-1,) + (1,) * (frames.ndim - 1))
         frames = jnp.where(done_f, frames0, frames)
@@ -199,10 +212,10 @@ def ppo_loss(params, cfg: PPOConfig, mb):
     return total, {"pg_loss": pg, "v_loss": v_loss, "entropy": ent}
 
 
-def make_train_iteration(env: Env, cfg: PPOConfig):
+def make_train_iteration(env, cfg: PPOConfig):
     opt = adamw(cfg.lr, weight_decay=0.0, b2=0.999, clip_norm=0.5)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
     def train_iteration(params, opt_state, rs: RolloutState, key):
         k_roll, k_upd = jax.random.split(key)
         rs, batch, v_last = rollout(env, cfg, params, rs, k_roll)

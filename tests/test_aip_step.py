@@ -1,0 +1,107 @@
+"""Fused AIP-step kernel: parity vs the ref.py oracle (logits exact with
+shared rational gates, Bernoulli draws bit-identical given the same counter
+bits and distributionally correct over many bits), plus the rational
+activation contracts the kernel relies on."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import influence
+from repro.kernels import ops, ref
+from repro.kernels.aip_step import aip_step as aip_step_kernel
+from repro.nn.act import fast_sigmoid, fast_tanh, uniform_from_bits
+
+
+def _weights(key, D, H, M, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return (jax.random.normal(ks[0], (D, 3 * H), dtype) * 0.2,
+            jax.random.normal(ks[1], (H, 3 * H), dtype) * 0.2,
+            jax.random.normal(ks[2], (3 * H,), dtype) * 0.1,
+            jax.random.normal(ks[3], (H, M), dtype) * 0.2,
+            jax.random.normal(ks[4], (M,), dtype) * 0.1)
+
+
+@pytest.mark.parametrize("B,D,H,M", [
+    (4, 24, 32, 12),
+    (16, 40, 64, 4),
+    (1, 8, 16, 1),
+])
+def test_aip_step_kernel_matches_oracle(B, D, H, M):
+    key = jax.random.PRNGKey(0)
+    wx, wh, b, hw, hb = _weights(key, D, H, M)
+    d = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    h = jax.random.normal(jax.random.PRNGKey(2), (B, H)) * 0.5
+    bits = jax.random.bits(jax.random.PRNGKey(3), (B, M), jnp.uint32)
+    h2k, lgk, uk = aip_step_kernel(d, h, wx, wh, b, hw, hb, bits,
+                                   interpret=True)
+    h2r, lgr, ur = ref.aip_step_ref(d, h, wx, wh, b, hw, hb, bits)
+    assert float(jnp.abs(h2k - h2r).max()) < 1e-5
+    assert float(jnp.abs(lgk - lgr).max()) < 1e-5
+    # same bits -> bit-identical Bernoulli draws
+    assert jnp.array_equal(uk, ur)
+    assert set(jnp.unique(uk).tolist()) <= {0.0, 1.0}
+
+
+def test_aip_step_matches_influence_step():
+    """The fused op computes exactly the AIP the training loop fits:
+    oracle logits == influence.step logits on the same GRU params."""
+    cfg = influence.AIPConfig(kind="gru", d_in=10, n_out=5, hidden=24)
+    params = influence.init_aip(cfg, jax.random.PRNGKey(4))
+    d = jax.random.normal(jax.random.PRNGKey(5), (7, 10))
+    h = jnp.zeros((7, 24))
+    bits = jax.random.bits(jax.random.PRNGKey(6), (7, 5), jnp.uint32)
+    logits, h2 = influence.step(params, cfg, h, d)
+    h2o, lgo, _ = ops.aip_step(
+        d, h, params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
+        params["head"]["w"], params["head"]["b"], bits)
+    assert float(jnp.abs(logits - lgo).max()) < 1e-5
+    assert float(jnp.abs(h2 - h2o).max()) < 1e-5
+
+
+def test_bernoulli_draws_distribution():
+    """Over many independent bits the threshold-compare realises
+    Bernoulli(sigmoid(logits)) per head."""
+    cfg = influence.AIPConfig(kind="gru", d_in=6, n_out=3, hidden=16)
+    params = influence.init_aip(cfg, jax.random.PRNGKey(7))
+    d = jax.random.normal(jax.random.PRNGKey(8), (4, 6))
+    h = jnp.zeros((4, 16))
+    logits, _ = influence.step(params, cfg, h, d)
+    probs = fast_sigmoid(logits)                      # (4, 3)
+    n = 4000
+    bits = jax.random.bits(jax.random.PRNGKey(9), (n, 4, 3), jnp.uint32)
+    us = jax.vmap(lambda bt: ops.aip_step(
+        d, h, params["gru"]["wx"], params["gru"]["wh"], params["gru"]["b"],
+        params["head"]["w"], params["head"]["b"], bt)[2])(bits)
+    rate = us.mean(axis=0)
+    assert float(jnp.abs(rate - probs).max()) < 0.03
+
+
+def test_uniform_from_bits_range_and_mean():
+    bits = jax.random.bits(jax.random.PRNGKey(10), (100_000,), jnp.uint32)
+    u = uniform_from_bits(bits)
+    assert float(u.min()) >= 0.0 and float(u.max()) < 1.0
+    assert abs(float(u.mean()) - 0.5) < 0.01
+
+
+def test_fast_activations_accuracy():
+    x = jnp.linspace(-12.0, 12.0, 20001)
+    assert float(jnp.abs(fast_tanh(x) - jnp.tanh(x)).max()) < 3e-3
+    assert float(jnp.abs(fast_sigmoid(x) - jax.nn.sigmoid(x)).max()) < 3e-4
+    # saturation and symmetry
+    assert float(fast_tanh(jnp.float32(20.0))) == pytest.approx(1.0, abs=1e-5)
+    assert float(fast_sigmoid(jnp.float32(-20.0))) == pytest.approx(
+        0.0, abs=1e-5)
+
+
+def test_gru_kernel_interpret_autodetect():
+    """gru.gru_sequence's interpret default resolves from the backend
+    (not hard-coded True) and still matches the oracle."""
+    from repro.kernels.gru import gru_sequence
+    key = jax.random.PRNGKey(11)
+    wx, wh, b, _, _ = _weights(key, 12, 16, 1)
+    x = jax.random.normal(jax.random.PRNGKey(12), (3, 9, 12))
+    h0 = jnp.zeros((3, 16))
+    hs, hT = gru_sequence(x, wx, wh, b, h0)          # interpret=None -> auto
+    hs_r, hT_r = ref.gru_sequence_ref(x, wx, wh, b, h0)
+    assert float(jnp.abs(hs - hs_r).max()) < 1e-5
+    assert float(jnp.abs(hT - hT_r).max()) < 1e-5

@@ -1,0 +1,313 @@
+"""BatchedEnv protocol: adapter round-trips vs the scalar Env, native
+batched LS == vmapped scalar LS, the fused batched IALS engine's
+invariants, and GS<->LS exact replay driven through the batched engine."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import collect, ials, influence, multi_ials
+from repro.envs.api import BatchedEnv, as_batched, batch_env, \
+    batch_local_env, unbatch_env
+from repro.envs.traffic import (TrafficConfig, local_traffic_state,
+                                make_batched_local_traffic_env,
+                                make_local_traffic_env,
+                                make_multi_traffic_env, make_traffic_env)
+from repro.envs.warehouse import (WarehouseConfig,
+                                  local_warehouse_state,
+                                  make_batched_local_warehouse_env,
+                                  make_local_warehouse_env,
+                                  make_multi_warehouse_env)
+
+AGENTS4 = jnp.array([[0, 0], [1, 3], [2, 2], [4, 1]])
+
+
+# ---------------------------------------------------------------------------
+# adapters: scalar Env <-> BatchedEnv round-trips
+# ---------------------------------------------------------------------------
+
+def test_batch_env_adapter_matches_vmap_of_scalar():
+    """batch_env(e).step == the historical split-keys-then-vmap rollout."""
+    env = make_traffic_env()
+    benv = batch_env(env)
+    key = jax.random.PRNGKey(0)
+    B = 6
+    state = benv.reset(key, B)
+    want_state = jax.vmap(env.reset)(jax.random.split(key, B))
+    for l1, l2 in zip(jax.tree_util.tree_leaves(state),
+                      jax.tree_util.tree_leaves(want_state)):
+        assert jnp.array_equal(l1, l2)
+    a = jnp.zeros((B,), jnp.int32)
+    k2 = jax.random.PRNGKey(1)
+    s2, obs, r, info = benv.step(state, a, k2)
+    ws2, wobs, wr, winfo = jax.vmap(env.step)(
+        want_state, a, jax.random.split(k2, B))
+    assert jnp.array_equal(obs, wobs)
+    assert jnp.array_equal(r, wr)
+    assert jnp.array_equal(info["u"], winfo["u"])
+    assert jnp.array_equal(benv.observe(s2), jax.vmap(env.observe)(ws2))
+
+
+def test_unbatch_env_round_trip():
+    """unbatch(batch(e)) behaves like e for the same keys."""
+    env = make_traffic_env()
+    rt = unbatch_env(batch_env(env), "traffic-rt")
+    key = jax.random.PRNGKey(2)
+    s = rt.reset(key)
+    assert rt.observe(s).shape == (env.spec.obs_dim,)
+    s2, obs, r, info = rt.step(s, jnp.int32(1), key)
+    assert obs.shape == (env.spec.obs_dim,)
+    assert jnp.ndim(r) == 0
+    assert info["u"].shape == (env.spec.n_influence,)
+    assert rt.spec.name == "traffic-rt"
+
+
+def test_as_batched_identity_and_lift():
+    env = make_traffic_env()
+    benv = batch_env(env)
+    assert as_batched(benv) is benv
+    assert isinstance(as_batched(env), BatchedEnv)
+
+
+# ---------------------------------------------------------------------------
+# native batched LS == vmapped scalar LS
+# ---------------------------------------------------------------------------
+
+def test_batched_traffic_ls_matches_scalar():
+    """The traffic LS draws no randomness in step, so the native batched
+    implementation must match the vmapped scalar one exactly."""
+    cfg = TrafficConfig(ext_influence=True)
+    ls = make_local_traffic_env(cfg)
+    bls = make_batched_local_traffic_env(cfg)
+    vls = batch_local_env(ls)
+    key = jax.random.PRNGKey(3)
+    B = 8
+    state = bls.reset(key, B)
+    a = jax.random.randint(key, (B,), 0, 2)
+    u = jax.random.bernoulli(key, 0.4, (B, 8)).astype(jnp.float32)
+    s2, obs, r, info = bls.step(state, a, u, key)
+    ws2, wobs, wr, winfo = vls.step(state, a, u, key)
+    assert jnp.array_equal(obs, wobs)
+    assert jnp.allclose(r, wr, atol=1e-6)
+    assert jnp.array_equal(info["dset"], winfo["dset"])
+    assert jnp.array_equal(bls.dset_fn(state, a), vls.dset_fn(state, a))
+    assert jnp.array_equal(bls.observe(s2), vls.observe(ws2))
+
+
+def test_batched_warehouse_ls_matches_scalar():
+    """With spawning disabled (the only internal randomness) batched and
+    vmapped-scalar warehouse LS transitions agree exactly."""
+    cfg = WarehouseConfig(p_item=0.0)
+    ls = make_local_warehouse_env(cfg)
+    bls = make_batched_local_warehouse_env(cfg)
+    vls = batch_local_env(ls)
+    key = jax.random.PRNGKey(4)
+    B = 8
+    state = bls.reset(key, B)
+    a = jax.random.randint(key, (B,), 0, 5)
+    u = jax.random.bernoulli(key, 0.3, (B, 12)).astype(jnp.float32)
+    s2, obs, r, info = bls.step(state, a, u, key)
+    ws2, wobs, wr, winfo = vls.step(state, a, u, key)
+    assert jnp.array_equal(obs, wobs)
+    assert jnp.array_equal(r, wr)
+    assert jnp.array_equal(info["dset"], winfo["dset"])
+    assert jnp.array_equal(bls.dset_fn(state, a), vls.dset_fn(state, a))
+
+
+# ---------------------------------------------------------------------------
+# GS <-> LS exact replay THROUGH the batched engine
+# ---------------------------------------------------------------------------
+
+def test_traffic_gs_replay_through_batched_ls():
+    """Replaying a multi-agent GS rollout's true u_t through the NATIVE
+    BATCHED LS (agents as the batch axis) reproduces every agent's
+    obs/reward exactly — the IALS defining property, fused-engine path."""
+    cfg = TrafficConfig(ext_influence=True)
+    gs = make_multi_traffic_env(cfg, AGENTS4)
+    bls = make_batched_local_traffic_env(cfg)
+    key = jax.random.PRNGKey(5)
+    k0, key = jax.random.split(key)
+    s0 = gs.reset(k0)
+    T, A = 20, 4
+    acts = jax.random.randint(key, (T, A), 0, 2)
+
+    def gs_step(s, xs):
+        a, k = xs
+        s, obs, r, info = gs.step(s, a, k)
+        return s, {"obs": obs, "r": r, "u": info["u"]}
+
+    _, traj = jax.lax.scan(gs_step, s0, (acts, jax.random.split(key, T)))
+
+    s_loc = jax.vmap(lambda i, j: local_traffic_state(s0, i, j))(
+        AGENTS4[:, 0], AGENTS4[:, 1])          # (A, ...) == batch axis
+
+    def ls_step(s, xs):
+        a, u = xs
+        s, obs, r, _ = bls.step(s, a, u, jax.random.PRNGKey(0))
+        return s, {"obs": obs, "r": r}
+
+    _, replay = jax.lax.scan(ls_step, s_loc, (acts, traj["u"]))
+    assert jnp.array_equal(replay["obs"], traj["obs"])
+    assert jnp.allclose(replay["r"], traj["r"], atol=1e-6)
+
+
+def test_warehouse_gs_replay_through_batched_ls():
+    cfg = WarehouseConfig(p_item=0.0)
+    gs = make_multi_warehouse_env(cfg, AGENTS4)
+    bls = make_batched_local_warehouse_env(cfg)
+    key = jax.random.PRNGKey(6)
+    k0, key = jax.random.split(key)
+    s0 = gs.reset(k0)
+    T, A = 16, 4
+    acts = jax.random.randint(key, (T, A), 0, 5)
+
+    def gs_step(s, xs):
+        a, k = xs
+        s, obs, r, info = gs.step(s, a, k)
+        return s, {"obs": obs, "r": r, "u": info["u"]}
+
+    _, traj = jax.lax.scan(gs_step, s0, (acts, jax.random.split(key, T)))
+    s_loc = jax.vmap(lambda i, j: local_warehouse_state(s0, i, j))(
+        AGENTS4[:, 0], AGENTS4[:, 1])
+
+    def ls_step(s, xs):
+        a, u = xs
+        s, obs, r, _ = bls.step(s, a, u, jax.random.PRNGKey(0))
+        return s, {"obs": obs, "r": r}
+
+    _, replay = jax.lax.scan(ls_step, s_loc, (acts, traj["u"]))
+    assert jnp.array_equal(replay["obs"], traj["obs"])
+    assert jnp.allclose(replay["r"], traj["r"], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused batched IALS engine
+# ---------------------------------------------------------------------------
+
+def _batched_ials(cfg_kw=None, **kw):
+    cfg = TrafficConfig(**(cfg_kw or {}))
+    bls = make_batched_local_traffic_env(cfg)
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=bls.spec.n_influence, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    return bls, acfg, params, ials.make_batched_ials(bls, params, acfg,
+                                                     **kw)
+
+
+def test_batched_ials_shapes_and_determinism():
+    bls, acfg, params, env = _batched_ials()
+    key = jax.random.PRNGKey(7)
+    B = 5
+    s = env.reset(key, B)
+    a = jnp.zeros((B,), jnp.int32)
+    s2, obs, r, info = jax.jit(env.step)(s, a, key)
+    assert obs.shape == (B, bls.spec.obs_dim)
+    assert r.shape == (B,)
+    assert info["u"].shape == (B, 4)
+    assert info["u_probs"].shape == (B, 4)
+    s3, obs3, r3, _ = jax.jit(env.step)(s, a, key)
+    assert jnp.array_equal(obs, obs3) and jnp.array_equal(r, r3)
+    # aip state evolved
+    assert float(jnp.abs(s2.aip_state - s.aip_state).max()) > 0
+
+
+def test_batched_ials_fixed_marginal_rate():
+    for p in (0.1, 0.5):
+        _, _, _, env = _batched_ials(fixed_marginal=p)
+        key = jax.random.PRNGKey(8)
+        s = env.reset(key, 16)
+
+        def step(carry, k):
+            s = carry
+            s, _, _, info = env.step(s, jnp.zeros((16,), jnp.int32), k)
+            return s, info["u"]
+
+        _, us = jax.lax.scan(step, s, jax.random.split(key, 96))
+        assert abs(float(us.mean()) - p) < 0.05, p
+
+
+def test_batched_ials_deterministic_marginal_vec():
+    """p in {0, 1} makes the threshold-compare deterministic, pinning the
+    fused path's Bernoulli semantics exactly."""
+    vec = jnp.array([0.0, 1.0, 0.0, 1.0])
+    _, _, _, env = _batched_ials(fixed_marginal_vec=vec)
+    key = jax.random.PRNGKey(9)
+    s = env.reset(key, 3)
+    for _ in range(4):
+        key, k = jax.random.split(key)
+        s, _, _, info = jax.jit(env.step)(s, jnp.zeros((3,), jnp.int32), k)
+        assert jnp.array_equal(info["u"],
+                               jnp.broadcast_to(vec, info["u"].shape))
+
+
+def test_batched_multi_ials_matches_scalar_multi_ials_marginals():
+    """Batched vs scalar multi-IALS: same per-agent fixed marginals drive
+    the same per-agent u rates (the engines share dynamics, not bits)."""
+    A = 4
+    marg = jnp.stack([jnp.full((4,), p) for p in (0.05, 0.3, 0.6, 0.9)])
+    cfg = TrafficConfig()
+    bls = make_batched_local_traffic_env(cfg)
+    acfg = influence.AIPConfig(kind="fnn", d_in=bls.spec.dset_dim,
+                               n_out=4, hidden=8, stack=2)
+    params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+        jax.random.split(jax.random.PRNGKey(0), A))
+    env = multi_ials.make_batched_multi_ials(bls, params, acfg, A,
+                                             fixed_marginal_vec=marg)
+    key = jax.random.PRNGKey(10)
+    B = 8
+    s = env.reset(key, B)
+
+    def step(carry, k):
+        s = carry
+        s, _, _, info = env.step(s, jnp.zeros((B, A), jnp.int32), k)
+        return s, info["u"]
+
+    _, us = jax.lax.scan(step, s, jax.random.split(key, 64))   # (T,B,A,M)
+    rates = us.mean(axis=(0, 1, 3))
+    assert jnp.all(jnp.abs(rates - jnp.array([0.05, 0.3, 0.6, 0.9])) < 0.06)
+
+
+def test_batched_multi_ials_agent_layout():
+    """(B, A, ...) layout: agent i's trained-AIP probabilities come from
+    agent i's params (check by giving agents wildly different heads)."""
+    A, B = 3, 4
+    cfg = TrafficConfig()
+    bls = make_batched_local_traffic_env(cfg)
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=4, hidden=8)
+    params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+        jax.random.split(jax.random.PRNGKey(1), A))
+    # agent 0's head bias -> -inf (p ~ 0); agent 2's -> +inf (p ~ 1)
+    hb = params["head"]["b"]
+    hb = hb.at[0].set(-50.0).at[2].set(50.0)
+    params = {**params, "head": {**params["head"], "b": hb}}
+    env = multi_ials.make_batched_multi_ials(bls, params, acfg, A)
+    key = jax.random.PRNGKey(11)
+    s = env.reset(key, B)
+    s2, obs, r, info = jax.jit(env.step)(s, jnp.zeros((B, A), jnp.int32),
+                                         key)
+    assert obs.shape == (B, A, bls.spec.obs_dim)
+    assert jnp.all(info["u"][:, 0] == 0.0)
+    assert jnp.all(info["u"][:, 2] == 1.0)
+    assert env.observe(s2).shape == (B, A, bls.spec.obs_dim)
+
+
+def test_ppo_rollout_on_batched_engine():
+    """PPO's rollout consumes the fused engine natively (no vmap adapter)
+    and trains one iteration end-to-end."""
+    from repro.rl import ppo
+    bls = make_batched_local_warehouse_env(WarehouseConfig())
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=12, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(2))
+    env = ials.make_batched_ials(bls, params, acfg)
+    cfg = ppo.PPOConfig(obs_dim=bls.spec.obs_dim, n_actions=5, n_envs=4,
+                        rollout_len=6, episode_len=4, hidden=16)
+    key = jax.random.PRNGKey(12)
+    pol = ppo.init_policy(cfg, key)
+    rs = ppo.init_rollout_state(env, cfg, key)
+    rs, batch, v_last = ppo.rollout(env, cfg, pol, rs, key)
+    assert batch["x"].shape == (6, 4, bls.spec.obs_dim)
+    assert float(batch["done"].sum()) > 0      # periodic reset fired
+    opt, it_fn = ppo.make_train_iteration(env, cfg)
+    ost = opt.init(pol)
+    pol, ost, rs, m = it_fn(pol, ost, rs, key)
+    assert jnp.isfinite(m["loss"])
