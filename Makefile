@@ -1,12 +1,18 @@
 PY := PYTHONPATH=src python
 
 # Tier-1: fast suite, `slow`-marked tests excluded via pyproject addopts.
-test-fast:
+# Runs the docs drift gate first (it is also a pytest in tests/test_docs.py).
+test-fast: docs-check
 	$(PY) -m pytest -x -q
 
 # Everything, including the multi-minute jit-heavy tests.
 test-all:
 	$(PY) -m pytest -q -m "slow or not slow"
+
+# Docs drift gate: README/ARCHITECTURE exist, core modules keep their
+# docstrings, and doc-quoted `make`/`python -m` snippets match the tree.
+docs-check:
+	$(PY) -m tools.docs_check
 
 bench-quick:
 	$(PY) -m benchmarks.run --quick
@@ -19,4 +25,5 @@ multi-agent-bench:
 bench-check:
 	$(PY) -m benchmarks.run --check
 
-.PHONY: test-fast test-all bench-quick multi-agent-bench bench-check
+.PHONY: test-fast test-all docs-check bench-quick multi-agent-bench \
+	bench-check

@@ -2,12 +2,20 @@
 
 Aggregate agent-steps/second for, per domain:
 
-  gs            the full global simulator (one agent extracted)
-  gs-multi      the global simulator with every region as an agent
+  gs            the full global simulator (one agent extracted; scalar
+                protocol, batched by the vmap adapter)
+  gs-multi      the NATIVE batched multi-agent global simulator — every
+                region an agent, B whole grids advancing as one
+                vectorized program with bulk per-tick randomness. Both
+                engines (this and multi-ials) roll whole horizons through
+                ``env_rollout``, so the gs-multi vs multi-ials comparison
+                is engine-vs-engine, not engine-vs-vmap-of-scalar.
   ials-1        a single local IALS on the fused batched engine
   multi-ials    N local IALS + N AIPs as ONE fused-step batched program
                 (native BatchedEnv: bulk random bits, fused AIP tick,
-                one vectorized LS transition for all N·B lanes)
+                one vectorized LS transition for all N·B lanes, the
+                whole horizon rolled via ``env_rollout``'s bulk-noise
+                path)
   loop-ials     the same N simulators stepped in a Python loop — what the
                 batched construction replaces (dispatch-bound)
 
@@ -51,10 +59,12 @@ def run(quick: bool = False):
     from repro.core import collect, influence, ials as ials_lib, multi_ials
     from repro.envs.traffic import (TrafficConfig, make_traffic_env,
                                     make_batched_local_traffic_env,
+                                    make_batched_multi_traffic_env,
                                     make_local_traffic_env,
                                     make_multi_traffic_env)
     from repro.envs.warehouse import (WarehouseConfig, make_warehouse_env,
                                       make_batched_local_warehouse_env,
+                                      make_batched_multi_warehouse_env,
                                       make_local_warehouse_env,
                                       make_multi_warehouse_env)
 
@@ -70,6 +80,7 @@ def run(quick: bool = False):
             agents = [(i, j) for i in range(G) for j in range(G)]
             gs = make_traffic_env(cfg)
             gs_multi = make_multi_traffic_env(cfg, agents)
+            gs_multi_b = make_batched_multi_traffic_env(cfg, agents)
             ls = make_local_traffic_env(cfg)
             bls = make_batched_local_traffic_env(cfg)
             aip_kind, stack = "fnn", 8
@@ -79,6 +90,7 @@ def run(quick: bool = False):
             agents = [(i, j) for i in range(G) for j in range(G)]
             gs = make_warehouse_env(cfg)
             gs_multi = make_multi_warehouse_env(cfg, agents)
+            gs_multi_b = make_batched_multi_warehouse_env(cfg, agents)
             ls = make_local_warehouse_env(cfg)
             bls = make_batched_local_warehouse_env(cfg)
             aip_kind, stack = "gru", 1
@@ -98,7 +110,8 @@ def run(quick: bool = False):
 
         sims = {
             "gs": (gs, A),          # one global tick services all A regions
-            "gs-multi": (gs_multi, A),
+            "gs-multi": (gs_multi_b, A),    # native batched: engine-vs-
+            #                                 engine against multi-ials
             "ials-1": (ials_lib.make_batched_ials(bls, aip0, acfg), 1),
             "multi-ials": (multi_ials.make_batched_multi_ials(
                 bls, aips, acfg, A), A),

@@ -1,3 +1,8 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's primary contribution: the IBA pipeline and the IALS
+simulators.
+
+``influence`` (the AIP and its training loop), ``collect`` (Algorithm 1
+dataset collection from the GS), ``ials`` (the single-agent IALS and the
+fused batched rollout engine), ``multi_ials`` (Distributed IALS — one
+IALS + AIP per agent region, batched into one program).
+"""

@@ -18,6 +18,21 @@ instead of a vmap of B scalar programs each splitting its own keys.
 protocol (vmap adapter); ``unbatch_env`` squeezes a batched env back down to
 the scalar signature — so both protocols interoperate everywhere.
 
+Whole-horizon layer (see docs/ARCHITECTURE.md): a ``BatchedEnv`` may
+additionally expose
+  - ``noise_fn(key, n_envs)`` — draw ONE tick's worth of randomness as a
+    pytree (the same derivation ``step`` performs internally), and
+  - ``step_det(state, actions, noise)`` — the deterministic remainder of
+    the tick, with the invariant
+        step(s, a, k) == step_det(s, a, noise_fn(k, B))
+    holding *bitwise*.
+``env_rollout`` exploits the pair: all T ticks' randomness is drawn in bulk
+outside the scan, so the scan body is pure compute — and an env may override
+``rollout`` entirely (the fused IALS engines dispatch a Pallas kernel that
+keeps AIP hidden state and LS state VMEM-resident across the whole horizon
+on TPU). Every path is bitwise-equal to scanning ``step``; the overrides
+only change *where* the work happens.
+
 ``info`` carries the IBA quantities extracted from the GS (Algorithm 1):
   - "u": influence sources u_t  (what the AIP learns to predict)
   - "dset": the d-separating-set features d_t (AIP input)
@@ -75,8 +90,13 @@ class BatchedEnv(NamedTuple):
     rollout: Any = None  # optional (state, actions (T, B, ...), keys (T,))
     #                      -> (state, rewards (T, ...)): a whole-horizon
     #                      native rollout, bitwise-equal to scanning step
-    #                      but free to exploit the static horizon (ring
-    #                      buffers, static phases). Use ``env_rollout``.
+    #                      but free to exploit the static horizon (VMEM-
+    #                      resident state, bulk noise). Use ``env_rollout``.
+    noise_fn: Any = None  # optional (key, n_envs) -> one tick's randomness
+    #                       as a pytree, exactly as ``step`` derives it
+    step_det: Any = None  # optional (state, actions, noise) -> (state, obs,
+    #                       r, info); step(s,a,k) == step_det(s,a,
+    #                       noise_fn(k,B)) bitwise
 
 
 class BatchedLocalEnv(NamedTuple):
@@ -86,6 +106,16 @@ class BatchedLocalEnv(NamedTuple):
     #                    info)
     observe: Callable
     dset_fn: Callable  # (state, actions) -> d_t features (B, dset_dim)
+    noise_fn: Any = None  # optional (key, n_envs) -> the LS's own per-tick
+    #                       randomness pytree (None-leaved if deterministic)
+    step_det: Any = None  # optional (state, actions, u, noise) -> (state,
+    #                       obs, r, info), the deterministic tick
+    rollout_tick: Any = None  # optional (state, actions, u, noise) ->
+    #                           (state, reward): the transition+reward core
+    #                           only (no obs/info), pure jnp on state
+    #                           leaves — traceable inside a Pallas kernel
+    #                           body, which is what the whole-horizon fused
+    #                           engine inlines per grid step
 
 
 def _batch_size(state) -> int:
@@ -134,16 +164,41 @@ def as_batched(env) -> BatchedEnv:
     return batch_env(env)
 
 
+def horizon_noise(noise_fn, keys, n_envs: int):
+    """Draw a whole horizon's randomness in bulk: (T,) keys -> a pytree
+    whose leaves carry a leading T axis, leaf t being exactly
+    ``noise_fn(keys[t], n_envs)``."""
+    return jax.vmap(lambda k: noise_fn(k, n_envs))(keys)
+
+
 def env_rollout(benv: BatchedEnv, state, actions, keys, *,
                 unroll: int = 8):
     """Whole-horizon rollout: actions (T, B, ...), keys (T,) ->
-    (final state, rewards (T, ...)). Dispatches the env's native
-    ``rollout`` when it has one (the fused engines exploit the static
-    horizon there); otherwise an unrolled scan of ``step``. Both paths
-    derive per-tick randomness from the same keys, so they agree
-    bitwise."""
+    (final state, rewards (T, ...)).
+
+    Dispatch order, most fused first — every path agrees bitwise because
+    all of them derive per-tick randomness from the same keys:
+      1. the env's native ``rollout`` override (the fused IALS engines
+         keep state device-resident across the whole horizon there);
+      2. bulk-noise scan of ``step_det`` when the env splits its tick
+         into ``noise_fn``/``step_det`` — all T ticks' randomness is
+         drawn outside the scan, the body is pure compute;
+      3. an unrolled scan of ``step``.
+    """
     if benv.rollout is not None:
         return benv.rollout(state, actions, keys)
+
+    if benv.step_det is not None and benv.noise_fn is not None:
+        B = _batch_size(state)
+        noise = horizon_noise(benv.noise_fn, keys, B)
+
+        def step_det(carry, xs):
+            a, n = xs
+            s, _, r, _ = benv.step_det(carry, a, n)
+            return s, r
+
+        return jax.lax.scan(step_det, state, (actions, noise),
+                            unroll=unroll)
 
     def step(carry, xs):
         a, k = xs

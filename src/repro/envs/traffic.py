@@ -39,7 +39,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from .api import (BatchedLocalEnv, Env, EnvSpec, LocalEnv,
+from .api import (BatchedEnv, BatchedLocalEnv, Env, EnvSpec, LocalEnv,
                   squeeze_agent_env)
 
 
@@ -232,6 +232,152 @@ def make_multi_traffic_env(cfg: TrafficConfig, agents) -> Env:
     return Env(spec=spec, reset=reset, step=step, observe=observe)
 
 
+def make_batched_multi_traffic_env(cfg: TrafficConfig,
+                                   agents) -> BatchedEnv:
+    """Natively batched multi-agent GS: B whole G x G grids advance as one
+    vectorized program — state leaves carry a leading (B,) env axis, every
+    tick draws its boundary inflow with a single bulk Bernoulli call, and
+    per-agent extraction is one vmap over the agent list (out axis 1, so
+    obs/reward/info leaves are (B, A, ...)).
+
+    Same dynamics as ``make_multi_traffic_env``; with ``p_in == 0`` (the
+    only internal randomness switched off) the two agree exactly, which is
+    what the engine-vs-engine parity tests pin down. This is what makes
+    the ``gs-multi`` benchmark row an engine-vs-engine comparison instead
+    of engine-vs-vmap-of-scalar."""
+    G, L = cfg.grid, cfg.lane_len
+    agents = jnp.asarray(agents, jnp.int32)
+    A = agents.shape[0]
+    ais, ajs = agents[:, 0], agents[:, 1]
+    agent_mask = jnp.zeros((G, G), bool).at[ais, ajs].set(True)
+    M = 8 if cfg.ext_influence else 4
+    spec = EnvSpec(name="traffic-gs-multi-b", obs_dim=4 * L + 1,
+                   n_actions=2, n_influence=M, dset_dim=4 * L,
+                   dset_full_dim=4 * L + 1, n_agents=A)
+
+    def observe(state: TrafficState):
+        B = state.lanes.shape[0]
+
+        def one(i, j):
+            local = state.lanes[:, i, j].reshape(B, -1).astype(jnp.float32)
+            return jnp.concatenate(
+                [local, state.phase[:, i, j, None].astype(jnp.float32)],
+                axis=-1)
+
+        return jax.vmap(one, out_axes=1)(ais, ajs)      # (B, A, obs)
+
+    def reset(key, n_envs: int):
+        k1, k2 = jax.random.split(key)
+        lanes = jax.random.bernoulli(k1, 0.15, (n_envs, G, G, 4, L))
+        phase = jax.random.randint(k2, (n_envs, G, G), 0, 2
+                                   ).astype(jnp.int8)
+        return TrafficState(lanes=lanes, phase=phase,
+                            timer=jnp.zeros((n_envs, G, G), jnp.int32))
+
+    def noise_fn(key, n_envs: int):
+        kin = jax.random.split(key)[1]
+        return jax.random.bernoulli(kin, cfg.p_in, (n_envs, G, G, 4))
+
+    def step_det(state: TrafficState, actions, inflow):
+        lanes, phase, timer = state       # (B,G,G,4,L), (B,G,G), (B,G,G)
+        B = lanes.shape[0]
+        phase = phase.at[:, ais, ajs].set(actions.astype(jnp.int8))
+        green = _green(phase, G)                         # (B, G, G, 4)
+
+        # crossing feasibility: downstream tail must be free (edges exit)
+        dest_free = jnp.ones((B, G, G, 4), bool)
+        for d in range(4):
+            tails = lanes[:, :, :, d, 0]
+            rolled = jnp.roll(tails, shift=(-_DI[d], -_DJ[d]), axis=(1, 2))
+            free = ~rolled
+            if d == 0:
+                free = free.at[:, G - 1, :].set(True)
+            elif d == 1:
+                free = free.at[:, 0, :].set(True)
+            elif d == 2:
+                free = free.at[:, :, 0].set(True)
+            else:
+                free = free.at[:, :, G - 1].set(True)
+            dest_free = dest_free.at[:, :, :, d].set(free)
+
+        new_lanes, moved, crossed = _advance_lane(lanes, green & dest_free)
+
+        # injections: crossings arriving from upstream, else boundary
+        # inflow — drawn for the whole batch in ``noise_fn``
+        inj = jnp.zeros((B, G, G, 4), bool)
+        for d in range(4):
+            arriving = jnp.roll(crossed[:, :, :, d],
+                                shift=(_DI[d], _DJ[d]), axis=(1, 2))
+            boundary = jnp.zeros((G, G), bool)
+            if d == 0:
+                arriving = arriving.at[:, 0, :].set(False)
+                boundary = boundary.at[0, :].set(True)
+            elif d == 1:
+                arriving = arriving.at[:, G - 1, :].set(False)
+                boundary = boundary.at[G - 1, :].set(True)
+            elif d == 2:
+                arriving = arriving.at[:, :, G - 1].set(False)
+                boundary = boundary.at[:, G - 1].set(True)
+            else:
+                arriving = arriving.at[:, :, 0].set(False)
+                boundary = boundary.at[:, 0].set(True)
+            inj = inj.at[:, :, :, d].set(
+                arriving | (boundary & inflow[:, :, :, d]))
+        tail_free = ~new_lanes[:, :, :, :, 0]
+        inj = inj & tail_free
+        new_lanes = new_lanes.at[:, :, :, :, 0].set(
+            new_lanes[:, :, :, :, 0] | inj)
+
+        # actuated controllers (non-agent intersections)
+        q = lanes[:, :, :, :, L - cfg.queue_window:].sum(-1)   # (B,G,G,4)
+        q_ns, q_ew = q[..., 0] + q[..., 1], q[..., 2] + q[..., 3]
+        green_q = jnp.where(phase == 0, q_ns, q_ew)
+        red_q = jnp.where(phase == 0, q_ew, q_ns)
+        want_switch = (red_q > green_q) & (timer >= cfg.min_phase)
+        new_phase = jnp.where(want_switch, 1 - phase,
+                              phase).astype(jnp.int8)
+        new_timer = jnp.where(want_switch, 0, timer + 1)
+        new_phase = jnp.where(agent_mask, phase, new_phase).astype(jnp.int8)
+        new_timer = jnp.where(agent_mask, 0, new_timer)
+
+        new_state = TrafficState(lanes=new_lanes, phase=new_phase,
+                                 timer=new_timer)
+
+        def view(i, j):
+            n_cars = lanes[:, i, j].sum(axis=(1, 2))
+            n_moved = moved[:, i, j].sum(axis=(1, 2))
+            reward = jnp.where(n_cars > 0,
+                               n_moved / jnp.maximum(n_cars, 1), 1.0)
+            dset = lanes[:, i, j].reshape(B, -1).astype(jnp.float32)
+            u = inj[:, i, j].astype(jnp.float32)
+            if cfg.ext_influence:
+                u = jnp.concatenate(
+                    [u, (~dest_free[:, i, j]).astype(jnp.float32)],
+                    axis=-1)
+            obs = jnp.concatenate(
+                [new_lanes[:, i, j].reshape(B, -1).astype(jnp.float32),
+                 new_phase[:, i, j, None].astype(jnp.float32)], axis=-1)
+            info = {
+                "u": u,
+                "dset": dset,
+                "dset_full": jnp.concatenate(
+                    [dset, phase[:, i, j, None].astype(jnp.float32)],
+                    axis=-1),
+                "n_cars": n_cars,
+            }
+            return obs, reward, info
+
+        obs, reward, info = jax.vmap(view, out_axes=1)(ais, ajs)
+        return new_state, obs, reward, info
+
+    def step(state: TrafficState, actions, key):
+        return step_det(state, actions,
+                        noise_fn(key, state.lanes.shape[0]))
+
+    return BatchedEnv(spec=spec, reset=reset, step=step, observe=observe,
+                      noise_fn=noise_fn, step_det=step_det)
+
+
 def make_traffic_env(cfg: TrafficConfig = TrafficConfig()):
     """Single-agent GS: the multi-agent env at ``cfg.agent``, squeezed."""
     multi = make_multi_traffic_env(cfg, jnp.array([cfg.agent], jnp.int32))
@@ -293,7 +439,9 @@ def make_batched_local_traffic_env(
     one step is one vectorized lane advance for the whole batch — the fused
     IALS rollout engine's transition. Same dynamics as
     ``make_local_traffic_env`` (the traffic LS draws no randomness of its
-    own, so batched and vmapped-scalar steps agree exactly)."""
+    own, so batched and vmapped-scalar steps agree exactly, ``noise_fn``
+    is leafless, and ``rollout_tick`` — the transition+reward core the
+    whole-horizon kernel inlines — is pure boolean lane algebra)."""
     L = cfg.lane_len
     M = 8 if cfg.ext_influence else 4
     spec = EnvSpec(name="traffic-ls-b", obs_dim=4 * L + 1, n_actions=2,
@@ -310,7 +458,11 @@ def make_batched_local_traffic_env(
         return LocalTrafficState(
             lanes=lanes, phase=jnp.zeros((n_envs,), jnp.int8))
 
-    def step(state: LocalTrafficState, actions, u, key):
+    def noise_fn(key, n_envs: int):
+        return None          # the traffic LS is deterministic given u_t
+
+    def rollout_tick(state: LocalTrafficState, actions, u, noise):
+        del noise
         lanes = state.lanes                              # (B, 4, L)
         phase = actions.astype(jnp.int8)                 # (B,)
         ns = (phase == 0)[:, None]
@@ -326,19 +478,29 @@ def make_batched_local_traffic_env(
         n_moved = moved.sum(axis=(1, 2))
         reward = jnp.where(n_cars > 0,
                            n_moved / jnp.maximum(n_cars, 1), 1.0)
-        new_state = LocalTrafficState(lanes=new_lanes, phase=phase)
+        return LocalTrafficState(lanes=new_lanes, phase=phase), reward
+
+    def step_det(state: LocalTrafficState, actions, u, noise):
+        new_state, reward = rollout_tick(state, actions, u, noise)
+        lanes = state.lanes
         B = lanes.shape[0]
         dset = lanes.reshape(B, -1).astype(jnp.float32)
         info = {"dset": dset,
                 "dset_full": jnp.concatenate(
                     [dset, state.phase[:, None].astype(jnp.float32)],
                     axis=-1),
-                "n_cars": n_cars}
+                "n_cars": lanes.sum(axis=(1, 2))}
         return new_state, observe(new_state), reward, info
+
+    def step(state: LocalTrafficState, actions, u, key):
+        return step_det(state, actions, u,
+                        noise_fn(key, state.lanes.shape[0]))
 
     def dset_fn(state: LocalTrafficState, actions):
         B = state.lanes.shape[0]
         return state.lanes.reshape(B, -1).astype(jnp.float32)
 
     return BatchedLocalEnv(spec=spec, reset=reset, step=step,
-                           observe=observe, dset_fn=dset_fn)
+                           observe=observe, dset_fn=dset_fn,
+                           noise_fn=noise_fn, step_det=step_det,
+                           rollout_tick=rollout_tick)

@@ -35,7 +35,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from .api import (BatchedLocalEnv, Env, EnvSpec, LocalEnv,
+from .api import (BatchedEnv, BatchedLocalEnv, Env, EnvSpec, LocalEnv,
                   squeeze_agent_env)
 
 # item cell coordinates inside a 5x5 region, in fixed order:
@@ -228,6 +228,153 @@ def make_multi_warehouse_env(cfg: WarehouseConfig, agents) -> Env:
     return Env(spec=spec, reset=reset, step=step, observe=observe)
 
 
+def make_batched_multi_warehouse_env(cfg: WarehouseConfig,
+                                     agents) -> BatchedEnv:
+    """Natively batched multi-agent GS: B whole warehouse floors advance as
+    one vectorized program. The scripted-robot policy, pickups, and item
+    updates are written with an explicit (B,) leading axis (no vmap of the
+    scalar step), both shelf spawns come from one bulk Bernoulli pair per
+    tick (``noise_fn``), and per-agent extraction is a single vmap over the
+    agent list (out axis 1 -> (B, A, ...) leaves).
+
+    Same dynamics as ``make_multi_warehouse_env``; with ``p_item == 0``
+    (the only internal randomness switched off) the two agree exactly —
+    the engine-vs-engine parity tests pin this. The ``gs-multi`` benchmark
+    row steps this construction."""
+    R, S = cfg.grid, cfg.region
+    agents = jnp.asarray(agents, jnp.int32)
+    A = agents.shape[0]
+    ais, ajs = agents[:, 0], agents[:, 1]
+    nobs = S * S + 12
+    spec = EnvSpec(name="warehouse-gs-multi-b", obs_dim=nobs, n_actions=5,
+                   n_influence=12, dset_dim=24, dset_full_dim=24 + S * S,
+                   n_agents=A)
+
+    def _region_ages_all(items_h, items_v):
+        """(B, R+1, R, 3)/(B, R, R+1, 3) shelves -> (B, R, R, 12) per-
+        region ages in _ITEM_RC order (top, bottom, left, right)."""
+        return jnp.concatenate(
+            [items_h[:, :R], items_h[:, 1:],
+             items_v[:, :, :R], items_v[:, :, 1:]], axis=-1)
+
+    def _at_masks(pos):
+        """(B, R, R, 2) positions -> (B, R, R, 12) item-cell occupancy."""
+        return ((_ITEM_R == pos[..., 0:1]) & (_ITEM_C == pos[..., 1:2]))
+
+    def _bitmap(pos):
+        """(B, 2) agent positions -> (B, S*S) one-hot location bitmaps."""
+        B = pos.shape[0]
+        return jnp.zeros((B, S, S), jnp.float32).at[
+            jnp.arange(B), pos[:, 0], pos[:, 1]].set(1.0).reshape(B, -1)
+
+    def observe(state: WarehouseState):
+        ages = _region_ages_all(state.items_h, state.items_v)
+
+        def one(i, j):
+            return jnp.concatenate(
+                [_bitmap(state.pos[:, i, j]),
+                 (ages[:, i, j] > 0).astype(jnp.float32)], axis=-1)
+
+        return jax.vmap(one, out_axes=1)(ais, ajs)      # (B, A, obs)
+
+    def reset(key, n_envs: int):
+        k1, k2, k3 = jax.random.split(key, 3)
+        pos = jax.random.randint(k1, (n_envs, R, R, 2), 0, S)
+        items_h = (jax.random.bernoulli(k2, 0.3, (n_envs, R + 1, R, 3))
+                   ).astype(jnp.int32)
+        items_v = (jax.random.bernoulli(k3, 0.3, (n_envs, R, R + 1, 3))
+                   ).astype(jnp.int32)
+        return WarehouseState(pos=pos, items_h=items_h, items_v=items_v)
+
+    def noise_fn(key, n_envs: int):
+        _, kh, kv = jax.random.split(key, 3)
+        return {
+            "spawn_h": jax.random.bernoulli(kh, cfg.p_item,
+                                            (n_envs, R + 1, R, 3)),
+            "spawn_v": jax.random.bernoulli(kv, cfg.p_item,
+                                            (n_envs, R, R + 1, 3)),
+        }
+
+    def step_det(state: WarehouseState, actions, noise):
+        pos, items_h, items_v = state     # (B,R,R,2), (B,R+1,R,3), ...
+        B = pos.shape[0]
+        region_ages = _region_ages_all(items_h, items_v)   # (B,R,R,12)
+
+        # scripted policy for every robot, vectorized (L1-greedy toward
+        # the oldest active item); agents overridden
+        has = region_ages > 0
+        target = jnp.argmax(jnp.where(has, region_ages, -1), axis=-1)
+        tr, tc = _ITEM_R[target], _ITEM_C[target]          # (B,R,R)
+        dr, dc = tr - pos[..., 0], tc - pos[..., 1]
+        acts = jnp.where(dr < 0, 1, jnp.where(dr > 0, 2,
+                         jnp.where(dc < 0, 3, jnp.where(dc > 0, 4, 0))))
+        acts = jnp.where(has.any(-1), acts, 0)
+        acts = acts.at[:, ais, ajs].set(actions.astype(acts.dtype))
+
+        new_pos = jnp.clip(pos + _MOVE[acts], 0, S - 1)
+
+        # pickups: per-shelf-cell robot counts via slice-adds (each shelf
+        # segment is shared by the two adjacent regions)
+        at_mask = _at_masks(new_pos).astype(jnp.int32)     # (B,R,R,12)
+        occ_h = jnp.zeros((B, R + 1, R, 3), jnp.int32)
+        occ_v = jnp.zeros((B, R, R + 1, 3), jnp.int32)
+        occ_h = occ_h.at[:, :R].add(at_mask[..., 0:3])
+        occ_h = occ_h.at[:, 1:].add(at_mask[..., 3:6])
+        occ_v = occ_v.at[:, :, :R].add(at_mask[..., 6:9])
+        occ_v = occ_v.at[:, :, 1:].add(at_mask[..., 9:12])
+
+        collected_h = (occ_h > 0) & (items_h > 0)
+        collected_v = (occ_v > 0) & (items_v > 0)
+
+        def upd(items, collected, spawn):
+            items = jnp.where(collected, 0, items)
+            items = jnp.where(items > 0,
+                              jnp.minimum(items + 1, cfg.max_age), 0)
+            if cfg.vanish_after > 0:
+                items = jnp.where(items > cfg.vanish_after, 0, items)
+            return jnp.where((items == 0) & spawn, 1, items)
+
+        new_h = upd(items_h, collected_h, noise["spawn_h"])
+        new_v = upd(items_v, collected_v, noise["spawn_v"])
+        new_state = WarehouseState(pos=new_pos, items_h=new_h,
+                                   items_v=new_v)
+        new_ages = _region_ages_all(new_h, new_v)
+
+        def view(i, j):
+            ages_before = region_ages[:, i, j]             # (B, 12)
+            agent_at = _at_item_mask_b(new_pos[:, i, j])
+            reward = (agent_at & (ages_before > 0)).sum(-1
+                                                        ).astype(jnp.float32)
+            occ_agent_region = jnp.concatenate(
+                [occ_h[:, i, j], occ_h[:, i + 1, j],
+                 occ_v[:, i, j], occ_v[:, i, j + 1]], axis=-1)
+            u = ((occ_agent_region - agent_at.astype(jnp.int32)) > 0)
+            if cfg.vanish_after > 0:
+                u = u | (ages_before >= cfg.vanish_after)
+            at_before = _at_item_mask_b(pos[:, i, j])
+            dset = jnp.concatenate(
+                [(ages_before > 0).astype(jnp.float32),
+                 (at_before | agent_at).astype(jnp.float32)], axis=-1)
+            obs = jnp.concatenate(
+                [_bitmap(new_pos[:, i, j]),
+                 (new_ages[:, i, j] > 0).astype(jnp.float32)], axis=-1)
+            info = {"u": u.astype(jnp.float32), "dset": dset,
+                    "dset_full": jnp.concatenate(
+                        [dset, _bitmap(pos[:, i, j])], axis=-1),
+                    "ages": ages_before}
+            return obs, reward, info
+
+        obs, reward, info = jax.vmap(view, out_axes=1)(ais, ajs)
+        return new_state, obs, reward, info
+
+    def step(state: WarehouseState, actions, key):
+        return step_det(state, actions,
+                        noise_fn(key, state.pos.shape[0]))
+
+    return BatchedEnv(spec=spec, reset=reset, step=step, observe=observe,
+                      noise_fn=noise_fn, step_det=step_det)
+
+
 def make_warehouse_env(cfg: WarehouseConfig = WarehouseConfig()):
     """Single-agent GS: the multi-agent env at ``cfg.agent``, squeezed."""
     multi = make_multi_warehouse_env(cfg, jnp.array([cfg.agent], jnp.int32))
@@ -291,6 +438,28 @@ def _at_item_mask_b(pos):
     return (_ITEM_R[None] == pos[:, :1]) & (_ITEM_C[None] == pos[:, 1:])
 
 
+def _at_item_mask_k(pos, S: int):
+    """``_at_item_mask_b`` without the ``_ITEM_R``/``_ITEM_C`` constant
+    tables: the 12 item-cell coordinates are rebuilt from a 2D iota
+    (groups of 3 per edge, in ``_ITEM_RC`` order — top, bottom, left,
+    right). Pallas kernel bodies reject captured array constants, and
+    this function is traced into the whole-horizon kernel; the values
+    are integer-identical to the table lookup."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, 12), 1)
+    g, w = idx // 3, idx % 3
+    r = jnp.where(g == 0, 0, jnp.where(g == 1, S - 1, w + 1))
+    c = jnp.where(g == 2, 0, jnp.where(g == 3, S - 1, w + 1))
+    return (r == pos[:, 0:1]) & (c == pos[:, 1:2])
+
+
+def _move_delta_k(actions):
+    """``_MOVE[actions]`` as a select chain (same integers, no table
+    gather) — kernel-safe companion to ``_at_item_mask_k``."""
+    dr = jnp.where(actions == 1, -1, jnp.where(actions == 2, 1, 0))
+    dc = jnp.where(actions == 3, -1, jnp.where(actions == 4, 1, 0))
+    return jnp.stack([dr, dc], axis=-1)
+
+
 def make_batched_local_warehouse_env(
         cfg: WarehouseConfig = WarehouseConfig()) -> BatchedLocalEnv:
     """Natively batched LS: (B,) leading env axis on every leaf, one
@@ -317,10 +486,15 @@ def make_batched_local_warehouse_env(
                                      (n_envs, 12)).astype(jnp.int32)
         return LocalWarehouseState(pos=pos, items=items)
 
-    def step(state: LocalWarehouseState, actions, u, key):
+    def noise_fn(key, n_envs: int):
+        return jax.random.bernoulli(key, cfg.p_item, (n_envs, 12))
+
+    def rollout_tick(state: LocalWarehouseState, actions, u, spawn):
+        # traced into the whole-horizon Pallas kernel body: only the
+        # constant-free helpers (no table gathers, no captured arrays)
         pos, items = state
-        new_pos = jnp.clip(pos + _MOVE[actions], 0, S - 1)
-        agent_at = _at_item_mask_b(new_pos)
+        new_pos = jnp.clip(pos + _move_delta_k(actions), 0, S - 1)
+        agent_at = _at_item_mask_k(new_pos, S)
         reward = (agent_at & (items > 0)).sum(-1).astype(jnp.float32)
         collected = agent_at | (u > 0.5)
         new_items = jnp.where(collected, 0, items)
@@ -329,10 +503,13 @@ def make_batched_local_warehouse_env(
         if cfg.vanish_after > 0:
             new_items = jnp.where(new_items > cfg.vanish_after, 0,
                                   new_items)
-        spawn = jax.random.bernoulli(key, cfg.p_item, new_items.shape)
         new_items = jnp.where((new_items == 0) & spawn, 1, new_items)
+        return LocalWarehouseState(pos=new_pos, items=new_items), reward
 
-        new_state = LocalWarehouseState(pos=new_pos, items=new_items)
+    def step_det(state: LocalWarehouseState, actions, u, spawn):
+        pos, items = state
+        new_state, reward = rollout_tick(state, actions, u, spawn)
+        agent_at = _at_item_mask_b(new_state.pos)
         at_before = _at_item_mask_b(pos)
         dset = jnp.concatenate(
             [(items > 0).astype(jnp.float32),
@@ -345,11 +522,18 @@ def make_batched_local_warehouse_env(
                 "ages": items}
         return new_state, observe(new_state), reward, info
 
+    def step(state: LocalWarehouseState, actions, u, key):
+        return step_det(state, actions, u,
+                        noise_fn(key, state.pos.shape[0]))
+
     def dset_fn(state: LocalWarehouseState, actions):
-        new_pos = jnp.clip(state.pos + _MOVE[actions], 0, S - 1)
-        at = _at_item_mask_b(state.pos) | _at_item_mask_b(new_pos)
+        # also traced into the whole-horizon kernel -> constant-free
+        new_pos = jnp.clip(state.pos + _move_delta_k(actions), 0, S - 1)
+        at = _at_item_mask_k(state.pos, S) | _at_item_mask_k(new_pos, S)
         return jnp.concatenate([(state.items > 0).astype(jnp.float32),
                                 at.astype(jnp.float32)], axis=-1)
 
     return BatchedLocalEnv(spec=spec, reset=reset, step=step,
-                           observe=observe, dset_fn=dset_fn)
+                           observe=observe, dset_fn=dset_fn,
+                           noise_fn=noise_fn, step_det=step_det,
+                           rollout_tick=rollout_tick)

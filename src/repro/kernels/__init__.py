@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the rollout hot path, each with a pure-jnp
+oracle in ``ref.py`` and backend dispatch in ``ops.py`` (compiled on TPU,
+oracle/interpret elsewhere — see docs/ARCHITECTURE.md §2).
+"""

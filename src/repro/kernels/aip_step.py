@@ -1,18 +1,30 @@
-"""Fused AIP step Pallas TPU kernel — one invocation per simulator tick.
+"""Fused AIP Pallas TPU kernels: one tick (``aip_step``) and one whole
+horizon (``aip_rollout``).
 
 The IALS inner loop (Algorithm 2 lines 5-8) is: query the AIP on d_t, turn
 the logits into per-head Bernoulli probabilities, and draw u_t. Dispatched
 op-by-op that is a GRU cell, a head matmul, a sigmoid, a uniform draw and a
 compare — five round-trips through HBM for a (B, H) state that fits in one
-VMEM tile. This kernel fuses the whole thing: both GRU matmuls on the MXU,
+VMEM tile. ``aip_step`` fuses the whole thing: both GRU matmuls on the MXU,
 the gate nonlinearities, the head projection, the head sigmoid, and the
 Bernoulli threshold-compare against caller-supplied counter-based random
 bits, with every intermediate resident in VMEM.
 
+``aip_rollout`` goes one level up (the Large-Batch-Simulation move,
+Shacklett et al. 2021): a lane-blocked ``(B-blocks, T)`` grid — batch
+blocks on the parallel outer axis, the horizon on an inner "arbitrary"
+axis like ``gru.py`` — with the AIP hidden state AND the local simulator's
+state leaves resident in VMEM scratch across all T grid steps. The caller
+supplies the LS transition (``tick_fn``) and d-set extraction (``dset_fn``)
+as pure jnp functions that get traced straight into the kernel body, so
+one ``pallas_call`` advances the entire coupled AIP+LS system for the
+whole horizon: actions, random bits, and LS noise stream in block-by-tick;
+only per-tick rewards and the final states ever leave VMEM.
+
 Randomness is *passed in* as uint32 bits (one `jax.random.bits` call per
-tick, generated in bulk by the rollout engine) so the kernel itself is a
-pure function — the same bits give the same u_t on every backend, which is
-what the parity tests pin down against ``ref.aip_step_ref``.
+tick, generated in bulk by the rollout engine) so the kernels themselves
+are pure functions — the same bits give the same u_t on every backend,
+which is what the parity tests pin down against the ``ref.py`` oracles.
 
 Weights are laid out (D, 3H)/(H, 3H) gate-major [r|z|n] like
 ``repro/nn/rnn.py``; activations are the shared rational gates from
@@ -32,10 +44,10 @@ from repro.kernels.compat import tpu_compiler_params
 from repro.nn.act import fast_sigmoid, fast_tanh, uniform_from_bits
 
 
-def _aip_step_kernel(d_ref, h_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
-                     bits_ref, h2_ref, logits_ref, u_ref, *, H: int):
-    d = d_ref[...].astype(jnp.float32)                 # (B, D)
-    h = h_ref[...].astype(jnp.float32)                 # (B, H)
+def _aip_cell(d, h, wx_ref, wh_ref, b_ref, hw_ref, hb_ref, bits, *, H: int):
+    """Shared tick math on VMEM-resident values: GRU cell + head + sigmoid
+    + threshold-compare. d: (B, D) f32, h: (B, H) f32, bits: (B, M) u32
+    -> (h2, logits, u) all f32."""
     gx = jax.lax.dot_general(d, wx_ref[...].astype(jnp.float32),
                              (((1,), (0,)), ((), ()))) + \
         b_ref[...].astype(jnp.float32)
@@ -49,10 +61,19 @@ def _aip_step_kernel(d_ref, h_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
                                  (((1,), (0,)), ((), ()))) + \
         hb_ref[...].astype(jnp.float32)
     probs = fast_sigmoid(logits)
-    u01 = uniform_from_bits(bits_ref[...])
+    u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
+    return h2, logits, u
+
+
+def _aip_step_kernel(d_ref, h_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
+                     bits_ref, h2_ref, logits_ref, u_ref, *, H: int):
+    d = d_ref[...].astype(jnp.float32)                 # (B, D)
+    h = h_ref[...].astype(jnp.float32)                 # (B, H)
+    h2, logits, u = _aip_cell(d, h, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
+                              bits_ref[...], H=H)
     h2_ref[...] = h2.astype(h2_ref.dtype)
     logits_ref[...] = logits.astype(logits_ref.dtype)
-    u_ref[...] = (u01 < probs).astype(u_ref.dtype)
+    u_ref[...] = u.astype(u_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -95,3 +116,127 @@ def aip_step(d, h, wx, wh, b, hw, hb, bits, *, interpret: bool | None = None):
         interpret=interpret,
     )(d, h, wx, wh, b, hw, hb, bits)
     return h2, logits, u
+
+
+def _aip_rollout_kernel(*refs, n_ls: int, n_noise: int, H: int, T: int,
+                        tick_fn, dset_fn):
+    """Grid (B-blocks, T), batch blocks parallel-outer, horizon inner.
+
+    Ref layout (positional): LS state leaves | h0, wx, wh, b, hw, hb,
+    actions, bits | noise leaves || final LS leaves, hT, rewards ||
+    scratch: h, LS leaves. The AIP hidden state and every LS leaf live in
+    VMEM scratch for the whole T axis of a batch block; ``tick_fn`` and
+    ``dset_fn`` are traced straight into this body."""
+    i = n_ls
+    ls0 = refs[:n_ls]
+    (h0_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref, a_ref,
+     bits_ref) = refs[i:i + 8]
+    i += 8
+    noise_refs = refs[i:i + n_noise]
+    i += n_noise
+    ls_out = refs[i:i + n_ls]
+    hT_ref, rew_ref = refs[i + n_ls], refs[i + n_ls + 1]
+    i += n_ls + 2
+    h_scr = refs[i]
+    ls_scr = refs[i + 1:i + 1 + n_ls]
+
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+        for dst, src in zip(ls_scr, ls0):
+            dst[...] = src[...]
+
+    ls_vals = tuple(s[...] for s in ls_scr)
+    a = a_ref[0]                                       # (Bblk,)
+    d = dset_fn(ls_vals, a).astype(jnp.float32)        # (Bblk, Dd)
+    h2, _, u = _aip_cell(d, h_scr[...], wx_ref, wh_ref, b_ref, hw_ref,
+                         hb_ref, bits_ref[0], H=H)
+    new_ls, rew = tick_fn(ls_vals, a, u,
+                          tuple(nr[0] for nr in noise_refs))
+    h_scr[...] = h2
+    for dst, val in zip(ls_scr, new_ls):
+        dst[...] = val.astype(dst.dtype)
+    rew_ref[0] = rew.astype(rew_ref.dtype)
+
+    @pl.when(t == T - 1)
+    def _finish():
+        hT_ref[...] = h_scr[...].astype(hT_ref.dtype)
+        for dst, src in zip(ls_out, ls_scr):
+            dst[...] = src[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tick_fn", "dset_fn",
+                                             "block_b", "interpret"))
+def aip_rollout(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
+                tick_fn, dset_fn, block_b: int | None = None,
+                interpret: bool | None = None):
+    """Whole-horizon fused IALS rollout — ONE kernel dispatch for T ticks.
+
+    ``ls``: tuple of LS state leaves, each (B, ...) with a kernel-safe
+    dtype (int32/float32 — the engine encodes bools); ``h0``: (B, H) AIP
+    state; weights as in ``aip_step``; ``actions``: (T, B) int32;
+    ``bits``: (T, B, M) uint32; ``noise``: tuple of (T, B, ...) LS noise
+    leaves. ``tick_fn(ls_leaves, a, u, noise_leaves) -> (ls_leaves, r)``
+    and ``dset_fn(ls_leaves, a) -> (B, Dd)`` must be pure jnp — they are
+    traced into the kernel body and run on VMEM-resident values.
+
+    -> (final ls leaves, h_T (B, H), rewards (T, B) f32), bitwise-equal to
+    scanning the per-tick fused step (``ref.ials_rollout_ref`` oracle).
+
+    ``block_b`` lane-blocks the batch axis across the parallel grid
+    dimension (must divide B; default: one block). ``interpret=None``
+    auto-detects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ls = tuple(ls)
+    noise = tuple(noise)
+    B, H = h0.shape
+    T = actions.shape[0]
+    M = hw.shape[1]
+    D3 = wx.shape
+    if block_b is None:
+        block_b = B
+    if B % block_b:
+        raise ValueError(f"block_b={block_b} must divide B={B}")
+    nB = B // block_b
+
+    def bcast(shape):          # weight blocks: whole array, every step
+        return pl.BlockSpec(shape, lambda bi, t: (0,) * len(shape))
+
+    def state_spec(leaf):      # (B, ...) leaf -> per-block, t-invariant
+        s = leaf.shape[1:]
+        return pl.BlockSpec((block_b,) + s,
+                            lambda bi, t, _n=len(s): (bi,) + (0,) * _n)
+
+    def stream_spec(leaf):     # (T, B, ...) leaf -> one tick per grid step
+        s = leaf.shape[2:]
+        return pl.BlockSpec((1, block_b) + s,
+                            lambda bi, t, _n=len(s): (t, bi) + (0,) * _n)
+
+    kernel = functools.partial(_aip_rollout_kernel, n_ls=len(ls),
+                               n_noise=len(noise), H=H, T=T,
+                               tick_fn=tick_fn, dset_fn=dset_fn)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nB, T),
+        in_specs=[state_spec(l) for l in ls] + [
+            state_spec(h0),
+            bcast(D3), bcast(wh.shape), bcast(b.shape),
+            bcast(hw.shape), bcast(hb.shape),
+            stream_spec(actions), stream_spec(bits),
+        ] + [stream_spec(n) for n in noise],
+        out_specs=[state_spec(l) for l in ls] + [
+            state_spec(h0), stream_spec(jnp.empty((T, B), jnp.float32))],
+        out_shape=[jax.ShapeDtypeStruct(l.shape, l.dtype) for l in ls] + [
+            jax.ShapeDtypeStruct((B, H), h0.dtype),
+            jax.ShapeDtypeStruct((T, B), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_b, H), jnp.float32)] + [
+            pltpu.VMEM((block_b,) + l.shape[1:], l.dtype) for l in ls],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*ls, h0, wx, wh, b, hw, hb, actions, bits, *noise)
+    return tuple(out[:len(ls)]), out[len(ls)], out[len(ls) + 1]

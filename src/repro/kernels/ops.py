@@ -65,6 +65,34 @@ def aip_step(d, h, wx, wh, b, hw, hb, bits):
     return _ref.aip_step_ref(d, h, wx, wh, b, hw, hb, bits)
 
 
+def ials_rollout(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
+                 tick_fn, dset_fn, block_b=None, interpret=None):
+    """Whole-horizon fused IALS rollout: T coupled AIP+LS ticks in ONE
+    kernel dispatch, AIP hidden state and LS leaves VMEM-resident across
+    the horizon (``aip_rollout``'s (B-blocks, T) grid) on TPU; the
+    identical-math ``ref.ials_rollout_ref`` scan elsewhere. Both paths run
+    the caller's ``tick_fn``/``dset_fn`` on the same values in the same
+    order, so they agree bitwise given the same bits and noise.
+
+    ``interpret=None`` is the production dispatch above; passing a bool
+    forces the Pallas kernel itself (interpret mode off-TPU — the parity
+    tests exercise the real grid/scratch machinery that way).
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _aip.aip_rollout(tuple(ls), h0, wx, wh, b, hw, hb,
+                                    actions, bits, tuple(noise),
+                                    tick_fn=tick_fn, dset_fn=dset_fn,
+                                    block_b=block_b, interpret=False)
+        return _ref.ials_rollout_ref(tuple(ls), h0, wx, wh, b, hw, hb,
+                                     actions, bits, tuple(noise),
+                                     tick_fn=tick_fn, dset_fn=dset_fn)
+    return _aip.aip_rollout(tuple(ls), h0, wx, wh, b, hw, hb, actions,
+                            bits, tuple(noise), tick_fn=tick_fn,
+                            dset_fn=dset_fn, block_b=block_b,
+                            interpret=interpret)
+
+
 def rmsnorm(x, g, *, eps: float = 1e-6):
     shp = x.shape
     out = _rms.rmsnorm(x.reshape(-1, shp[-1]), g, eps=eps,

@@ -59,6 +59,31 @@ def aip_step_ref(d, h, wx, wh, b, hw, hb, bits):
     return h2, logits, u
 
 
+def ials_rollout_ref(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
+                     tick_fn, dset_fn):
+    """Whole-horizon fused IALS rollout oracle: a scan of exactly the
+    per-tick math ``aip_rollout`` runs per grid step (same ``tick_fn`` /
+    ``dset_fn`` closures, same ``aip_step_ref`` cell), so kernel and
+    oracle agree bit-for-bit given the same bits.
+
+    ls: tuple of (B, ...) LS state leaves; actions (T, B); bits (T, B, M)
+    uint32; noise: tuple of (T, B, ...) leaves.
+    -> (final ls leaves, h_T, rewards (T, B) f32).
+    """
+
+    def tick(carry, xs):
+        ls, h = carry
+        a, bt, nz = xs
+        d = dset_fn(ls, a).astype(jnp.float32)
+        h2, _, u = aip_step_ref(d, h, wx, wh, b, hw, hb, bt)
+        ls2, r = tick_fn(ls, a, u, nz)
+        return (tuple(ls2), h2), r.astype(jnp.float32)
+
+    (ls_T, h_T), rews = jax.lax.scan(
+        tick, (tuple(ls), h0), (actions, bits, tuple(noise)))
+    return ls_T, h_T, rews
+
+
 def rmsnorm_ref(x, g, *, eps: float = 1e-6):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

@@ -82,8 +82,11 @@ def _make_sim(ls, params, acfg, n_agents, **kw):
 
 def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
                     collect_episodes: int, ep_len: int, aip_epochs: int,
-                    fixed_marginal=None, aip_window: int = 0):
-    """-> (env for PPO, aip diagnostics dict)."""
+                    fixed_marginal=None, aip_window: int = 0,
+                    stateless_f_ials: bool = False):
+    """-> (env for PPO, aip diagnostics dict). ``stateless_f_ials`` makes
+    the f-ials simulator skip its (ignored) AIP forward pass entirely —
+    see ``ials.make_ials`` for the state-shape-parity tradeoff."""
     diag = {}
     if simulator == "gs":
         return gs, diag
@@ -127,7 +130,8 @@ def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
                 jax.random.split(k2, A))
         else:
             params = influence.init_aip(acfg, k2)
-        env = _make_sim(ls, params, acfg, A, fixed_marginal_vec=marg)
+        env = _make_sim(ls, params, acfg, A, fixed_marginal_vec=marg,
+                        stateless=stateless_f_ials)
         # XE of the fixed marginal on held-out data
         p = jnp.clip(marg, 1e-6, 1 - 1e-6)
         if A > 1:
@@ -159,6 +163,9 @@ def main(argv=None):
                     choices=["gs", "ials", "untrained-ials", "f-ials"])
     ap.add_argument("--aip", default=None, choices=[None, "gru", "fnn"])
     ap.add_argument("--fixed-marginal", type=float, default=None)
+    ap.add_argument("--stateless-f-ials", action="store_true",
+                    help="f-ials only: freeze the ignored AIP recurrent "
+                         "state instead of advancing it every tick")
     ap.add_argument("--n-agents", type=int, default=1,
                     help="agents trained at once (25 = full 5x5 traffic "
                          "grid, 36 = full 6x6 warehouse floor)")
@@ -184,7 +191,8 @@ def main(argv=None):
     env, diag = build_simulator(
         args.simulator, gs, ls, aip_kind, k_sim,
         collect_episodes=args.collect_episodes, ep_len=args.episode_len,
-        aip_epochs=args.aip_epochs, fixed_marginal=args.fixed_marginal)
+        aip_epochs=args.aip_epochs, fixed_marginal=args.fixed_marginal,
+        stateless_f_ials=args.stateless_f_ials)
 
     pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim,
                          n_actions=gs.spec.n_actions,

@@ -17,9 +17,14 @@ Rollouts run on the batched env protocol: a native ``BatchedEnv`` (the
 fused IALS engine) steps the whole env batch with one key per tick and its
 randomness drawn in bulk; a scalar ``Env`` is lifted through the
 ``batch_env`` vmap adapter, which reproduces the historical
-split-keys-then-vmap derivation exactly. ``train_iteration`` donates its
-(params, opt_state, rollout-state) arguments, so each PPO iteration
-updates in place instead of round-tripping fresh buffers.
+split-keys-then-vmap derivation exactly. When the env exposes the
+whole-horizon pair ``noise_fn``/``step_det`` (see ``envs/api.py``), the
+rollout draws ALL of the horizon's env randomness before the scan and the
+scan body steps the deterministic tick — the policy stays in the loop (it
+has to: actions depend on observations), but the env side of every tick
+is pure compute, bitwise-equal to the keyed path. ``train_iteration``
+donates its (params, opt_state, rollout-state) arguments, so each PPO
+iteration updates in place instead of round-tripping fresh buffers.
 """
 from __future__ import annotations
 
@@ -32,7 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.envs.api import BatchedEnv, Env, as_batched
+from repro.envs.api import BatchedEnv, Env, as_batched, horizon_noise
 from repro.nn.module import dense_init, dense
 from repro.optim.adamw import adamw
 
@@ -134,19 +139,28 @@ def rollout(env, cfg: PPOConfig, params, rs: RolloutState, key):
 
     ``env`` may be a scalar ``Env`` or a native ``BatchedEnv``; either
     way the scan body is one batched env step per tick, with the per-step
-    key array pre-split outside the scan."""
+    key array pre-split outside the scan. When the env exposes
+    ``noise_fn``/``step_det``, the whole horizon's env randomness is
+    drawn in bulk before the scan and the body runs the deterministic
+    tick — bit-identical trajectories, no per-tick key derivation on the
+    hot path."""
     benv = as_batched(env)
+    whole_horizon = (benv.step_det is not None
+                     and benv.noise_fn is not None)
 
-    def step(carry, k):
+    def step(carry, xs):
         rs = carry
-        ka, ks, kr = jax.random.split(k, 3)
+        ka, ks, kr = xs
         x = _stack_obs(rs.frames)
         logits, value = policy_forward(params, x)
         a = jax.random.categorical(ka, logits)
         logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
                                    a[..., None], -1)[..., 0]
 
-        env_state, obs, r, _ = benv.step(rs.env_state, a, ks)
+        if whole_horizon:
+            env_state, obs, r, _ = benv.step_det(rs.env_state, a, ks)
+        else:
+            env_state, obs, r, _ = benv.step(rs.env_state, a, ks)
         frames = jnp.concatenate(
             [rs.frames[..., 1:, :], obs[..., None, :]], axis=-2)
 
@@ -170,7 +184,13 @@ def rollout(env, cfg: PPOConfig, params, rs: RolloutState, key):
         return RolloutState(env_state, frames, t), out
 
     keys = jax.random.split(key, cfg.rollout_len)
-    rs, batch = lax.scan(step, rs, keys)
+    # the per-tick (action, env, reset) keys, pre-split outside the scan —
+    # the same values the historical in-body jax.random.split(k, 3) drew
+    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+    ka, ks, kr = k3[:, 0], k3[:, 1], k3[:, 2]
+    env_xs = (horizon_noise(benv.noise_fn, ks, cfg.n_envs)
+              if whole_horizon else ks)
+    rs, batch = lax.scan(step, rs, (ka, env_xs, kr))
     x_last = _stack_obs(rs.frames)
     _, v_last = policy_forward(params, x_last)
     return rs, batch, v_last

@@ -1,0 +1,380 @@
+"""Whole-horizon rollout engine: the native ``rollout`` overrides (scan,
+kernel-glue, and interpret-mode Pallas paths) are bitwise-identical to
+scanning the per-tick fused ``step``; the native batched multi-agent GS
+matches the vmapped scalar GS exactly; ``noise_fn``/``step_det`` obey the
+protocol invariant; stateless F-IALS freezes (only) the AIP state; PPO's
+bulk-noise rollout reproduces the keyed path bit-for-bit."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ials, influence, multi_ials
+from repro.envs.api import batch_env, env_rollout, horizon_noise
+from repro.envs.traffic import (TrafficConfig,
+                                make_batched_local_traffic_env,
+                                make_batched_multi_traffic_env,
+                                make_multi_traffic_env)
+from repro.envs.warehouse import (WarehouseConfig,
+                                  make_batched_local_warehouse_env,
+                                  make_batched_multi_warehouse_env,
+                                  make_multi_warehouse_env)
+
+AGENTS4 = jnp.array([[0, 0], [1, 3], [2, 2], [4, 1]])
+
+
+def _bls(domain, **cfg_kw):
+    if domain == "traffic":
+        return make_batched_local_traffic_env(TrafficConfig(**cfg_kw))
+    return make_batched_local_warehouse_env(WarehouseConfig(**cfg_kw))
+
+
+def _engine(domain, kind, **kw):
+    bls = _bls(domain)
+    acfg = influence.AIPConfig(kind=kind, d_in=bls.spec.dset_dim,
+                               n_out=bls.spec.n_influence, hidden=8,
+                               stack=2)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    return bls, ials.make_batched_ials(bls, params, acfg, **kw)
+
+
+def _scan_step(benv):
+    """The per-tick fused engine: a jitted scan of ``step`` — the
+    baseline every whole-horizon path must reproduce bitwise."""
+
+    def step(carry, xs):
+        a, k = xs
+        s, _, r, _ = benv.step(carry, a, k)
+        return s, r
+
+    return jax.jit(lambda s, a, k: jax.lax.scan(step, s, (a, k)))
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        jnp.array_equal(x, y) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# whole-horizon rollout == scan of the per-tick fused step (bitwise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("domain,kind", [
+    ("traffic", "gru"), ("traffic", "fnn"),
+    ("warehouse", "gru"), ("warehouse", "fnn"),
+])
+def test_whole_horizon_matches_per_tick_engine(domain, kind):
+    _, env = _engine(domain, kind)
+    key = jax.random.PRNGKey(1)
+    B, T = 6, 17
+    s0 = env.reset(key, B)
+    acts = jax.random.randint(key, (T, B), 0, env.spec.n_actions)
+    keys = jax.random.split(jax.random.PRNGKey(2), T)
+    sw, rw = jax.jit(
+        lambda s, a, k: env_rollout(env, s, a, k))(s0, acts, keys)
+    ss, rs = _scan_step(env)(s0, acts, keys)
+    assert jnp.array_equal(rw, rs)
+    assert _trees_equal(sw, ss)
+
+
+@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+def test_whole_horizon_matches_per_tick_multi(domain):
+    bls = _bls(domain)
+    A = 3
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=bls.spec.n_influence, hidden=8)
+    params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+        jax.random.split(jax.random.PRNGKey(3), A))
+    env = multi_ials.make_batched_multi_ials(bls, params, acfg, A)
+    key = jax.random.PRNGKey(4)
+    B, T = 4, 11
+    s0 = env.reset(key, B)
+    acts = jax.random.randint(key, (T, B, A), 0, env.spec.n_actions)
+    keys = jax.random.split(jax.random.PRNGKey(5), T)
+    sw, rw = jax.jit(
+        lambda s, a, k: env_rollout(env, s, a, k))(s0, acts, keys)
+    ss, rs = _scan_step(env)(s0, acts, keys)
+    assert rw.shape == (T, B, A)
+    assert jnp.array_equal(rw, rs)
+    assert _trees_equal(sw, ss)
+
+
+@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+def test_kernel_glue_route_matches_scan(domain):
+    """use_horizon_kernel=True exercises the full ops.ials_rollout glue
+    (leaf flatten/encode, tick/dset closures, param plumbing) — off-TPU
+    that lands on the ref oracle, which must stay bitwise with the
+    scan."""
+    bls = _bls(domain)
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=bls.spec.n_influence, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    env_k = ials.make_batched_ials(bls, params, acfg,
+                                   use_horizon_kernel=True)
+    env_s = ials.make_batched_ials(bls, params, acfg,
+                                   use_horizon_kernel=False)
+    key = jax.random.PRNGKey(6)
+    B, T = 5, 9
+    s0 = env_k.reset(key, B)
+    acts = jax.random.randint(key, (T, B), 0, env_k.spec.n_actions)
+    keys = jax.random.split(key, T)
+    sk, rk = jax.jit(env_k.rollout)(s0, acts, keys)
+    ss, rs = jax.jit(env_s.rollout)(s0, acts, keys)
+    assert jnp.array_equal(rk, rs)
+    assert _trees_equal(sk, ss)
+
+
+@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+def test_interpret_kernel_matches_scan(domain, monkeypatch):
+    """The actual aip_rollout Pallas kernel (interpret mode: real grid,
+    BlockSpecs, VMEM scratch) reproduces the scan engine bitwise."""
+    from repro.kernels import ops
+
+    orig = ops.ials_rollout
+
+    def forced(*args, **kw):
+        kw["interpret"] = True
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(ops, "ials_rollout", forced)
+    bls = _bls(domain)
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=bls.spec.n_influence, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    env_k = ials.make_batched_ials(bls, params, acfg,
+                                   use_horizon_kernel=True)
+    env_s = ials.make_batched_ials(bls, params, acfg,
+                                   use_horizon_kernel=False)
+    s0 = env_k.reset(jax.random.PRNGKey(1), 4)
+    acts = jax.random.randint(jax.random.PRNGKey(1), (7, 4), 0,
+                              env_k.spec.n_actions)
+    keys = jax.random.split(jax.random.PRNGKey(2), 7)
+    # both sides eager: the interpret-mode kernel cannot be jitted into
+    # the same program as the scan, and XLA fusion moves float results
+    # by 1 ulp between program shapes — eager-to-eager is exact
+    sk, rk = env_k.rollout(s0, acts, keys)
+    ss, rs = env_s.rollout(s0, acts, keys)
+    assert jnp.array_equal(rk, rs)
+    assert _trees_equal(sk.ls_state, ss.ls_state)
+    assert jnp.array_equal(sk.aip_state, ss.aip_state)
+
+
+def test_kernel_lane_blocking():
+    """block_b splits the batch across the kernel's parallel grid axis;
+    results must not depend on the blocking."""
+    from repro.kernels.aip_step import aip_rollout
+    from repro.kernels.ref import ials_rollout_ref
+
+    H, M, Dd = 8, 4, 12
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 8)
+    B, T = 6, 5
+    wx = jax.random.normal(ks[0], (Dd, 3 * H)) * 0.2
+    wh = jax.random.normal(ks[1], (H, 3 * H)) * 0.2
+    b = jax.random.normal(ks[2], (3 * H,)) * 0.1
+    hw = jax.random.normal(ks[3], (H, M)) * 0.2
+    hb = jax.random.normal(ks[4], (M,)) * 0.1
+    h0 = jax.random.normal(ks[5], (B, H)) * 0.5
+    ls = (jax.random.normal(ks[6], (B, Dd)),)
+    acts = jnp.zeros((T, B), jnp.int32)
+    bits = jax.random.bits(ks[7], (T, B, M), jnp.uint32)
+
+    def dset_fn(leaves, a):
+        return leaves[0]
+
+    def tick_fn(leaves, a, u, noise):
+        # toy LS: state drifts by the drawn u (padded to Dd), reward
+        # counts the u bits — enough to couple AIP and "LS" both ways
+        x = leaves[0]
+        x2 = x + jnp.pad(u, ((0, 0), (0, Dd - M)))
+        return (x2,), u.sum(-1)
+
+    outs = [aip_rollout(ls, h0, wx, wh, b, hw, hb, acts, bits, (),
+                        tick_fn=tick_fn, dset_fn=dset_fn, block_b=bb,
+                        interpret=True) for bb in (None, 2, 3)]
+    ref = ials_rollout_ref(ls, h0, wx, wh, b, hw, hb, acts, bits, (),
+                           tick_fn=tick_fn, dset_fn=dset_fn)
+    for (lsk, hk, rk) in outs:
+        assert jnp.allclose(lsk[0], ref[0][0], atol=1e-6)
+        assert jnp.allclose(hk, ref[1], atol=1e-6)
+        assert jnp.array_equal(rk, ref[2])
+
+
+# ---------------------------------------------------------------------------
+# native batched multi-agent GS == vmapped scalar multi-agent GS
+# ---------------------------------------------------------------------------
+
+def _gs_pair(domain):
+    if domain == "traffic":
+        cfg = TrafficConfig(p_in=0.0, ext_influence=True)
+        return (make_multi_traffic_env(cfg, AGENTS4),
+                make_batched_multi_traffic_env(cfg, AGENTS4))
+    cfg = WarehouseConfig(p_item=0.0)
+    return (make_multi_warehouse_env(cfg, AGENTS4),
+            make_batched_multi_warehouse_env(cfg, AGENTS4))
+
+
+@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+def test_batched_multi_gs_matches_vmapped_scalar(domain):
+    """With the internal randomness switched off (p=0) the native batched
+    multi-agent GS must agree with the vmapped scalar GS exactly — same
+    state, obs, rewards, u, and d-sets."""
+    gs, bgs = _gs_pair(domain)
+    vgs = batch_env(gs)
+    bstep, vstep = jax.jit(bgs.step), jax.jit(vgs.step)
+    key = jax.random.PRNGKey(8)
+    B, T = 5, 4
+    state = bgs.reset(key, B)
+    for t in range(T):
+        key, ka, ks = jax.random.split(key, 3)
+        a = jax.random.randint(ka, (B, 4), 0, gs.spec.n_actions)
+        s2, obs, r, info = bstep(state, a, ks)
+        ws2, wobs, wr, winfo = vstep(state, a, ks)
+        assert jnp.array_equal(obs, wobs)
+        assert jnp.allclose(r, wr, atol=1e-6)
+        for k in ("u", "dset", "dset_full"):
+            assert jnp.array_equal(info[k], winfo[k]), k
+        assert _trees_equal(s2, ws2)
+        state = s2
+    assert jnp.array_equal(bgs.observe(state), vgs.observe(state))
+
+
+def test_batched_multi_gs_inflow_rate():
+    """The bulk-noise path really injects: boundary inflow at p_in=0.5
+    shows up at a plausible rate on the batched traffic GS."""
+    cfg = TrafficConfig(p_in=0.5)
+    bgs = make_batched_multi_traffic_env(
+        cfg, jnp.array([[0, 0]], jnp.int32))
+    key = jax.random.PRNGKey(9)
+    state = bgs.reset(key, 8)
+    total = 0.0
+    for t in range(20):
+        key, k = jax.random.split(key)
+        state, _, _, info = jax.jit(bgs.step)(
+            state, jnp.zeros((8, 1), jnp.int32), k)
+        total += float(info["u"].mean())
+    assert total / 20 > 0.05       # corner cell: 2 boundary lanes of 4
+
+
+@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+def test_batched_gs_step_det_invariant(domain):
+    """step(s, a, k) == step_det(s, a, noise_fn(k, B)) on the batched
+    multi-agent GS (full randomness on)."""
+    if domain == "traffic":
+        cfg = TrafficConfig()
+        bgs = make_batched_multi_traffic_env(cfg, AGENTS4)
+    else:
+        cfg = WarehouseConfig()
+        bgs = make_batched_multi_warehouse_env(cfg, AGENTS4)
+    key = jax.random.PRNGKey(10)
+    B = 4
+    state = bgs.reset(key, B)
+    a = jax.random.randint(key, (B, 4), 0, bgs.spec.n_actions)
+    k = jax.random.PRNGKey(11)
+    got = jax.jit(bgs.step)(state, a, k)
+    want = jax.jit(bgs.step_det)(state, a, bgs.noise_fn(k, B))
+    assert _trees_equal(got, want)
+
+
+def test_env_rollout_bulk_noise_path_on_batched_gs():
+    """The batched GS has noise_fn/step_det but no rollout override, so
+    env_rollout takes the bulk-noise scan — bitwise vs scanning step."""
+    bgs = make_batched_multi_traffic_env(TrafficConfig(), AGENTS4)
+    key = jax.random.PRNGKey(12)
+    B, T = 4, 8
+    s0 = bgs.reset(key, B)
+    acts = jax.random.randint(key, (T, B, 4), 0, 2)
+    keys = jax.random.split(key, T)
+    sw, rw = jax.jit(
+        lambda s, a, k: env_rollout(bgs, s, a, k))(s0, acts, keys)
+    ss, rs = _scan_step(bgs)(s0, acts, keys)
+    assert jnp.array_equal(rw, rs)
+    assert _trees_equal(sw, ss)
+
+
+# ---------------------------------------------------------------------------
+# stateless F-IALS
+# ---------------------------------------------------------------------------
+
+def test_stateless_f_ials_bitwise_and_frozen():
+    """Stateless F-IALS: trajectories bit-identical to the stateful
+    F-IALS (the marginal sampler never reads the AIP state), the state
+    leaf keeps its shape (parity) but stays frozen at init."""
+    bls = _bls("warehouse")
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=12, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    kw = dict(fixed_marginal=0.3)
+    env_st = ials.make_batched_ials(bls, params, acfg, **kw)
+    env_sl = ials.make_batched_ials(bls, params, acfg, stateless=True,
+                                    **kw)
+    key = jax.random.PRNGKey(13)
+    B, T = 5, 12
+    s0 = env_st.reset(key, B)
+    acts = jax.random.randint(key, (T, B), 0, 5)
+    keys = jax.random.split(key, T)
+    s_st, r_st = jax.jit(env_st.rollout)(s0, acts, keys)
+    s_sl, r_sl = jax.jit(env_sl.rollout)(s0, acts, keys)
+    assert jnp.array_equal(r_st, r_sl)
+    assert _trees_equal(s_st.ls_state, s_sl.ls_state)
+    # same leaf shape (state parity), but frozen at init vs advanced
+    assert s_sl.aip_state.shape == s_st.aip_state.shape
+    assert jnp.array_equal(s_sl.aip_state, s0.aip_state)
+    assert float(jnp.abs(s_st.aip_state - s0.aip_state).max()) > 0
+
+
+def test_stateless_multi_f_ials_frozen():
+    bls = _bls("traffic")
+    A = 3
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=4, hidden=8)
+    params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+        jax.random.split(jax.random.PRNGKey(1), A))
+    env = multi_ials.make_batched_multi_ials(bls, params, acfg, A,
+                                             fixed_marginal=0.2,
+                                             stateless=True)
+    key = jax.random.PRNGKey(14)
+    s = env.reset(key, 4)
+    s2, _, _, info = jax.jit(env.step)(s, jnp.zeros((4, A), jnp.int32),
+                                       key)
+    assert jnp.array_equal(s2.aip_state, s.aip_state)
+    assert info["u"].shape == (4, A, 4)
+
+
+def test_stateless_requires_marginal():
+    bls = _bls("traffic")
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=4, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="stateless"):
+        ials.make_batched_ials(bls, params, acfg, stateless=True)
+    with pytest.raises(ValueError, match="stateless"):
+        multi_ials.make_batched_multi_ials(bls, params, acfg, 2,
+                                           stateless=True)
+
+
+# ---------------------------------------------------------------------------
+# PPO consumes the whole-horizon layer bitwise
+# ---------------------------------------------------------------------------
+
+def test_ppo_bulk_noise_rollout_matches_keyed_path():
+    """PPO's rollout with noise_fn/step_det (bulk draws outside the scan)
+    produces the exact batch the keyed per-tick path produced."""
+    from repro.rl import ppo
+
+    bls = _bls("warehouse")
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=12, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(2))
+    env = ials.make_batched_ials(bls, params, acfg)
+    legacy = env._replace(step_det=None, noise_fn=None, rollout=None)
+    cfg = ppo.PPOConfig(obs_dim=bls.spec.obs_dim, n_actions=5, n_envs=4,
+                        rollout_len=6, episode_len=4, hidden=16)
+    key = jax.random.PRNGKey(15)
+    pol = ppo.init_policy(cfg, key)
+    rs0 = ppo.init_rollout_state(env, cfg, key)
+    rs_a, batch_a, v_a = ppo.rollout(env, cfg, pol, rs0, key)
+    rs_b, batch_b, v_b = ppo.rollout(legacy, cfg, pol, rs0, key)
+    assert _trees_equal(batch_a, batch_b)
+    assert _trees_equal(rs_a, rs_b)
+    assert jnp.array_equal(v_a, v_b)

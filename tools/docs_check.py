@@ -1,0 +1,117 @@
+"""Docs drift gate (``make docs-check``, also run by the test suite).
+
+Fails when the documentation and the tree disagree:
+  1. ``README.md`` or ``docs/ARCHITECTURE.md`` is missing;
+  2. any module under ``src/repro/{core,envs,kernels,rl}`` lacks a module
+     docstring;
+  3. a ``make <target>`` quoted in the docs names a target the Makefile
+     does not define (snippet drift);
+  4. a ``python -m <module>`` entry point quoted in the docs does not
+     resolve to a module file under ``src/`` or the repo root.
+
+Pure stdlib, no imports of the package itself — the checker must keep
+working even when the package is broken.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ("README.md", "docs/ARCHITECTURE.md")
+DOCSTRING_TREES = ("src/repro/core", "src/repro/envs", "src/repro/kernels",
+                   "src/repro/rl")
+
+
+def missing_docs() -> list[str]:
+    return [f"missing required doc: {name}" for name in DOC_FILES
+            if not (REPO / name).is_file()]
+
+
+def missing_docstrings() -> list[str]:
+    errors = []
+    for tree in DOCSTRING_TREES:
+        for path in sorted((REPO / tree).rglob("*.py")):
+            mod = ast.parse(path.read_text(), filename=str(path))
+            if not ast.get_docstring(mod):
+                rel = path.relative_to(REPO)
+                errors.append(f"module docstring missing: {rel}")
+    return errors
+
+
+def _makefile_targets() -> set[str]:
+    targets = set()
+    for line in (REPO / "Makefile").read_text().splitlines():
+        m = re.match(r"^([A-Za-z][\w.-]*):", line)
+        if m:
+            targets.add(m.group(1))
+    return targets
+
+
+def _code_snippets(text: str) -> str:
+    """Fenced code blocks plus inline backtick spans — the only places a
+    `make ...` / `python -m ...` reference counts as a quoted snippet
+    (prose like "adapters make the two worlds ..." must not trip the
+    gate)."""
+    fenced = re.findall(r"```.*?```", text, flags=re.S)
+    inline = re.findall(r"`[^`\n]+`", text)
+    return "\n".join(fenced + inline)
+
+
+def stale_make_refs() -> list[str]:
+    targets = _makefile_targets()
+    errors = []
+    for name in DOC_FILES:
+        path = REPO / name
+        if not path.is_file():
+            continue
+        snippets = _code_snippets(path.read_text())
+        for ref in re.findall(r"\bmake\s+([a-z][\w-]*)", snippets):
+            if ref not in targets:
+                errors.append(f"{name} quotes `make {ref}` but the "
+                              f"Makefile defines no such target")
+    return errors
+
+
+def _module_exists(module: str) -> bool:
+    rel = Path(*module.split("."))
+    return any((root / rel).with_suffix(".py").is_file()
+               or (root / rel / "__init__.py").is_file()
+               for root in (REPO / "src", REPO))
+
+
+def stale_module_refs() -> list[str]:
+    errors = []
+    for name in DOC_FILES:
+        path = REPO / name
+        if not path.is_file():
+            continue
+        for ref in re.findall(r"-m\s+([\w.]+)",
+                              _code_snippets(path.read_text())):
+            if not _module_exists(ref):
+                errors.append(f"{name} quotes `python -m {ref}` but no "
+                              f"such module exists")
+    return errors
+
+
+def run_checks() -> list[str]:
+    errors = missing_docs()
+    errors += missing_docstrings()
+    errors += stale_make_refs()
+    errors += stale_module_refs()
+    return errors
+
+
+def main() -> int:
+    errors = run_checks()
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    if not errors:
+        print("docs-check: ok")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
