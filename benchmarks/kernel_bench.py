@@ -68,6 +68,108 @@ def run(quick: bool = False):
                     "u_bits_equal": bool(jnp.array_equal(uk, ur)),
                     "note": "us= jnp oracle (the CPU dispatch path)"}))
 
+    # whole-horizon rollout kernels (interpret mode vs stacked oracles):
+    # a toy coupled AIP+LS so kernel-level regressions show up separately
+    # from end-to-end engine throughput
+    from repro.kernels.aip_step import aip_rollout_multi, fnn_rollout
+
+    A, Bb, T, Hh, M, Dd = (2, 4, 6, 8, 4, 12) if quick \
+        else (3, 8, 16, 16, 4, 12)
+    L = A * Bb
+    ks = jax.random.split(jax.random.PRNGKey(7), 12)
+    acts = jnp.zeros((T, L), jnp.int32)
+    bits = jax.random.bits(ks[0], (T, L, M), jnp.uint32)
+    ls0 = (jax.random.normal(ks[1], (L, Dd)),)
+
+    def dset_fn(leaves, a):
+        return leaves[0]
+
+    def tick_fn(leaves, a, u, noise):
+        x = leaves[0]
+        x2 = x + jnp.pad(u, ((0, 0), (0, Dd - M)))
+        return (x2,), u.sum(-1)
+
+    gw = dict(wx=jax.random.normal(ks[2], (A, Dd, 3 * Hh)) * 0.2,
+              wh=jax.random.normal(ks[3], (A, Hh, 3 * Hh)) * 0.2,
+              b=jnp.zeros((A, 3 * Hh)),
+              hw=jax.random.normal(ks[4], (A, Hh, M)) * 0.2,
+              hb=jnp.zeros((A, M)))
+    h0 = jax.random.normal(ks[5], (L, Hh)) * 0.3
+    outs = aip_rollout_multi(ls0, h0, gw["wx"], gw["wh"], gw["b"],
+                             gw["hw"], gw["hb"], acts, bits, (),
+                             n_agents=A, tick_fn=tick_fn, dset_fn=dset_fn,
+                             interpret=True)
+    refs = ref.ials_rollout_multi_ref(ls0, h0, gw["wx"], gw["wh"],
+                                      gw["b"], gw["hw"], gw["hb"], acts,
+                                      bits, (), n_agents=A,
+                                      tick_fn=tick_fn, dset_fn=dset_fn)
+    us_ref = time_fn(jax.jit(lambda h0, bits: ref.ials_rollout_multi_ref(
+        ls0, h0, gw["wx"], gw["wh"], gw["b"], gw["hw"], gw["hb"], acts,
+        bits, (), n_agents=A, tick_fn=tick_fn, dset_fn=dset_fn)[2]),
+        h0, bits, warmup=1, iters=5)
+    out.append(row("kernel/aip_rollout_multi", us_ref,
+                   {"max_err_vs_ref": float(jnp.abs(
+                       outs[1] - refs[1]).max()),
+                    "rew_bits_equal": bool(jnp.array_equal(outs[2],
+                                                           refs[2])),
+                    "note": "us= stacked oracle (the CPU dispatch path)"}))
+
+    stack = 2
+    S = stack * Dd
+    fw = dict(w1=jax.random.normal(ks[6], (A, S, Hh)) * 0.2,
+              b1=jnp.zeros((A, Hh)),
+              w2=jax.random.normal(ks[8], (A, Hh, Hh)) * 0.2,
+              b2=jnp.zeros((A, Hh)),
+              hw=jax.random.normal(ks[9], (A, Hh, M)) * 0.2,
+              hb=jnp.zeros((A, M)))
+    buf0 = jax.random.normal(ks[10], (L, S)) * 0.3
+    outs = fnn_rollout(ls0, buf0, fw["w1"], fw["b1"], fw["w2"], fw["b2"],
+                       fw["hw"], fw["hb"], acts, bits, (), n_agents=A,
+                       tick_fn=tick_fn, dset_fn=dset_fn, interpret=True)
+    refs = ref.fnn_rollout_ref(ls0, buf0, fw["w1"], fw["b1"], fw["w2"],
+                               fw["b2"], fw["hw"], fw["hb"], acts, bits,
+                               (), n_agents=A, tick_fn=tick_fn,
+                               dset_fn=dset_fn)
+    us_ref = time_fn(jax.jit(lambda buf0, bits: ref.fnn_rollout_ref(
+        ls0, buf0, fw["w1"], fw["b1"], fw["w2"], fw["b2"], fw["hw"],
+        fw["hb"], acts, bits, (), n_agents=A, tick_fn=tick_fn,
+        dset_fn=dset_fn)[2]), buf0, bits, warmup=1, iters=5)
+    out.append(row("kernel/fnn_rollout", us_ref,
+                   {"max_err_vs_ref": float(jnp.abs(
+                       outs[1] - refs[1]).max()),
+                    "rew_bits_equal": bool(jnp.array_equal(outs[2],
+                                                           refs[2])),
+                    "note": "us= stacked oracle (the CPU dispatch path)"}))
+
+    # PPO policy net: rational gates (default) vs exact tanh — the
+    # before/after for the fast_gates flag, measured rollout-shaped
+    # (small per-tick batch inside a scan, where the transcendental cost
+    # is dispatch-dominated, not a big vectorized matrix)
+    from repro.rl import ppo
+    pcfg = ppo.PPOConfig(obs_dim=41, n_actions=5, hidden=128)
+    pol = ppo.init_policy(pcfg, jax.random.PRNGKey(11))
+    Tp = 32 if quick else 128
+    xs_p = jax.random.normal(jax.random.PRNGKey(12), (Tp, 16, 41))
+
+    def scan_forward(xs, fast):
+        def tick(c, x):
+            lg, v = ppo.policy_forward(pol, x, fast_gates=fast)
+            return c + v.sum(), lg
+        return jax.lax.scan(tick, 0.0, xs, unroll=8)
+
+    lg_f = scan_forward(xs_p, True)[1]
+    lg_e = scan_forward(xs_p, False)[1]
+    us_fast = time_fn(jax.jit(lambda x: scan_forward(x, True)[0]), xs_p,
+                      warmup=1, iters=10)
+    us_exact = time_fn(jax.jit(lambda x: scan_forward(x, False)[0]), xs_p,
+                       warmup=1, iters=10)
+    out.append(row("kernel/policy_gates", us_fast,
+                   {"us_exact_tanh": round(us_exact, 1),
+                    "exact_over_fast": round(us_exact / us_fast, 2),
+                    "max_logit_err": float(jnp.abs(lg_f - lg_e).max()),
+                    "note": f"us= {Tp}-tick scan of the (16,) env "
+                            f"batch"}))
+
     # rmsnorm
     x = jax.random.normal(key, (4096, 512), jnp.bfloat16)
     g = jnp.ones((512,))

@@ -10,20 +10,31 @@ Aggregate agent-steps/second for, per domain:
                 engines (this and multi-ials) roll whole horizons through
                 ``env_rollout``, so the gs-multi vs multi-ials comparison
                 is engine-vs-engine, not engine-vs-vmap-of-scalar.
-  ials-1        a single local IALS on the fused batched engine
-  multi-ials    N local IALS + N AIPs as ONE fused-step batched program
-                (native BatchedEnv: bulk random bits, fused AIP tick,
-                one vectorized LS transition for all N·B lanes, the
-                whole horizon rolled via ``env_rollout``'s bulk-noise
-                path)
+  ials-1        a single local IALS on the unified engine (A=1 squeeze)
+  multi-ials    N local IALS + N AIPs as ONE unified-engine program
+                (native BatchedEnv: bulk random bits, stacked-weight
+                fused AIP tick, one vectorized LS transition for all N·B
+                lanes, the whole horizon rolled via ``env_rollout``)
   loop-ials     the same N simulators stepped in a Python loop — what the
                 batched construction replaces (dispatch-bound)
 
 The acceptance bar: multi-ials > 5x the aggregate steps/s of loop-ials.
 One agent-step = one agent's local simulator advancing one tick; the GS rows
 count n_agents per global tick since one global step services every region.
+
+``--ab`` runs the same-phase A/B instead: for each domain it times, in ONE
+process (so host phase cancels out), the multi-agent unified engine's
+whole-horizon dispatch three ways — the engine default, the forced
+``kernels.ops`` rollout route (on CPU that is the stacked oracle scan; on
+TPU the Pallas kernel), and the legacy bulk-noise scan with the rollout
+override stripped — plus the per-tick keyed scan of ``step`` that PR 2
+shipped. PR notes quote these ratios instead of cross-run comparisons.
+
+    PYTHONPATH=src python -m benchmarks.multi_agent_throughput --ab [--quick]
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -55,8 +66,9 @@ def loop_rollout(single_envs, n_envs: int, T: int):
     return run
 
 
-def run(quick: bool = False):
-    from repro.core import collect, influence, ials as ials_lib, multi_ials
+def _domain_setup(domain: str, quick: bool):
+    """-> (gs, gs_multi, gs_multi_b, ls, bls, agents, aips, aip0, acfg)."""
+    from repro.core import collect, influence
     from repro.envs.traffic import (TrafficConfig, make_traffic_env,
                                     make_batched_local_traffic_env,
                                     make_batched_multi_traffic_env,
@@ -68,53 +80,63 @@ def run(quick: bool = False):
                                       make_local_warehouse_env,
                                       make_multi_warehouse_env)
 
+    key = jax.random.PRNGKey(0)
+    if domain == "traffic":
+        cfg = TrafficConfig()
+        G = cfg.grid
+        agents = [(i, j) for i in range(G) for j in range(G)]
+        gs = make_traffic_env(cfg)
+        gs_multi = make_multi_traffic_env(cfg, agents)
+        gs_multi_b = make_batched_multi_traffic_env(cfg, agents)
+        ls = make_local_traffic_env(cfg)
+        bls = make_batched_local_traffic_env(cfg)
+        aip_kind, stack = "fnn", 8
+    else:
+        cfg = WarehouseConfig()
+        G = cfg.grid
+        agents = [(i, j) for i in range(G) for j in range(G)]
+        gs = make_warehouse_env(cfg)
+        gs_multi = make_multi_warehouse_env(cfg, agents)
+        gs_multi_b = make_batched_multi_warehouse_env(cfg, agents)
+        ls = make_local_warehouse_env(cfg)
+        bls = make_batched_local_warehouse_env(cfg)
+        aip_kind, stack = "gru", 1
+    A = len(agents)
+
+    k1, k2 = jax.random.split(key)
+    data = collect.per_agent(collect.collect_dataset(
+        gs_multi, k1, n_episodes=4 if quick else 16,
+        ep_len=32 if quick else 64))
+    acfg = influence.AIPConfig(kind=aip_kind, d_in=gs.spec.dset_dim,
+                               n_out=gs.spec.n_influence, hidden=64,
+                               stack=stack)
+    aips, _ = influence.train_aip_batched(
+        acfg, data["d"], data["u"], jax.random.split(k2, A),
+        epochs=1 if quick else 4)
+    aip0 = jax.tree_util.tree_map(lambda l: l[0], aips)
+    return gs, gs_multi, gs_multi_b, ls, bls, agents, aips, aip0, acfg
+
+
+def run(quick: bool = False):
+    from repro.core import engine, ials as ials_lib
+
     out = []
     n_envs, T = (4, 32) if quick else (16, 128)
     iters = 3 if quick else 10
     domains = ["traffic"] if quick else ["traffic", "warehouse"]
     for domain in domains:
         key = jax.random.PRNGKey(0)
-        if domain == "traffic":
-            cfg = TrafficConfig()
-            G = cfg.grid
-            agents = [(i, j) for i in range(G) for j in range(G)]
-            gs = make_traffic_env(cfg)
-            gs_multi = make_multi_traffic_env(cfg, agents)
-            gs_multi_b = make_batched_multi_traffic_env(cfg, agents)
-            ls = make_local_traffic_env(cfg)
-            bls = make_batched_local_traffic_env(cfg)
-            aip_kind, stack = "fnn", 8
-        else:
-            cfg = WarehouseConfig()
-            G = cfg.grid
-            agents = [(i, j) for i in range(G) for j in range(G)]
-            gs = make_warehouse_env(cfg)
-            gs_multi = make_multi_warehouse_env(cfg, agents)
-            gs_multi_b = make_batched_multi_warehouse_env(cfg, agents)
-            ls = make_local_warehouse_env(cfg)
-            bls = make_batched_local_warehouse_env(cfg)
-            aip_kind, stack = "gru", 1
+        (gs, gs_multi, gs_multi_b, ls, bls, agents, aips, aip0,
+         acfg) = _domain_setup(domain, quick)
         A = len(agents)
-
-        k1, k2 = jax.random.split(key)
-        data = collect.per_agent(collect.collect_dataset(
-            gs_multi, k1, n_episodes=4 if quick else 16,
-            ep_len=32 if quick else 64))
-        acfg = influence.AIPConfig(kind=aip_kind, d_in=gs.spec.dset_dim,
-                                   n_out=gs.spec.n_influence, hidden=64,
-                                   stack=stack)
-        aips, _ = influence.train_aip_batched(
-            acfg, data["d"], data["u"], jax.random.split(k2, A),
-            epochs=1 if quick else 4)
-        aip0 = jax.tree_util.tree_map(lambda l: l[0], aips)
 
         sims = {
             "gs": (gs, A),          # one global tick services all A regions
             "gs-multi": (gs_multi_b, A),    # native batched: engine-vs-
             #                                 engine against multi-ials
-            "ials-1": (ials_lib.make_batched_ials(bls, aip0, acfg), 1),
-            "multi-ials": (multi_ials.make_batched_multi_ials(
-                bls, aips, acfg, A), A),
+            "ials-1": (engine.make_unified_ials(bls, aip0, acfg), 1),
+            "multi-ials": (engine.make_unified_ials(
+                bls, aips, acfg, n_agents=A), A),
         }
         rates = {}
         for name, (env, agents_per_step) in sims.items():
@@ -139,5 +161,128 @@ def run(quick: bool = False):
                        {"speedup": round(speedup, 1),
                         "n_agents": A,
                         "acceptance": "> 5x required"}))
-        save_json(f"multi_agent_throughput_{domain}", rates)
+        if not quick:
+            # quick-mode rates are not baselines: writing them would
+            # silently corrupt the committed bench-check floors
+            save_json(f"multi_agent_throughput_{domain}", rates)
     return out
+
+
+def ab_run(quick: bool = False):
+    """Same-phase A/B: the unified engine's whole-horizon dispatches
+    against each other in ONE process, so the comparison does not depend
+    on which way the shared host is swinging between runs. Emits rows
+    only (no saved JSON — the committed baselines stay ``run``'s).
+
+    Every pair compared here executes genuinely different programs. (On
+    CPU the engine *default* IS the bulk-noise scan — timing those two
+    against each other would just measure noise, so no such row.)"""
+    from repro.core import engine, influence
+
+    out = []
+    n_envs, T = (4, 32) if quick else (16, 128)
+    iters = 3 if quick else 10
+    domains = ["traffic"] if quick else ["traffic", "warehouse"]
+    for domain in domains:
+        key = jax.random.PRNGKey(0)
+        _, _, _, _, bls, agents, aips, _, acfg = _domain_setup(domain,
+                                                               quick)
+        A = len(agents)
+        variants = {
+            # the kernels.ops route forced on every backend (CPU: the
+            # stacked oracle scan; TPU: the aip_rollout_multi /
+            # fnn_rollout Pallas kernel)
+            "override-ops": engine.make_unified_ials(
+                bls, aips, acfg, n_agents=A, use_horizon_kernel=True),
+            # env_rollout's bulk-noise scan of the fused step_det — the
+            # engine's own off-TPU default (PR-3's multi path)
+            "bulk-noise-scan": engine.make_unified_ials(
+                bls, aips, acfg, n_agents=A,
+                use_horizon_kernel=False)._replace(rollout=None),
+            # per-tick keyed scan of step (the PR-2 path)
+            "keyed-scan": engine.make_unified_ials(
+                bls, aips, acfg, n_agents=A)._replace(
+                    rollout=None, step_det=None, noise_fn=None),
+        }
+        rates = {}
+        for name, env in variants.items():
+            fn = rollout_fn(env, n_envs, T)
+            us = time_fn(fn, key, warmup=1, iters=iters)
+            rates[name] = n_envs * T * A / (us / 1e6)
+            out.append(row(f"multi_agent_ab/{domain}/{name}",
+                           us / (n_envs * T),
+                           {"agent_steps_per_s": round(rates[name])}))
+
+        # the per-tick formulation choice behind influence's multi-agent
+        # steps: the stacked-weight tick (the whole-horizon kernel's
+        # layout) vs the vmapped-per-agent tick, isolated in a
+        # whole-horizon-shaped scan on fixed d-set streams. These rows
+        # are why the engine scans the vmapped form for GRU and the
+        # stacked einsum for FNN off-TPU.
+        from repro.kernels import ref as kref
+
+        M = bls.spec.n_influence
+        ds = jax.random.normal(key, (T, n_envs, A, acfg.d_in))
+        bits = jax.random.bits(key, (T, n_envs, A, M), jnp.uint32)
+        st0 = influence.init_state(acfg, (n_envs, A))
+
+        def stacked_sample(p, cfg, state, d, bt):
+            if cfg.kind == "fnn":           # engine's (stacked) choice
+                return influence.step_sample_multi(p, cfg, state, d, bt)
+            h2, logits, u = kref.aip_step_multi_ref(
+                d, state, p["gru"]["wx"], p["gru"]["wh"], p["gru"]["b"],
+                p["head"]["w"], p["head"]["b"], bt)
+            return logits, h2, u
+
+        def vmapped_sample(p, cfg, state, d, bt):
+            return jax.vmap(
+                lambda pp, h, dd, bb: influence.step_sample(pp, cfg, h,
+                                                            dd, bb),
+                in_axes=(0, 1, 1, 1), out_axes=(1, 1, 1))(p, state, d,
+                                                          bt)
+
+        for name, sample in (("stacked-tick", stacked_sample),
+                             ("vmapped-tick", vmapped_sample)):
+            def scan_ticks(st0, ds, bits, sample=sample):
+                def tick(st, xs):
+                    d, bt = xs
+                    _, st2, u = sample(aips, acfg, st, d, bt)
+                    return st2, u.sum()
+                _, us_ = jax.lax.scan(tick, st0, (ds, bits), unroll=8)
+                return us_.sum()
+            us = time_fn(jax.jit(scan_ticks), st0, ds, bits, warmup=1,
+                         iters=iters)
+            rates[name] = n_envs * T * A / (us / 1e6)
+            out.append(row(f"multi_agent_ab/{domain}/{name}",
+                           us / (n_envs * T),
+                           {"agent_steps_per_s": round(rates[name])}))
+
+        out.append(row(f"multi_agent_ab/{domain}/ratios", 0.0,
+                       {"ops_over_bulk":
+                        round(rates["override-ops"]
+                              / rates["bulk-noise-scan"], 3),
+                        "bulk_over_keyed":
+                        round(rates["bulk-noise-scan"]
+                              / rates["keyed-scan"], 3),
+                        "stacked_over_vmapped_tick":
+                        round(rates["stacked-tick"]
+                              / rates["vmapped-tick"], 3)}))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ab", action="store_true",
+                    help="same-phase A/B of the whole-horizon dispatches "
+                         "instead of the standard rate table")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.ab:
+        ab_run(quick=args.quick)
+    else:
+        run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

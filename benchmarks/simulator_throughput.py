@@ -60,5 +60,8 @@ def run(quick: bool = False):
         out.append(row(f"sim_throughput/{domain}/speedup", 0.0,
                        {"ials_over_gs": round(ratio, 2),
                         "paper_claim": "~3x total-runtime reduction"}))
-        save_json(f"sim_throughput_{domain}", rates)
+        if not quick:
+            # quick-mode rates are not baselines: writing them would
+            # silently corrupt the committed bench-check floors
+            save_json(f"sim_throughput_{domain}", rates)
     return out

@@ -2,7 +2,10 @@
 simulators.
 
 ``influence`` (the AIP and its training loop), ``collect`` (Algorithm 1
-dataset collection from the GS), ``ials`` (the single-agent IALS and the
-fused batched rollout engine), ``multi_ials`` (Distributed IALS — one
-IALS + AIP per agent region, batched into one program).
+dataset collection from the GS), ``engine`` (the unified fused rollout
+engine — ONE implementation serving {gru, fnn} backbones x {single,
+multi} agents, whole horizons kernel-backed), ``ials`` (the
+scalar-protocol IALS constructions + the engine's historical entry
+points), ``multi_ials`` (compatibility re-exports for the Distributed
+IALS names).
 """

@@ -20,23 +20,17 @@ environments and shard over the ``data``/``pod`` mesh axes — each pod
 simulates its own batch; this is the framework's scaling story for the
 paper's "make data generation fast" contribution.
 
-Two constructions:
-  - ``make_ials``: the scalar ``Env`` protocol (one simulator; batch by
-    vmapping it) — kept for composability and the loop baselines.
-  - ``make_batched_ials``: the fused rollout engine — a ``BatchedEnv``
-    whose step is ONE fused AIP invocation (GRU cell + head + sigmoid +
-    Bernoulli threshold-compare, ``kernels/aip_step.py`` on TPU) plus ONE
-    vectorized LS transition for the whole env batch, with all per-tick
-    randomness drawn in bulk from a single key. This is what makes the
-    IALS actually faster than the GS (ISSUE 2 / paper Fig. 3/5 middle).
+This module holds the *scalar-protocol* constructions (one simulator;
+batch by vmapping it — kept for composability and the loop baselines):
+``make_ials`` (single agent) and ``make_multi_ials`` (N agent regions
+stacked by vmap, the Distributed-IALS construction of Suau et al. 2022).
 
-The batched engine additionally implements the whole-horizon protocol
-(``noise_fn`` / ``step_det`` / ``rollout`` — see ``envs/api.py`` and
-docs/ARCHITECTURE.md): ``rollout`` advances all T ticks in one call, on
-TPU as ONE ``aip_rollout`` Pallas dispatch with the AIP hidden state and
-the LS state leaves VMEM-resident across the horizon, elsewhere as a
-bulk-noise scan of the fused per-tick step. Every path is bitwise-equal
-to scanning ``step`` with the same keys.
+The production simulators are the **unified fused rollout engine** in
+``repro.core.engine``: ONE ``make_unified_ials`` implementation serves
+{gru, fnn} backbones x {single, multi} agent multiplicity, with a
+whole-horizon kernel route for every combination. ``make_batched_ials``
+and ``make_batched_multi_ials`` are re-exported here as the historical
+entry points.
 """
 from __future__ import annotations
 
@@ -47,42 +41,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import influence
-from repro.envs.api import (BatchedEnv, BatchedLocalEnv, Env, LocalEnv,
-                            horizon_noise)
-from repro.nn.act import fast_sigmoid, uniform_from_bits
-
-# dtypes the whole-horizon kernel cannot hold in VMEM scratch directly;
-# the engine round-trips them through int32 at the kernel boundary
-_ENC_DTYPES = (jnp.bool_, jnp.int8)
-
-
-def _codec(treedef, dtypes):
-    """(treedef, leaf dtypes) -> (encode, decode) for the kernel boundary:
-    bool/int8 leaves become int32 inside the kernel. Closes over static
-    metadata only, so the closures are safe to cache across traces."""
-
-    def encode(vals):
-        return tuple(v.astype(jnp.int32) if v.dtype in _ENC_DTYPES else v
-                     for v in vals)
-
-    def decode(vals):
-        return jax.tree_util.tree_unflatten(
-            treedef, [v.astype(dt) for v, dt in zip(vals, dtypes)])
-
-    return encode, decode
-
-
-class IALSState(NamedTuple):
-    ls_state: object
-    aip_state: jax.Array
-
-
-def _check_stateless(stateless, fixed_marginal, fixed_marginal_vec):
-    if stateless and fixed_marginal is None and fixed_marginal_vec is None:
-        raise ValueError(
-            "stateless=True only makes sense for the F-IALS (fixed "
-            "marginal) variants: a trained/untrained AIP needs its "
-            "recurrent state advanced every tick")
+# the unified engine owns the batched protocol; re-exported for the
+# historical import sites (core.ials was the engine before PR 4)
+from repro.core.engine import (IALSState, _check_stateless,  # noqa: F401
+                               make_batched_ials, make_batched_multi_ials,
+                               make_unified_ials)
+from repro.envs.api import Env, LocalEnv
+from repro.nn.act import fast_sigmoid
 
 
 def make_ials(local_env: LocalEnv, aip_params, aip_cfg: influence.AIPConfig,
@@ -144,152 +109,77 @@ def make_ials(local_env: LocalEnv, aip_params, aip_cfg: influence.AIPConfig,
     return Env(spec=spec, reset=reset, step=step, observe=observe)
 
 
-def make_batched_ials(local_env: BatchedLocalEnv, aip_params,
-                      aip_cfg: influence.AIPConfig, *,
-                      fixed_marginal: Optional[float] = None,
-                      fixed_marginal_vec=None,
-                      stateless: bool = False,
-                      use_horizon_kernel: Optional[bool] = None
-                      ) -> BatchedEnv:
-    """The fused rollout engine: a natively batched IALS.
+class MultiIALSState(NamedTuple):
+    ls_state: object      # LocalEnv state with (A, ...) stacked leaves
+    aip_state: jax.Array  # (A, ...) per-agent AIP recurrent state
 
-    One tick for the whole (B,) env batch = one bulk uint32 bits draw, one
-    fused AIP step (``influence.step_sample`` -> ``kernels.ops.aip_step``
-    for the GRU backbone), one vectorized LS transition. The F-IALS
-    switches (``fixed_marginal`` / ``fixed_marginal_vec`` / ``stateless``)
-    behave as in ``make_ials``.
 
-    Whole-horizon layer: ``noise_fn``/``step_det`` split the tick into its
-    random draws and its deterministic remainder, and ``rollout`` advances
-    all T ticks in one call — for a GRU backbone on TPU with an LS that
-    exposes ``rollout_tick``, that is ONE ``kernels.ops.ials_rollout``
-    Pallas dispatch with the AIP hidden state and every LS leaf resident
-    in VMEM across the horizon; everywhere else, a bulk-noise scan of the
-    fused per-tick step. All paths are bitwise-equal to scanning ``step``
-    with the same keys (``env_rollout``'s contract).
-    ``use_horizon_kernel`` overrides the backend auto-detection (None):
-    True forces the ``ops.ials_rollout`` route off-TPU too (the parity
-    tests cover the kernel glue that way), False pins the scan.
+def make_multi_ials(local_env: LocalEnv, aip_params,
+                    aip_cfg: influence.AIPConfig, n_agents: int, *,
+                    fixed_marginal: Optional[float] = None,
+                    fixed_marginal_vec=None,
+                    stateless: bool = False) -> Env:
+    """-> Env with the multi-agent GS signature (scalar protocol): N local
+    simulators + N per-agent AIPs stacked into one vmapped step — the
+    Distributed-IALS construction, kept as the vmap-of-scalar baseline
+    the unified engine is benchmarked against.
+
+    ``aip_params``: pytree with (A, ...) stacked leaves — one AIP per agent
+    (from ``influence.train_aip_batched`` or a ``vmap`` of ``init_aip``).
+    ``fixed_marginal`` (scalar) or ``fixed_marginal_vec`` ((M,) shared or
+    (A, M) per-agent) switch every simulator into F-IALS mode;
+    ``stateless=True`` freezes the ignored per-agent AIP states at init
+    (see ``make_ials`` for the state-shape-parity tradeoff).
     """
     _check_stateless(stateless, fixed_marginal, fixed_marginal_vec)
+    A = n_agents
+    M = local_env.spec.n_influence
     spec = dataclasses.replace(local_env.spec,
-                               name=local_env.spec.name + "+ials")
-    M = spec.n_influence
+                               name=local_env.spec.name + "+multi-ials",
+                               n_agents=A)
     if fixed_marginal_vec is not None:
-        marg = jnp.asarray(fixed_marginal_vec, jnp.float32)
+        marg = jnp.broadcast_to(
+            jnp.asarray(fixed_marginal_vec, jnp.float32), (A, M))
     elif fixed_marginal is not None:
-        marg = jnp.full((M,), fixed_marginal, jnp.float32)
+        marg = jnp.full((A, M), fixed_marginal, jnp.float32)
     else:
         marg = None
 
-    def reset(key, n_envs: int):
-        return IALSState(ls_state=local_env.reset(key, n_envs),
-                         aip_state=influence.init_state(aip_cfg, (n_envs,)))
+    def reset(key):
+        ls = jax.vmap(local_env.reset)(jax.random.split(key, A))
+        return MultiIALSState(ls_state=ls,
+                              aip_state=influence.init_state(aip_cfg, (A,)))
 
-    def _batch(state: IALSState) -> int:
-        return jax.tree_util.tree_leaves(state.ls_state)[0].shape[0]
-
-    def noise_fn(key, n_envs: int):
+    def single_step(params, ls_state, aip_state, action, u_probs_fixed, key):
         k_u, k_env = jax.random.split(key)
-        bits = jax.random.bits(k_u, (n_envs, M), jnp.uint32)
-        env = (local_env.noise_fn(k_env, n_envs)
-               if local_env.noise_fn is not None else k_env)
-        return {"bits": bits, "env": env}
-
-    def _ls_step(ls_state, actions, u, env_noise):
-        if local_env.step_det is not None:
-            return local_env.step_det(ls_state, actions, u, env_noise)
-        return local_env.step(ls_state, actions, u, env_noise)
-
-    def step_det(state: IALSState, actions, noise):
-        d_t = local_env.dset_fn(state.ls_state, actions)       # (B, Dd)
-        B = d_t.shape[0]
-        bits = noise["bits"]
-        if marg is None:
-            logits, new_aip, u = influence.step_sample(
-                aip_params, aip_cfg, state.aip_state, d_t, bits)
-            probs = fast_sigmoid(logits)
+        d_t = local_env.dset_fn(ls_state, action)
+        if stateless:
+            new_aip = aip_state
+            probs = u_probs_fixed
         else:
-            if stateless:
-                new_aip = state.aip_state
-            else:
-                _, new_aip = influence.step(aip_params, aip_cfg,
-                                            state.aip_state, d_t)
-            probs = jnp.broadcast_to(marg, (B, M))
-            u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
-        ls2, obs, r, info = _ls_step(state.ls_state, actions, u,
-                                     noise["env"])
+            logits, new_aip = influence.step(params, aip_cfg, aip_state,
+                                             d_t)
+            probs = (u_probs_fixed if marg is not None
+                     else fast_sigmoid(logits))
+        u = jax.random.bernoulli(k_u, probs).astype(jnp.float32)
+        ls2, obs, r, info = local_env.step(ls_state, action, u, k_env)
         info = dict(info)
         info["u"] = u
         info["u_probs"] = probs
-        return IALSState(ls_state=ls2, aip_state=new_aip), obs, r, info
+        return ls2, new_aip, obs, r, info
 
-    def step(state: IALSState, actions, key):
-        return step_det(state, actions, noise_fn(key, _batch(state)))
+    vstep = jax.vmap(single_step)
 
-    # --- whole-horizon path -------------------------------------------
-    _kernel_fns = {}      # structural key -> stable (tick, dset) closures
-    #                       (stable identity keeps the kernel's jit cache
-    #                       warm across rollout calls)
+    def step(state: MultiIALSState, actions, key):
+        keys = jax.random.split(key, A)
+        fixed = (marg if marg is not None
+                 else jnp.zeros((A, M), jnp.float32))
+        ls2, new_aip, obs, r, info = vstep(
+            aip_params, state.ls_state, state.aip_state, actions, fixed,
+            keys)
+        return MultiIALSState(ls_state=ls2, aip_state=new_aip), obs, r, info
 
-    def _kernel_closures(ls_def, ls_dtypes, nz_def, nz_dtypes):
-        key_ = (ls_def, ls_dtypes, nz_def, nz_dtypes)
-        if key_ not in _kernel_fns:
-            ls_enc, ls_dec = _codec(ls_def, ls_dtypes)
-            _, nz_dec = _codec(nz_def, nz_dtypes)
+    def observe(state: MultiIALSState):
+        return jax.vmap(local_env.observe)(state.ls_state)
 
-            def k_dset(vals, a):
-                return local_env.dset_fn(ls_dec(vals), a)
-
-            def k_tick(vals, a, u, nzv):
-                st2, r = local_env.rollout_tick(ls_dec(vals), a, u,
-                                                nz_dec(nzv))
-                return ls_enc(jax.tree_util.tree_leaves(st2)), r
-
-            _kernel_fns[key_] = (k_tick, k_dset)
-        return _kernel_fns[key_]
-
-    def rollout(state: IALSState, actions, keys):
-        """(state, actions (T, B), keys (T,)) -> (state, rewards (T, B)):
-        the whole horizon in one call, bitwise-equal to scanning
-        ``step``."""
-        B = _batch(state)
-        noise = horizon_noise(noise_fn, keys, B)
-        use_kernel = (marg is None and aip_cfg.kind == "gru"
-                      and local_env.rollout_tick is not None
-                      and (use_horizon_kernel if use_horizon_kernel
-                           is not None
-                           else jax.default_backend() == "tpu"))
-        if use_kernel:
-            from repro.kernels import ops  # deferred: keeps kernels
-            #                                optional for the scan path
-            ls_leaves, ls_def = jax.tree_util.tree_flatten(state.ls_state)
-            nz_leaves, nz_def = jax.tree_util.tree_flatten(noise["env"])
-            ls_dtypes = tuple(l.dtype for l in ls_leaves)
-            nz_dtypes = tuple(l.dtype for l in nz_leaves)
-            k_tick, k_dset = _kernel_closures(ls_def, ls_dtypes, nz_def,
-                                              nz_dtypes)
-            ls_enc, ls_dec = _codec(ls_def, ls_dtypes)
-            nz_enc, _ = _codec(nz_def, nz_dtypes)
-            g = aip_params["gru"]
-            hd = aip_params["head"]
-            final, h_T, rews = ops.ials_rollout(
-                ls_enc(ls_leaves), state.aip_state, g["wx"], g["wh"],
-                g["b"], hd["w"], hd["b"], actions, noise["bits"],
-                nz_enc(nz_leaves), tick_fn=k_tick, dset_fn=k_dset)
-            return (IALSState(ls_state=ls_dec(final), aip_state=h_T),
-                    rews)
-
-        def tick(carry, xs):
-            a, n = xs
-            s, _, r, _ = step_det(carry, a, n)
-            return s, r
-
-        return jax.lax.scan(tick, state, (actions, noise), unroll=8)
-
-    def observe(state: IALSState):
-        return local_env.observe(state.ls_state)
-
-    return BatchedEnv(spec=spec, reset=reset, step=step, observe=observe,
-                      rollout=rollout, noise_fn=noise_fn,
-                      step_det=step_det)
+    return Env(spec=spec, reset=reset, step=step, observe=observe)

@@ -120,7 +120,15 @@ def _fnn_step_multi(params: Params, cfg: AIPConfig, state, d_t):
 
 def step_multi(params: Params, cfg: AIPConfig, state, d_t):
     """A per-agent AIPs in one call: params leaves (A, ...), state/d_t
-    leading (B, A). -> (logits (B, A, M), new state)."""
+    leading (B, A). -> (logits (B, A, M), new state).
+
+    FNN runs as the in-place stacked einsum (``_fnn_step_multi`` — a
+    vmap would transpose the whole frame buffer twice per tick); GRU
+    vmaps the single-agent step over the agent axis, which XLA CPU
+    schedules measurably faster than the equivalent stacked einsum (the
+    stacked formulation lives at the whole-horizon kernel boundary,
+    where the grid structurally needs it — see ``kernels/aip_step.py``
+    and the ``--ab`` bench's stacked-vs-vmapped rows)."""
     if cfg.kind == "fnn":
         return _fnn_step_multi(params, cfg, state, d_t)
     return jax.vmap(lambda p, h, d: step(p, cfg, h, d),
@@ -129,17 +137,21 @@ def step_multi(params: Params, cfg: AIPConfig, state, d_t):
 
 def step_sample_multi(params: Params, cfg: AIPConfig, state, d_t, bits):
     """``step_sample`` for A per-agent AIPs: bits (B, A, M) uint32 ->
-    (logits, new state, u), all leading (B, A). GRU routes through the
-    fused kernel op agent-by-agent (a vmap lifts it into one batched
-    invocation); FNN samples on top of the in-place einsum step."""
+    (logits, new state, u), all leading (B, A). GRU routes through
+    ``kernels.ops.aip_step_multi`` — on TPU an agent-axis vmap of the
+    fused ``aip_step`` kernel, elsewhere the vmapped-per-agent oracle
+    (the same computation the whole-horizon rollout oracle scans); FNN
+    samples on top of the in-place einsum step."""
     if cfg.kind == "fnn":
         logits, new_state = _fnn_step_multi(params, cfg, state, d_t)
         u = (uniform_from_bits(bits) < fast_sigmoid(logits)
              ).astype(jnp.float32)
         return logits, new_state, u
-    return jax.vmap(lambda p, h, d, bt: step_sample(p, cfg, h, d, bt),
-                    in_axes=(0, 1, 1, 1), out_axes=(1, 1, 1))(
-                        params, state, d_t, bits)
+    from repro.kernels import ops  # deferred: keeps kernels optional
+    h2, logits, u = ops.aip_step_multi(
+        d_t, state, params["gru"]["wx"], params["gru"]["wh"],
+        params["gru"]["b"], params["head"]["w"], params["head"]["b"], bits)
+    return logits, h2, u
 
 
 def apply_sequence(params: Params, cfg: AIPConfig, dsets: jax.Array):

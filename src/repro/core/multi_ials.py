@@ -1,212 +1,14 @@
-"""Distributed IALS (Suau et al. 2022): N local simulators in one program.
+"""Distributed IALS (Suau et al. 2022) — compatibility shim.
 
-Every agent region gets its own IALS — a LocalEnv plus a per-agent AIP — and
-all N are stacked into a single ``Env`` whose step is one ``vmap`` over the
-agent axis. Combined with the PPO rollout's vmap over environments and scan
-over time, the whole 5x5 traffic grid (25 agents) or 6x6 warehouse floor
-(36 agents) simulates as one jitted program; this is the batched-simulation
-throughput lever (Shacklett et al. 2021) applied to the IALS construction.
-
-State / action / obs / reward all carry a leading (A, ...) agent axis, the
-same convention as the multi-agent GS factories in ``repro.envs``, so the
-RL layer treats an A-agent IALS exactly like a multi-agent GS.
-
-``make_multi_ials`` is the scalar-protocol construction (vmap of scalar
-simulators). ``make_batched_multi_ials`` is the fused rollout engine: all
-A·B lanes (A agents x B env copies) advance as ONE vectorized LS
-transition, and the A per-agent AIPs run as one agent-vmapped fused AIP
-step (``kernels/aip_step.py``) per tick, with the whole tick's random bits
-drawn in bulk — the Distributed-IALS scaling story made real. The batched
-engine also implements the whole-horizon split (``noise_fn`` /
-``step_det``, see ``envs/api.py``), so ``env_rollout`` draws every tick's
-randomness for the whole horizon up front and scans the pure fused tick —
-bitwise-equal to scanning ``step``. (An agent-vmapped lift of the
-single-agent ``aip_rollout`` Pallas kernel is the open TPU step — it
-would land as a ``rollout`` override; per-agent AIP weights keep the
-agents out of the single kernel's shared-weight batch block.)
+The duplicated multi-agent stepping logic that used to live here is
+gone: since PR 4 the agent axis is just another batch/grid dimension of
+the ONE unified engine in ``repro.core.engine``
+(``make_unified_ials``), and the scalar vmap-of-simulators baseline
+lives with its single-agent sibling in ``repro.core.ials``. This module
+only re-exports the historical names.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import influence
-from repro.core.ials import IALSState, _check_stateless
-from repro.envs.api import BatchedEnv, BatchedLocalEnv, Env, LocalEnv
-from repro.nn.act import fast_sigmoid, uniform_from_bits
-
-
-class MultiIALSState(NamedTuple):
-    ls_state: object      # LocalEnv state with (A, ...) stacked leaves
-    aip_state: jax.Array  # (A, ...) per-agent AIP recurrent state
-
-
-def make_multi_ials(local_env: LocalEnv, aip_params,
-                    aip_cfg: influence.AIPConfig, n_agents: int, *,
-                    fixed_marginal: Optional[float] = None,
-                    fixed_marginal_vec=None,
-                    stateless: bool = False) -> Env:
-    """-> Env with the multi-agent GS signature.
-
-    ``aip_params``: pytree with (A, ...) stacked leaves — one AIP per agent
-    (from ``influence.train_aip_batched`` or a ``vmap`` of ``init_aip``).
-    ``fixed_marginal`` (scalar) or ``fixed_marginal_vec`` ((M,) shared or
-    (A, M) per-agent) switch every simulator into F-IALS mode;
-    ``stateless=True`` freezes the ignored per-agent AIP states at init
-    (see ``make_ials`` for the state-shape-parity tradeoff).
-    """
-    _check_stateless(stateless, fixed_marginal, fixed_marginal_vec)
-    A = n_agents
-    M = local_env.spec.n_influence
-    spec = dataclasses.replace(local_env.spec,
-                               name=local_env.spec.name + "+multi-ials",
-                               n_agents=A)
-    if fixed_marginal_vec is not None:
-        marg = jnp.broadcast_to(
-            jnp.asarray(fixed_marginal_vec, jnp.float32), (A, M))
-    elif fixed_marginal is not None:
-        marg = jnp.full((A, M), fixed_marginal, jnp.float32)
-    else:
-        marg = None
-
-    def reset(key):
-        ls = jax.vmap(local_env.reset)(jax.random.split(key, A))
-        return MultiIALSState(ls_state=ls,
-                              aip_state=influence.init_state(aip_cfg, (A,)))
-
-    def single_step(params, ls_state, aip_state, action, u_probs_fixed, key):
-        k_u, k_env = jax.random.split(key)
-        d_t = local_env.dset_fn(ls_state, action)
-        if stateless:
-            new_aip = aip_state
-            probs = u_probs_fixed
-        else:
-            logits, new_aip = influence.step(params, aip_cfg, aip_state,
-                                             d_t)
-            probs = (u_probs_fixed if marg is not None
-                     else fast_sigmoid(logits))
-        u = jax.random.bernoulli(k_u, probs).astype(jnp.float32)
-        ls2, obs, r, info = local_env.step(ls_state, action, u, k_env)
-        info = dict(info)
-        info["u"] = u
-        info["u_probs"] = probs
-        return ls2, new_aip, obs, r, info
-
-    vstep = jax.vmap(single_step)
-
-    def step(state: MultiIALSState, actions, key):
-        keys = jax.random.split(key, A)
-        fixed = (marg if marg is not None
-                 else jnp.zeros((A, M), jnp.float32))
-        ls2, new_aip, obs, r, info = vstep(
-            aip_params, state.ls_state, state.aip_state, actions, fixed,
-            keys)
-        return MultiIALSState(ls_state=ls2, aip_state=new_aip), obs, r, info
-
-    def observe(state: MultiIALSState):
-        return jax.vmap(local_env.observe)(state.ls_state)
-
-    return Env(spec=spec, reset=reset, step=step, observe=observe)
-
-
-def make_batched_multi_ials(local_env: BatchedLocalEnv, aip_params,
-                            aip_cfg: influence.AIPConfig, n_agents: int, *,
-                            fixed_marginal: Optional[float] = None,
-                            fixed_marginal_vec=None,
-                            stateless: bool = False) -> BatchedEnv:
-    """Fused Distributed IALS: (B, A, ...) leaves, one fused tick.
-
-    ``local_env`` is a natively batched LS; its (B·A,)-lane batch axis
-    carries every agent of every env copy, so the LS transition is a single
-    vectorized call. The A per-agent AIPs ((A, ...)-stacked ``aip_params``)
-    advance as one agent-axis vmap of the fused AIP step. Exposes the
-    multi-agent ``BatchedEnv`` signature PPO consumes: actions (B, A), obs
-    (B, A, obs_dim). ``stateless`` as in ``make_ials`` (F-IALS only).
-
-    Whole-horizon layer: ``noise_fn``/``step_det`` split the tick, so
-    ``env_rollout`` draws the full horizon's bits and LS noise up front
-    and scans the deterministic fused tick — no per-tick key derivation,
-    bitwise-equal to scanning ``step``. No ``rollout`` override yet: it
-    would duplicate exactly that path; the override slot is where the
-    agent-vmapped whole-horizon kernel lands (ROADMAP open item).
-    """
-    _check_stateless(stateless, fixed_marginal, fixed_marginal_vec)
-    A = n_agents
-    M = local_env.spec.n_influence
-    spec = dataclasses.replace(local_env.spec,
-                               name=local_env.spec.name + "+multi-ials",
-                               n_agents=A)
-    if fixed_marginal_vec is not None:
-        marg = jnp.broadcast_to(
-            jnp.asarray(fixed_marginal_vec, jnp.float32), (A, M))
-    elif fixed_marginal is not None:
-        marg = jnp.full((A, M), fixed_marginal, jnp.float32)
-    else:
-        marg = None
-
-    def _flat(tree, B):
-        return jax.tree_util.tree_map(
-            lambda l: l.reshape((B * A,) + l.shape[2:]), tree)
-
-    def _unflat(tree, B):
-        return jax.tree_util.tree_map(
-            lambda l: l.reshape((B, A) + l.shape[1:]), tree)
-
-    def reset(key, n_envs: int):
-        ls = _unflat(local_env.reset(key, n_envs * A), n_envs)
-        return IALSState(
-            ls_state=ls,
-            aip_state=influence.init_state(aip_cfg, (n_envs, A)))
-
-    def noise_fn(key, n_envs: int):
-        k_u, k_env = jax.random.split(key)
-        bits = jax.random.bits(k_u, (n_envs, A, M), jnp.uint32)
-        env = (local_env.noise_fn(k_env, n_envs * A)
-               if local_env.noise_fn is not None else k_env)
-        return {"bits": bits, "env": env}
-
-    def _ls_step(ls_flat, a_flat, u_flat, env_noise):
-        if local_env.step_det is not None:
-            return local_env.step_det(ls_flat, a_flat, u_flat, env_noise)
-        return local_env.step(ls_flat, a_flat, u_flat, env_noise)
-
-    def step_det(state: IALSState, actions, noise):
-        B = actions.shape[0]
-        ls_flat = _flat(state.ls_state, B)
-        a_flat = actions.reshape(B * A)
-        d_t = local_env.dset_fn(ls_flat, a_flat)       # (B·A, Dd)
-        d_t = d_t.reshape(B, A, -1)
-        bits = noise["bits"]
-        if marg is None:
-            logits, new_aip, u = influence.step_sample_multi(
-                aip_params, aip_cfg, state.aip_state, d_t, bits)
-            probs = fast_sigmoid(logits)
-        else:
-            if stateless:
-                new_aip = state.aip_state
-            else:
-                _, new_aip = influence.step_multi(aip_params, aip_cfg,
-                                                  state.aip_state, d_t)
-            probs = jnp.broadcast_to(marg, (B, A, M))
-            u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
-        ls2, obs, r, info = _ls_step(ls_flat, a_flat,
-                                     u.reshape(B * A, M), noise["env"])
-        info = dict(_unflat(info, B))
-        info["u"] = u
-        info["u_probs"] = probs
-        return (IALSState(ls_state=_unflat(ls2, B), aip_state=new_aip),
-                obs.reshape(B, A, -1), r.reshape(B, A), info)
-
-    def step(state: IALSState, actions, key):
-        return step_det(state, actions, noise_fn(key, actions.shape[0]))
-
-    def observe(state: IALSState):
-        B = jax.tree_util.tree_leaves(state.ls_state)[0].shape[0]
-        obs = local_env.observe(_flat(state.ls_state, B))
-        return obs.reshape(B, A, -1)
-
-    return BatchedEnv(spec=spec, reset=reset, step=step, observe=observe,
-                      noise_fn=noise_fn, step_det=step_det)
+from repro.core.engine import (IALSState,  # noqa: F401
+                               make_batched_multi_ials, make_unified_ials)
+from repro.core.ials import MultiIALSState, make_multi_ials  # noqa: F401

@@ -28,10 +28,18 @@ additionally expose
     holding *bitwise*.
 ``env_rollout`` exploits the pair: all T ticks' randomness is drawn in bulk
 outside the scan, so the scan body is pure compute — and an env may override
-``rollout`` entirely (the fused IALS engines dispatch a Pallas kernel that
-keeps AIP hidden state and LS state VMEM-resident across the whole horizon
-on TPU). Every path is bitwise-equal to scanning ``step``; the overrides
-only change *where* the work happens.
+``rollout`` entirely (the unified IALS engine dispatches a Pallas kernel
+that keeps AIP recurrent state and LS state VMEM-resident across the whole
+horizon on TPU). The override contract carries the agent axis: actions are
+(T, B) for a single-agent env and (T, B, A) when ``spec.n_agents = A > 1``,
+rewards come back with the same trailing layout, and the (T,) keys are
+shared across agents exactly as ``step`` shares them. Every path is
+bitwise-equal to scanning ``step``; the overrides only change *where* the
+work happens.
+
+``kernel_codec`` is the one place the kernel-boundary dtype rules live:
+Pallas VMEM scratch cannot hold bool/int8 leaves, so engines round-trip
+them through int32 — domain code never sees encoded leaves.
 
 ``info`` carries the IBA quantities extracted from the GS (Algorithm 1):
   - "u": influence sources u_t  (what the AIP learns to predict)
@@ -162,6 +170,28 @@ def as_batched(env) -> BatchedEnv:
     if isinstance(env, BatchedEnv):
         return env
     return batch_env(env)
+
+
+# dtypes the whole-horizon kernels cannot hold in VMEM scratch directly;
+# engines round-trip them through int32 at the kernel boundary
+KERNEL_ENC_DTYPES = (jnp.bool_, jnp.int8)
+
+
+def kernel_codec(treedef, dtypes):
+    """(treedef, leaf dtypes) -> (encode, decode) for the kernel boundary:
+    bool/int8 leaves become int32 inside the kernel, and ``decode``
+    restores the original dtypes and tree structure. Closes over static
+    metadata only, so the closures are safe to cache across traces."""
+
+    def encode(vals):
+        return tuple(v.astype(jnp.int32) if v.dtype in KERNEL_ENC_DTYPES
+                     else v for v in vals)
+
+    def decode(vals):
+        return jax.tree_util.tree_unflatten(
+            treedef, [v.astype(dt) for v, dt in zip(vals, dtypes)])
+
+    return encode, decode
 
 
 def horizon_noise(noise_fn, keys, n_envs: int):

@@ -1,35 +1,51 @@
 """Fused AIP Pallas TPU kernels: one tick (``aip_step``) and one whole
-horizon (``aip_rollout``).
+horizon (the ``aip_rollout`` family).
 
 The IALS inner loop (Algorithm 2 lines 5-8) is: query the AIP on d_t, turn
 the logits into per-head Bernoulli probabilities, and draw u_t. Dispatched
-op-by-op that is a GRU cell, a head matmul, a sigmoid, a uniform draw and a
-compare — five round-trips through HBM for a (B, H) state that fits in one
-VMEM tile. ``aip_step`` fuses the whole thing: both GRU matmuls on the MXU,
-the gate nonlinearities, the head projection, the head sigmoid, and the
-Bernoulli threshold-compare against caller-supplied counter-based random
-bits, with every intermediate resident in VMEM.
+op-by-op that is a backbone forward pass, a head matmul, a sigmoid, a
+uniform draw and a compare — five round-trips through HBM for a state that
+fits in one VMEM tile. ``aip_step`` fuses the whole thing for the GRU
+backbone: both GRU matmuls on the MXU, the gate nonlinearities, the head
+projection, the head sigmoid, and the Bernoulli threshold-compare against
+caller-supplied counter-based random bits, with every intermediate
+resident in VMEM.
 
-``aip_rollout`` goes one level up (the Large-Batch-Simulation move,
-Shacklett et al. 2021): a lane-blocked ``(B-blocks, T)`` grid — batch
+The rollout kernels go one level up (the Large-Batch-Simulation move,
+Shacklett et al. 2021): ONE generalized grid, ``(A·B-blocks, T)`` — lane
 blocks on the parallel outer axis, the horizon on an inner "arbitrary"
-axis like ``gru.py`` — with the AIP hidden state AND the local simulator's
-state leaves resident in VMEM scratch across all T grid steps. The caller
-supplies the LS transition (``tick_fn``) and d-set extraction (``dset_fn``)
-as pure jnp functions that get traced straight into the kernel body, so
-one ``pallas_call`` advances the entire coupled AIP+LS system for the
-whole horizon: actions, random bits, and LS noise stream in block-by-tick;
-only per-tick rewards and the final states ever leave VMEM.
+axis like ``gru.py`` — with the AIP recurrent state AND the local
+simulator's state leaves resident in VMEM scratch across all T grid
+steps. Lanes are laid out *agent-major* (lane ``a*B + b``), so every lane
+block belongs to exactly one agent and the per-agent weights are just
+another blocked input indexed by ``block_index // (B / block_b)``; the
+agent axis is a grid dimension, not a Python-level engine variant. The
+caller supplies the LS transition (``tick_fn``) and d-set extraction
+(``dset_fn``) as pure jnp functions that get traced straight into the
+kernel body, so one ``pallas_call`` advances the entire coupled AIP+LS
+system for the whole horizon: actions, random bits, and LS noise stream
+in block-by-tick; only per-tick rewards and the final states ever leave
+VMEM.
+
+Two backbones share that one kernel body (``_rollout_kernel``), each as a
+cell traced into it:
+  - ``aip_rollout_multi`` — GRU cell + head (``_gru_cell``), recurrent
+    state = the (lanes, H) hidden vector; ``aip_rollout`` is its A=1
+    squeeze (kept as the historical single-agent entry point).
+  - ``fnn_rollout`` — the finite-memory FNN of Theorem 1: frame-stack
+    shift + two relu GEMMs + head (``_fnn_cell``), recurrent state = the
+    (lanes, stack·d_in) flattened d-set buffer.
 
 Randomness is *passed in* as uint32 bits (one `jax.random.bits` call per
 tick, generated in bulk by the rollout engine) so the kernels themselves
 are pure functions — the same bits give the same u_t on every backend,
 which is what the parity tests pin down against the ``ref.py`` oracles.
 
-Weights are laid out (D, 3H)/(H, 3H) gate-major [r|z|n] like
-``repro/nn/rnn.py``; activations are the shared rational gates from
-``repro.nn.act`` (identical in the oracle), so kernel-vs-oracle agreement
-is exact up to matmul association order.
+GRU weights are laid out (D, 3H)/(H, 3H) gate-major [r|z|n] like
+``repro/nn/rnn.py``, stacked with a leading (A,) agent axis for the multi
+kernels; activations are the shared rational gates from ``repro.nn.act``
+(identical in the oracles), so kernel-vs-oracle agreement is exact up to
+matmul association order.
 """
 from __future__ import annotations
 
@@ -44,33 +60,53 @@ from repro.kernels.compat import tpu_compiler_params
 from repro.nn.act import fast_sigmoid, fast_tanh, uniform_from_bits
 
 
-def _aip_cell(d, h, wx_ref, wh_ref, b_ref, hw_ref, hb_ref, bits, *, H: int):
-    """Shared tick math on VMEM-resident values: GRU cell + head + sigmoid
-    + threshold-compare. d: (B, D) f32, h: (B, H) f32, bits: (B, M) u32
-    -> (h2, logits, u) all f32."""
-    gx = jax.lax.dot_general(d, wx_ref[...].astype(jnp.float32),
-                             (((1,), (0,)), ((), ()))) + \
-        b_ref[...].astype(jnp.float32)
-    gh = jax.lax.dot_general(h, wh_ref[...].astype(jnp.float32),
-                             (((1,), (0,)), ((), ())))
+def _gru_cell(w, h, d, bits, *, H: int):
+    """One fused GRU-backbone AIP tick on VMEM-resident values.
+
+    w = (wx (D, 3H), wh (H, 3H), b (3H,), hw (H, M), hb (M,)) values;
+    h: (B, H) f32 recurrent state; d: (B, D) f32; bits: (B, M) u32
+    -> (h2, logits, u) all f32.
+    """
+    wx, wh, b, hw, hb = (v.astype(jnp.float32) for v in w)
+    gx = jax.lax.dot_general(d, wx, (((1,), (0,)), ((), ()))) + b
+    gh = jax.lax.dot_general(h, wh, (((1,), (0,)), ((), ())))
     r = fast_sigmoid(gx[:, :H] + gh[:, :H])
     z = fast_sigmoid(gx[:, H:2 * H] + gh[:, H:2 * H])
     n = fast_tanh(gx[:, 2 * H:] + r * gh[:, 2 * H:])
     h2 = (1.0 - z) * n + z * h
-    logits = jax.lax.dot_general(h2, hw_ref[...].astype(jnp.float32),
-                                 (((1,), (0,)), ((), ()))) + \
-        hb_ref[...].astype(jnp.float32)
+    logits = jax.lax.dot_general(h2, hw, (((1,), (0,)), ((), ()))) + hb
     probs = fast_sigmoid(logits)
     u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
     return h2, logits, u
+
+
+def _fnn_cell(w, buf, d, bits):
+    """One fused FNN-backbone AIP tick (the Theorem-1 k-step predictor).
+
+    w = (w1 (S, K), b1 (K,), w2 (K, K), b2 (K,), hw (K, M), hb (M,));
+    buf: (B, S) f32 — the frame-stack buffer, S = stack * d_in, flattened
+    row-major so the shift is a plain slice; d: (B, d_in) f32; bits:
+    (B, M) u32 -> (buf2, logits, u). ``buf2`` already contains d (the
+    newest frame last), matching ``influence.step``'s returned buffer.
+    """
+    w1, b1, w2, b2, hw, hb = (v.astype(jnp.float32) for v in w)
+    buf2 = jnp.concatenate([buf[:, d.shape[1]:], d], axis=1)
+    h = jax.nn.relu(
+        jax.lax.dot_general(buf2, w1, (((1,), (0,)), ((), ()))) + b1)
+    h = jax.nn.relu(
+        jax.lax.dot_general(h, w2, (((1,), (0,)), ((), ()))) + b2)
+    logits = jax.lax.dot_general(h, hw, (((1,), (0,)), ((), ()))) + hb
+    probs = fast_sigmoid(logits)
+    u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
+    return buf2, logits, u
 
 
 def _aip_step_kernel(d_ref, h_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
                      bits_ref, h2_ref, logits_ref, u_ref, *, H: int):
     d = d_ref[...].astype(jnp.float32)                 # (B, D)
     h = h_ref[...].astype(jnp.float32)                 # (B, H)
-    h2, logits, u = _aip_cell(d, h, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
-                              bits_ref[...], H=H)
+    w = (wx_ref[...], wh_ref[...], b_ref[...], hw_ref[...], hb_ref[...])
+    h2, logits, u = _gru_cell(w, h, d, bits_ref[...], H=H)
     h2_ref[...] = h2.astype(h2_ref.dtype)
     logits_ref[...] = logits.astype(logits_ref.dtype)
     u_ref[...] = u.astype(u_ref.dtype)
@@ -118,125 +154,206 @@ def aip_step(d, h, wx, wh, b, hw, hb, bits, *, interpret: bool | None = None):
     return h2, logits, u
 
 
-def _aip_rollout_kernel(*refs, n_ls: int, n_noise: int, H: int, T: int,
-                        tick_fn, dset_fn):
-    """Grid (B-blocks, T), batch blocks parallel-outer, horizon inner.
+# ---------------------------------------------------------------------------
+# The whole-horizon rollout family: one kernel body, two cells, any A
+# ---------------------------------------------------------------------------
 
-    Ref layout (positional): LS state leaves | h0, wx, wh, b, hw, hb,
-    actions, bits | noise leaves || final LS leaves, hT, rewards ||
-    scratch: h, LS leaves. The AIP hidden state and every LS leaf live in
-    VMEM scratch for the whole T axis of a batch block; ``tick_fn`` and
-    ``dset_fn`` are traced straight into this body."""
+def _rollout_kernel(*refs, n_ls: int, n_noise: int, n_w: int, T: int,
+                    cell_fn, tick_fn, dset_fn):
+    """Grid (A·B-blocks, T): lane blocks parallel-outer, horizon inner.
+
+    Ref layout (positional): LS state leaves | AIP state s0 | n_w stacked
+    weights (leading per-agent block axis) | actions, bits | noise leaves
+    || final LS leaves, sT, rewards || scratch: AIP state, LS leaves.
+    The AIP recurrent state and every LS leaf live in VMEM scratch for the
+    whole T axis of a lane block; ``cell_fn`` (the backbone),
+    ``tick_fn``, and ``dset_fn`` are traced straight into this body."""
     i = n_ls
     ls0 = refs[:n_ls]
-    (h0_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref, a_ref,
-     bits_ref) = refs[i:i + 8]
-    i += 8
+    s0_ref = refs[i]
+    w_refs = refs[i + 1:i + 1 + n_w]
+    i += 1 + n_w
+    a_ref, bits_ref = refs[i], refs[i + 1]
+    i += 2
     noise_refs = refs[i:i + n_noise]
     i += n_noise
     ls_out = refs[i:i + n_ls]
-    hT_ref, rew_ref = refs[i + n_ls], refs[i + n_ls + 1]
+    sT_ref, rew_ref = refs[i + n_ls], refs[i + n_ls + 1]
     i += n_ls + 2
-    h_scr = refs[i]
+    s_scr = refs[i]
     ls_scr = refs[i + 1:i + 1 + n_ls]
 
     t = pl.program_id(1)
 
     @pl.when(t == 0)
     def _init():
-        h_scr[...] = h0_ref[...].astype(jnp.float32)
+        s_scr[...] = s0_ref[...].astype(jnp.float32)
         for dst, src in zip(ls_scr, ls0):
             dst[...] = src[...]
 
     ls_vals = tuple(s[...] for s in ls_scr)
     a = a_ref[0]                                       # (Bblk,)
     d = dset_fn(ls_vals, a).astype(jnp.float32)        # (Bblk, Dd)
-    h2, _, u = _aip_cell(d, h_scr[...], wx_ref, wh_ref, b_ref, hw_ref,
-                         hb_ref, bits_ref[0], H=H)
+    w = tuple(r[0] for r in w_refs)                    # this block's agent
+    s2, _, u = cell_fn(w, s_scr[...], d, bits_ref[0])
     new_ls, rew = tick_fn(ls_vals, a, u,
                           tuple(nr[0] for nr in noise_refs))
-    h_scr[...] = h2
+    s_scr[...] = s2
     for dst, val in zip(ls_scr, new_ls):
         dst[...] = val.astype(dst.dtype)
     rew_ref[0] = rew.astype(rew_ref.dtype)
 
     @pl.when(t == T - 1)
     def _finish():
-        hT_ref[...] = h_scr[...].astype(hT_ref.dtype)
+        sT_ref[...] = s_scr[...].astype(sT_ref.dtype)
         for dst, src in zip(ls_out, ls_scr):
             dst[...] = src[...]
 
 
-@functools.partial(jax.jit, static_argnames=("tick_fn", "dset_fn",
-                                             "block_b", "interpret"))
-def aip_rollout(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
-                tick_fn, dset_fn, block_b: int | None = None,
-                interpret: bool | None = None):
-    """Whole-horizon fused IALS rollout — ONE kernel dispatch for T ticks.
+def _launch_rollout(cell_fn, ls, s0, weights, actions, bits, noise, *,
+                    n_agents: int, tick_fn, dset_fn,
+                    block_b: int | None, interpret: bool):
+    """Shared ``pallas_call`` builder for the rollout family.
 
-    ``ls``: tuple of LS state leaves, each (B, ...) with a kernel-safe
-    dtype (int32/float32 — the engine encodes bools); ``h0``: (B, H) AIP
-    state; weights as in ``aip_step``; ``actions``: (T, B) int32;
-    ``bits``: (T, B, M) uint32; ``noise``: tuple of (T, B, ...) LS noise
-    leaves. ``tick_fn(ls_leaves, a, u, noise_leaves) -> (ls_leaves, r)``
-    and ``dset_fn(ls_leaves, a) -> (B, Dd)`` must be pure jnp — they are
-    traced into the kernel body and run on VMEM-resident values.
-
-    -> (final ls leaves, h_T (B, H), rewards (T, B) f32), bitwise-equal to
-    scanning the per-tick fused step (``ref.ials_rollout_ref`` oracle).
-
-    ``block_b`` lane-blocks the batch axis across the parallel grid
-    dimension (must divide B; default: one block). ``interpret=None``
-    auto-detects: compiled on TPU, interpret elsewhere.
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    ls = tuple(ls)
-    noise = tuple(noise)
-    B, H = h0.shape
+    ``ls``: tuple of (L, ...) LS leaves, L = A·B lanes agent-major;
+    ``s0``: (L, K) AIP recurrent state; ``weights``: tuple of (A, ...)
+    stacked per-agent weight leaves; ``actions``: (T, L); ``bits``:
+    (T, L, M); ``noise``: tuple of (T, L, ...) leaves.
+    -> (final ls leaves, s_T (L, K), rewards (T, L) f32)."""
+    L = s0.shape[0]
+    A = n_agents
+    if L % A:
+        raise ValueError(f"lane count {L} not divisible by n_agents={A}")
+    B = L // A
     T = actions.shape[0]
-    M = hw.shape[1]
-    D3 = wx.shape
     if block_b is None:
         block_b = B
     if B % block_b:
-        raise ValueError(f"block_b={block_b} must divide B={B}")
+        raise ValueError(f"block_b={block_b} must divide per-agent "
+                         f"batch {B}")
     nB = B // block_b
 
-    def bcast(shape):          # weight blocks: whole array, every step
-        return pl.BlockSpec(shape, lambda bi, t: (0,) * len(shape))
+    def w_spec(leaf):          # (A, ...) stacked weight -> this agent's
+        s = leaf.shape[1:]
+        return pl.BlockSpec((1,) + s,
+                            lambda bi, t, _n=len(s): (bi // nB,)
+                            + (0,) * _n)
 
-    def state_spec(leaf):      # (B, ...) leaf -> per-block, t-invariant
+    def state_spec(leaf):      # (L, ...) leaf -> per-block, t-invariant
         s = leaf.shape[1:]
         return pl.BlockSpec((block_b,) + s,
                             lambda bi, t, _n=len(s): (bi,) + (0,) * _n)
 
-    def stream_spec(leaf):     # (T, B, ...) leaf -> one tick per grid step
+    def stream_spec(leaf):     # (T, L, ...) leaf -> one tick per grid step
         s = leaf.shape[2:]
         return pl.BlockSpec((1, block_b) + s,
                             lambda bi, t, _n=len(s): (t, bi) + (0,) * _n)
 
-    kernel = functools.partial(_aip_rollout_kernel, n_ls=len(ls),
-                               n_noise=len(noise), H=H, T=T,
-                               tick_fn=tick_fn, dset_fn=dset_fn)
+    kernel = functools.partial(_rollout_kernel, n_ls=len(ls),
+                               n_noise=len(noise), n_w=len(weights), T=T,
+                               cell_fn=cell_fn, tick_fn=tick_fn,
+                               dset_fn=dset_fn)
     out = pl.pallas_call(
         kernel,
-        grid=(nB, T),
-        in_specs=[state_spec(l) for l in ls] + [
-            state_spec(h0),
-            bcast(D3), bcast(wh.shape), bcast(b.shape),
-            bcast(hw.shape), bcast(hb.shape),
+        grid=(A * nB, T),
+        in_specs=[state_spec(l) for l in ls] + [state_spec(s0)] + [
+            w_spec(w) for w in weights] + [
             stream_spec(actions), stream_spec(bits),
         ] + [stream_spec(n) for n in noise],
         out_specs=[state_spec(l) for l in ls] + [
-            state_spec(h0), stream_spec(jnp.empty((T, B), jnp.float32))],
+            state_spec(s0), stream_spec(jnp.empty((T, L), jnp.float32))],
         out_shape=[jax.ShapeDtypeStruct(l.shape, l.dtype) for l in ls] + [
-            jax.ShapeDtypeStruct((B, H), h0.dtype),
-            jax.ShapeDtypeStruct((T, B), jnp.float32)],
-        scratch_shapes=[pltpu.VMEM((block_b, H), jnp.float32)] + [
+            jax.ShapeDtypeStruct(s0.shape, s0.dtype),
+            jax.ShapeDtypeStruct((T, L), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_b, s0.shape[1]), jnp.float32)] + [
             pltpu.VMEM((block_b,) + l.shape[1:], l.dtype) for l in ls],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(*ls, h0, wx, wh, b, hw, hb, actions, bits, *noise)
+    )(*ls, s0, *weights, actions, bits, *noise)
     return tuple(out[:len(ls)]), out[len(ls)], out[len(ls) + 1]
+
+
+@functools.partial(jax.jit, static_argnames=("n_agents", "tick_fn",
+                                             "dset_fn", "block_b",
+                                             "interpret"))
+def aip_rollout_multi(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
+                      n_agents: int, tick_fn, dset_fn,
+                      block_b: int | None = None,
+                      interpret: bool | None = None):
+    """Whole-horizon fused IALS rollout, GRU backbone, A per-agent AIPs —
+    ONE kernel dispatch for T ticks of every lane.
+
+    ``ls``: tuple of LS state leaves, each (L, ...) with L = A·B lanes in
+    *agent-major* order (lane ``a*B + b``) and a kernel-safe dtype
+    (int32/float32 — the engine encodes bools); ``h0``: (L, H) AIP state;
+    stacked weights ``wx`` (A, D, 3H), ``wh`` (A, H, 3H), ``b`` (A, 3H),
+    ``hw`` (A, H, M), ``hb`` (A, M); ``actions``: (T, L) int32; ``bits``:
+    (T, L, M) uint32; ``noise``: tuple of (T, L, ...) LS noise leaves.
+    ``tick_fn(ls_leaves, a, u, noise_leaves) -> (ls_leaves, r)`` and
+    ``dset_fn(ls_leaves, a) -> (lanes, Dd)`` must be pure jnp — they are
+    traced into the kernel body and run on VMEM-resident values.
+
+    -> (final ls leaves, h_T (L, H), rewards (T, L) f32), bitwise-equal
+    to scanning the per-tick fused step (``ref.ials_rollout_multi_ref``).
+
+    ``block_b`` lane-blocks the *per-agent* batch axis B across the
+    parallel grid dimension (must divide B; default: one block per
+    agent). ``interpret=None`` auto-detects: compiled on TPU, interpret
+    elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    H = wh.shape[1]
+    cell = functools.partial(_gru_cell, H=H)
+    return _launch_rollout(cell, tuple(ls), h0, (wx, wh, b, hw, hb),
+                           actions, bits, tuple(noise), n_agents=n_agents,
+                           tick_fn=tick_fn, dset_fn=dset_fn,
+                           block_b=block_b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_agents", "tick_fn",
+                                             "dset_fn", "block_b",
+                                             "interpret"))
+def fnn_rollout(ls, buf0, w1, b1, w2, b2, hw, hb, actions, bits, noise, *,
+                n_agents: int, tick_fn, dset_fn,
+                block_b: int | None = None,
+                interpret: bool | None = None):
+    """Whole-horizon fused IALS rollout, FNN backbone (Theorem-1 k-step
+    predictor), A per-agent AIPs — the frame-stack shift, both relu
+    GEMMs, the head, and the Bernoulli draw all trace into the kernel.
+
+    Layout as in ``aip_rollout_multi`` except the AIP recurrent state:
+    ``buf0`` is the (L, stack·d_in) *flattened* frame-stack buffer
+    (row-major over (stack, d_in), newest frame last, so the shift is a
+    plain slice-and-concat — identical values to ``influence.step``'s
+    (stack, d_in) buffer). Stacked weights ``w1`` (A, stack·d_in, K),
+    ``b1`` (A, K), ``w2`` (A, K, K), ``b2`` (A, K), ``hw`` (A, K, M),
+    ``hb`` (A, M).
+
+    -> (final ls leaves, buf_T (L, stack·d_in), rewards (T, L) f32),
+    bitwise-equal to scanning the fused per-tick step
+    (``ref.fnn_rollout_ref``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _launch_rollout(_fnn_cell, tuple(ls), buf0,
+                           (w1, b1, w2, b2, hw, hb), actions, bits,
+                           tuple(noise), n_agents=n_agents,
+                           tick_fn=tick_fn, dset_fn=dset_fn,
+                           block_b=block_b, interpret=interpret)
+
+
+def aip_rollout(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
+                tick_fn, dset_fn, block_b: int | None = None,
+                interpret: bool | None = None):
+    """Single-agent whole-horizon GRU rollout — the A=1 squeeze of
+    ``aip_rollout_multi`` (shared-weight lane blocks; kept as the
+    historical entry point). Unstacked weights as in ``aip_step``;
+    otherwise see ``aip_rollout_multi``.
+    """
+    return aip_rollout_multi(
+        tuple(ls), h0, wx[None], wh[None], b[None], hw[None], hb[None],
+        actions, bits, tuple(noise), n_agents=1, tick_fn=tick_fn,
+        dset_fn=dset_fn, block_b=block_b, interpret=interpret)
+

@@ -65,6 +65,83 @@ def aip_step(d, h, wx, wh, b, hw, hb, bits):
     return _ref.aip_step_ref(d, h, wx, wh, b, hw, hb, bits)
 
 
+def aip_step_multi(d, h, wx, wh, b, hw, hb, bits):
+    """A per-agent fused AIP ticks with stacked (A, ...) weights.
+
+    d: (B, A, D); h: (B, A, H); bits: (B, A, M) uint32 -> (h_new, logits,
+    u), all leading (B, A). On TPU: an agent-axis vmap of the compiled
+    ``aip_step`` kernel (one batched invocation). Elsewhere: the
+    vmapped-per-agent oracle — numerically equal to the stacked
+    ``ref.aip_step_multi_ref`` einsum but measurably faster under XLA CPU
+    (see the ``--ab`` bench's stacked-vs-vmapped tick rows), and the
+    exact computation the whole-horizon rollout oracle scans, so the
+    per-tick and forced-ops routes stay bitwise-equal.
+    """
+    if jax.default_backend() == "tpu":
+        return jax.vmap(
+            lambda dd, hh, a1, a2, a3, a4, a5, bt: _aip.aip_step(
+                dd, hh, a1, a2, a3, a4, a5, bt, interpret=False),
+            in_axes=(1, 1, 0, 0, 0, 0, 0, 1), out_axes=(1, 1, 1))(
+                d, h, wx, wh, b, hw, hb, bits)
+    return _ref.aip_step_multi_vmapped_ref(d, h, wx, wh, b, hw, hb, bits)
+
+
+def ials_rollout_multi(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
+                       n_agents, tick_fn, dset_fn, block_b=None,
+                       interpret=None):
+    """Whole-horizon fused IALS rollout, GRU backbone, A per-agent AIPs:
+    T coupled AIP+LS ticks for every A·B agent-major lane in ONE kernel
+    dispatch (``aip_rollout_multi``'s (A·B-blocks, T) grid, per-agent
+    weights indexed by the agent coordinate of each lane block) on TPU;
+    the identical-math ``ref.ials_rollout_multi_ref`` scan elsewhere.
+    Both paths run the caller's ``tick_fn``/``dset_fn`` on the same
+    values in the same order, so they agree bitwise given the same bits
+    and noise.
+
+    ``interpret=None`` is the production dispatch above; passing a bool
+    forces the Pallas kernel itself (interpret mode off-TPU — the parity
+    tests exercise the real grid/scratch machinery that way).
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _aip.aip_rollout_multi(
+                tuple(ls), h0, wx, wh, b, hw, hb, actions, bits,
+                tuple(noise), n_agents=n_agents, tick_fn=tick_fn,
+                dset_fn=dset_fn, block_b=block_b, interpret=False)
+        return _ref.ials_rollout_multi_ref(
+            tuple(ls), h0, wx, wh, b, hw, hb, actions, bits, tuple(noise),
+            n_agents=n_agents, tick_fn=tick_fn, dset_fn=dset_fn)
+    return _aip.aip_rollout_multi(
+        tuple(ls), h0, wx, wh, b, hw, hb, actions, bits, tuple(noise),
+        n_agents=n_agents, tick_fn=tick_fn, dset_fn=dset_fn,
+        block_b=block_b, interpret=interpret)
+
+
+def fnn_rollout(ls, buf0, w1, b1, w2, b2, hw, hb, actions, bits, noise, *,
+                n_agents, tick_fn, dset_fn, block_b=None, interpret=None):
+    """Whole-horizon fused IALS rollout, FNN backbone (the Theorem-1
+    k-step predictor): frame-stack shift + two relu GEMMs + head + draw
+    traced into ``fnn_rollout``'s kernel body on TPU, the identical-math
+    ``ref.fnn_rollout_ref`` scan elsewhere. Layout and ``interpret``
+    semantics as in ``ials_rollout_multi``; ``buf0`` is the
+    (L, stack·d_in) flattened frame buffer.
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _aip.fnn_rollout(
+                tuple(ls), buf0, w1, b1, w2, b2, hw, hb, actions, bits,
+                tuple(noise), n_agents=n_agents, tick_fn=tick_fn,
+                dset_fn=dset_fn, block_b=block_b, interpret=False)
+        return _ref.fnn_rollout_ref(
+            tuple(ls), buf0, w1, b1, w2, b2, hw, hb, actions, bits,
+            tuple(noise), n_agents=n_agents, tick_fn=tick_fn,
+            dset_fn=dset_fn)
+    return _aip.fnn_rollout(
+        tuple(ls), buf0, w1, b1, w2, b2, hw, hb, actions, bits,
+        tuple(noise), n_agents=n_agents, tick_fn=tick_fn, dset_fn=dset_fn,
+        block_b=block_b, interpret=interpret)
+
+
 def ials_rollout(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
                  tick_fn, dset_fn, block_b=None, interpret=None):
     """Whole-horizon fused IALS rollout: T coupled AIP+LS ticks in ONE

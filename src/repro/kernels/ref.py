@@ -59,12 +59,92 @@ def aip_step_ref(d, h, wx, wh, b, hw, hb, bits):
     return h2, logits, u
 
 
+def gru_step_multi_ref(d, h, wx, wh, b, hw, hb):
+    """A per-agent GRU-backbone AIP cells as ONE stacked contraction —
+    the agent axis is a batch dimension of every einsum, not a vmap.
+
+    d: (B, A, D); h: (B, A, H); stacked weights wx (A, D, 3H),
+    wh (A, H, 3H), b (A, 3H), hw (A, H, M), hb (A, M)
+    -> (h_new (B, A, H), logits (B, A, M)). The per-agent math is
+    identical to ``_gru_cell_ref`` (the stacked-vs-vmapped parity test
+    pins that down)."""
+    H = wh.shape[1]
+    gx = jnp.einsum('bad,adk->bak', d, wx) + b
+    gh = jnp.einsum('bah,ahk->bak', h, wh)
+    r = fast_sigmoid(gx[..., :H] + gh[..., :H])
+    z = fast_sigmoid(gx[..., H:2 * H] + gh[..., H:2 * H])
+    n = fast_tanh(gx[..., 2 * H:] + r * gh[..., 2 * H:])
+    h2 = (1.0 - z) * n + z * h
+    logits = jnp.einsum('bah,ahm->bam', h2, hw) + hb
+    return h2, logits
+
+
+def aip_step_multi_ref(d, h, wx, wh, b, hw, hb, bits):
+    """``aip_step_ref`` for A per-agent AIPs with stacked weights: the
+    fused tick (cell + head + sigmoid + Bernoulli threshold-compare) in
+    (B, A, ...) layout — the *stacked* formulation, documenting exactly
+    the math each ``aip_rollout_multi`` lane block runs against its
+    agent's weight slice. bits: (B, A, M) uint32.
+    -> (h_new, logits, u) all leading (B, A)."""
+    h2, logits = gru_step_multi_ref(d.astype(jnp.float32),
+                                    h.astype(jnp.float32),
+                                    wx, wh, b, hw, hb)
+    probs = fast_sigmoid(logits)
+    u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
+    return h2, logits, u
+
+
+def aip_step_multi_vmapped_ref(d, h, wx, wh, b, hw, hb, bits):
+    """The *vmapped-per-agent* formulation of the same fused multi tick:
+    an agent-axis vmap of ``aip_step_ref``. Numerically this equals the
+    stacked ``aip_step_multi_ref`` (the parity test pins the two
+    together), but on CPU XLA schedules it measurably faster than the
+    stacked einsum (same-phase A/B: ~1.25x on the warehouse engine), so
+    this is what the per-tick engine path and the rollout oracle scan
+    actually run off-TPU — while the whole-horizon kernel keeps the
+    stacked layout its grid structurally needs."""
+    return jax.vmap(
+        lambda dd, hh, a1, a2, a3, a4, a5, bt: aip_step_ref(
+            dd, hh, a1, a2, a3, a4, a5, bt),
+        in_axes=(1, 1, 0, 0, 0, 0, 0, 1), out_axes=(1, 1, 1))(
+            d, h, wx, wh, b, hw, hb, bits)
+
+
+def fnn_step_multi_ref(buf, d, w1, b1, w2, b2, hw, hb):
+    """A per-agent FNN-backbone (Theorem-1 k-step) AIP cells as stacked
+    contractions over a *flattened* frame buffer.
+
+    buf: (B, A, S) with S = stack·d_in (row-major over (stack, d_in),
+    newest frame last — the flat shift is value-identical to
+    ``influence.step``'s (stack, d_in) concat); d: (B, A, d_in); stacked
+    weights w1 (A, S, K), b1 (A, K), w2 (A, K, K), b2 (A, K),
+    hw (A, K, M), hb (A, M) -> (buf_new, logits). The einsum contraction
+    pattern matches ``influence._fnn_step_multi`` exactly."""
+    buf2 = jnp.concatenate([buf[..., d.shape[-1]:], d], axis=-1)
+    h = jax.nn.relu(jnp.einsum('baf,afk->bak', buf2, w1) + b1)
+    h = jax.nn.relu(jnp.einsum('bak,akj->baj', h, w2) + b2)
+    logits = jnp.einsum('baj,ajm->bam', h, hw) + hb
+    return buf2, logits
+
+
+def _lanes_to_ba(x, n_agents: int):
+    """(L, ...) agent-major lanes -> (B, A, ...). (Deliberately NOT named
+    like the engine's fold helpers, which map the opposite direction.)"""
+    B = x.shape[0] // n_agents
+    return x.reshape((n_agents, B) + x.shape[1:]).swapaxes(0, 1)
+
+
+def _ba_to_lanes(x):
+    """(B, A, ...) -> (L, ...) agent-major lanes."""
+    return x.swapaxes(0, 1).reshape((-1,) + x.shape[2:])
+
+
 def ials_rollout_ref(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
                      tick_fn, dset_fn):
-    """Whole-horizon fused IALS rollout oracle: a scan of exactly the
-    per-tick math ``aip_rollout`` runs per grid step (same ``tick_fn`` /
-    ``dset_fn`` closures, same ``aip_step_ref`` cell), so kernel and
-    oracle agree bit-for-bit given the same bits.
+    """Whole-horizon fused IALS rollout oracle (GRU, shared weights): a
+    scan of exactly the per-tick math ``aip_rollout`` runs per grid step
+    (same ``tick_fn`` / ``dset_fn`` closures, same ``aip_step_ref``
+    cell), so kernel and oracle agree bit-for-bit given the same bits.
 
     ls: tuple of (B, ...) LS state leaves; actions (T, B); bits (T, B, M)
     uint32; noise: tuple of (T, B, ...) leaves.
@@ -80,8 +160,85 @@ def ials_rollout_ref(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
         return (tuple(ls2), h2), r.astype(jnp.float32)
 
     (ls_T, h_T), rews = jax.lax.scan(
-        tick, (tuple(ls), h0), (actions, bits, tuple(noise)))
+        tick, (tuple(ls), h0), (actions, bits, tuple(noise)), unroll=8)
     return ls_T, h_T, rews
+
+
+def ials_rollout_multi_ref(ls, h0, wx, wh, b, hw, hb, actions, bits,
+                           noise, *, n_agents: int, tick_fn, dset_fn):
+    """Stacked-weight whole-horizon rollout oracle (GRU): the
+    ``aip_rollout_multi`` ground truth. Lane layout as in the kernel —
+    (L, ...) leaves, L = A·B agent-major; stacked (A, ...) weights. The
+    AIP cell runs in (B, A, ...) layout through
+    ``aip_step_multi_vmapped_ref`` (the exact per-agent computation the
+    unified engine's per-tick path uses off-TPU, so the forced-ops route
+    stays bitwise with the scan), the LS tick on the flat lanes. A=1
+    squeezes to ``ials_rollout_ref``.
+    -> (final ls leaves, h_T (L, H), rewards (T, L) f32)."""
+    A = n_agents
+    if A == 1:
+        return ials_rollout_ref(ls, h0, wx[0], wh[0], b[0], hw[0], hb[0],
+                                actions, bits, noise, tick_fn=tick_fn,
+                                dset_fn=dset_fn)
+
+    def tick(carry, xs):
+        ls, h = carry                       # h: (B, A, H)
+        a, bt, nz = xs
+        d = _lanes_to_ba(dset_fn(ls, a).astype(jnp.float32), A)
+        h2, _, u = aip_step_multi_vmapped_ref(d, h, wx, wh, b, hw, hb,
+                                              _lanes_to_ba(bt, A))
+        ls2, r = tick_fn(ls, a, _ba_to_lanes(u), nz)
+        return (tuple(ls2), h2), r.astype(jnp.float32)
+
+    (ls_T, h_T), rews = jax.lax.scan(
+        tick, (tuple(ls), _lanes_to_ba(h0, A)),
+        (actions, bits, tuple(noise)), unroll=8)
+    return ls_T, _ba_to_lanes(h_T), rews
+
+
+def fnn_rollout_ref(ls, buf0, w1, b1, w2, b2, hw, hb, actions, bits,
+                    noise, *, n_agents: int, tick_fn, dset_fn):
+    """Stacked-weight whole-horizon rollout oracle (FNN backbone): the
+    ``fnn_rollout`` ground truth. ``buf0``: (L, stack·d_in) flattened
+    frame buffers; stacked (A, ...) weights; lane layout as in
+    ``ials_rollout_multi_ref``. A=1 runs the plain 2D matmul path
+    (identical association to ``influence.step``'s dense calls).
+    -> (final ls leaves, buf_T (L, stack·d_in), rewards (T, L) f32)."""
+    A = n_agents
+    if A == 1:
+
+        def tick(carry, xs):
+            ls, buf = carry
+            a, bt, nz = xs
+            d = dset_fn(ls, a).astype(jnp.float32)
+            buf2 = jnp.concatenate([buf[:, d.shape[1]:], d], axis=1)
+            h = jax.nn.relu(buf2 @ w1[0] + b1[0])
+            h = jax.nn.relu(h @ w2[0] + b2[0])
+            logits = h @ hw[0] + hb[0]
+            u = (uniform_from_bits(bt) < fast_sigmoid(logits)
+                 ).astype(jnp.float32)
+            ls2, r = tick_fn(ls, a, u, nz)
+            return (tuple(ls2), buf2), r.astype(jnp.float32)
+
+        (ls_T, buf_T), rews = jax.lax.scan(
+            tick, (tuple(ls), buf0), (actions, bits, tuple(noise)),
+            unroll=8)
+        return ls_T, buf_T, rews
+
+    def tick(carry, xs):
+        ls, buf = carry                     # buf: (B, A, S)
+        a, bt, nz = xs
+        d = _lanes_to_ba(dset_fn(ls, a).astype(jnp.float32), A)
+        buf2, logits = fnn_step_multi_ref(buf, d, w1, b1, w2, b2, hw, hb)
+        u = (uniform_from_bits(_lanes_to_ba(bt, A)) < fast_sigmoid(logits)
+             ).astype(jnp.float32)
+        ls2, r = tick_fn(ls, a, _ba_to_lanes(u), nz)
+        return (tuple(ls2), buf2), r.astype(jnp.float32)
+
+    (ls_T, buf_T), rews = jax.lax.scan(
+        tick, (tuple(ls), _lanes_to_ba(buf0, A)),
+        (actions, bits, tuple(noise)), unroll=8)
+    return ls_T, _ba_to_lanes(buf_T), rews
 
 
 def rmsnorm_ref(x, g, *, eps: float = 1e-6):

@@ -30,7 +30,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.core import collect, influence, ials as ials_lib, multi_ials
+from repro.core import collect, engine, influence
 from repro.envs.traffic import (TrafficConfig, make_traffic_env,
                                 make_batched_local_traffic_env,
                                 make_local_traffic_env,
@@ -73,11 +73,11 @@ def build_domain(domain: str, vanish_after: int = 0, n_agents: int = 1):
 
 
 def _make_sim(ls, params, acfg, n_agents, **kw):
-    """``ls``: a BatchedLocalEnv — PPO trains on the fused batched engine."""
-    if n_agents > 1:
-        return multi_ials.make_batched_multi_ials(ls, params, acfg,
-                                                  n_agents, **kw)
-    return ials_lib.make_batched_ials(ls, params, acfg, **kw)
+    """``ls``: a BatchedLocalEnv — PPO trains on the unified fused rollout
+    engine (one implementation for every backbone x agent-multiplicity
+    combination; single-agent is the A=1 squeeze)."""
+    return engine.make_unified_ials(ls, params, acfg, n_agents=n_agents,
+                                    **kw)
 
 
 def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
@@ -166,6 +166,10 @@ def main(argv=None):
     ap.add_argument("--stateless-f-ials", action="store_true",
                     help="f-ials only: freeze the ignored AIP recurrent "
                          "state instead of advancing it every tick")
+    ap.add_argument("--exact-policy-tanh", action="store_true",
+                    help="evaluate the PPO policy net with exact jnp.tanh "
+                         "instead of the default rational gates "
+                         "(nn/act.py)")
     ap.add_argument("--n-agents", type=int, default=1,
                     help="agents trained at once (25 = full 5x5 traffic "
                          "grid, 36 = full 6x6 warehouse floor)")
@@ -199,7 +203,8 @@ def main(argv=None):
                          frame_stack=frame_stack, n_envs=args.n_envs,
                          rollout_len=args.rollout_len,
                          episode_len=args.episode_len,
-                         n_agents=args.n_agents)
+                         n_agents=args.n_agents,
+                         fast_gates=not args.exact_policy_tanh)
     key, k0, k1 = jax.random.split(key, 3)
     params = ppo.init_policy(pcfg, k0)
     opt, iteration = ppo.make_train_iteration(env, pcfg)

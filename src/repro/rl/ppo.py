@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.envs.api import BatchedEnv, Env, as_batched, horizon_noise
+from repro.nn.act import fast_tanh
 from repro.nn.module import dense_init, dense
 from repro.optim.adamw import adamw
 
@@ -60,6 +61,9 @@ class PPOConfig:
     epochs: int = 4
     n_minibatches: int = 4
     n_agents: int = 1             # leading agent axis of the env (1 = none)
+    fast_gates: bool = True       # rational tanh (nn/act.py) in the policy
+    #                               net — the same transcendental diet the
+    #                               AIP tick got; False = exact jnp.tanh
 
     @property
     def agent_shape(self) -> tuple:
@@ -82,9 +86,17 @@ def init_policy(cfg: PPOConfig, key):
     }
 
 
-def policy_forward(params, x):
-    h = jnp.tanh(dense(params["l1"], x))
-    h = jnp.tanh(dense(params["l2"], h))
+def policy_forward(params, x, *, fast_gates: bool):
+    """Actor-critic forward pass. ``fast_gates`` (required — thread
+    ``PPOConfig.fast_gates`` so the config stays the single source of
+    truth) evaluates the hidden tanh layers with the shared rational
+    gates from ``nn/act.py`` (|err| < 1e-4, exact saturation) — the exact
+    tanh transcendentals were the last per-tick policy cost the ROADMAP
+    flagged on the rollout hot path. Training and rollout use the same
+    setting, so PPO optimises exactly the network it acts with."""
+    act = fast_tanh if fast_gates else jnp.tanh
+    h = act(dense(params["l1"], x))
+    h = act(dense(params["l2"], h))
     return dense(params["pi"], h), dense(params["v"], h)[..., 0]
 
 
@@ -152,7 +164,8 @@ def rollout(env, cfg: PPOConfig, params, rs: RolloutState, key):
         rs = carry
         ka, ks, kr = xs
         x = _stack_obs(rs.frames)
-        logits, value = policy_forward(params, x)
+        logits, value = policy_forward(params, x,
+                                       fast_gates=cfg.fast_gates)
         a = jax.random.categorical(ka, logits)
         logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
                                    a[..., None], -1)[..., 0]
@@ -192,7 +205,7 @@ def rollout(env, cfg: PPOConfig, params, rs: RolloutState, key):
               if whole_horizon else ks)
     rs, batch = lax.scan(step, rs, (ka, env_xs, kr))
     x_last = _stack_obs(rs.frames)
-    _, v_last = policy_forward(params, x_last)
+    _, v_last = policy_forward(params, x_last, fast_gates=cfg.fast_gates)
     return rs, batch, v_last
 
 
@@ -217,7 +230,8 @@ def gae(batch, v_last, gamma, lam):
 # ---------------------------------------------------------------------------
 
 def ppo_loss(params, cfg: PPOConfig, mb):
-    logits, v = policy_forward(params, mb["x"])
+    logits, v = policy_forward(params, mb["x"],
+                               fast_gates=cfg.fast_gates)
     logp_all = jax.nn.log_softmax(logits)
     logp = jnp.take_along_axis(logp_all, mb["a"][..., None], -1)[..., 0]
     ratio = jnp.exp(logp - mb["logp"])
@@ -295,7 +309,8 @@ def evaluate(env: Env, cfg: PPOConfig, params, key, *, n_episodes: int = 8,
         def step(carry, k):
             state, frames = carry
             x = frames.reshape(ash + (-1,)) if ash else frames.reshape(1, -1)
-            logits, _ = policy_forward(params, x)
+            logits, _ = policy_forward(params, x,
+                                       fast_gates=cfg.fast_gates)
             a = (jnp.argmax(logits, -1) if ash else jnp.argmax(logits[0]))
             state, obs, r, _ = env.step(state, a, k)
             frames = jnp.concatenate(

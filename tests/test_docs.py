@@ -24,6 +24,35 @@ def test_module_resolution():
     assert not docs_check._module_exists("repro.launch.no_such_module")
 
 
+def test_symbol_refs_resolve():
+    """The ARCHITECTURE dispatch table's `file.py::symbol` cells resolve
+    to real top-level symbols, and the checker actually reads them."""
+    p = docs_check._resolve_doc_path("kernels/aip_step.py")
+    assert p is not None
+    names = docs_check._top_level_names(p)
+    assert {"aip_rollout_multi", "fnn_rollout", "aip_rollout",
+            "aip_step"} <= names
+    assert "no_such_symbol" not in names
+    assert docs_check._resolve_doc_path("kernels/no_such_file.py") is None
+
+
+def test_symbol_checker_detects_drift(tmp_path, monkeypatch):
+    """A doc quoting a dead `file.py::symbol` trips the gate."""
+    doc = tmp_path / "README.md"
+    doc.write_text("see `kernels/aip_step.py::definitely_not_a_symbol`\n")
+    (tmp_path / "docs").mkdir()
+    monkeypatch.setattr(docs_check, "DOC_FILES", ("README.md",))
+    real_repo = docs_check.REPO
+    monkeypatch.setattr(docs_check, "REPO", tmp_path)
+    monkeypatch.setattr(
+        docs_check, "_resolve_doc_path",
+        lambda rel, _r=real_repo: next(
+            (p for root in docs_check._SYMBOL_ROOTS
+             if (p := _r / root / rel).is_file()), None))
+    errs = docs_check.stale_symbol_refs()
+    assert len(errs) == 1 and "definitely_not_a_symbol" in errs[0]
+
+
 def test_snippet_extraction_ignores_prose():
     text = ("Adapters make the two worlds interoperate.\n"
             "Run `make test-fast` or:\n```sh\nmake bench-check\n```\n")

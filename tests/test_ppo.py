@@ -83,6 +83,36 @@ def test_ppo_learns_bandit():
     assert rewards[-1] > 0.9, rewards
 
 
+def test_ppo_fast_gates_training_equivalence():
+    """The rational-gate policy net (fast_gates=True, the default — the
+    path test_ppo_learns_bandit already covers) is training-equivalent
+    to the exact-tanh net: PPO with exact tanh reaches the same reward
+    threshold on the bandit, and the two forward passes agree to the
+    gates' documented accuracy on the same params."""
+    env = _make_bandit()
+    cfg = ppo.PPOConfig(obs_dim=2, n_actions=2, n_envs=8, rollout_len=32,
+                        episode_len=32, hidden=32, lr=1e-2,
+                        entropy_coef=0.0, gamma=0.9, lam=0.9,
+                        fast_gates=False)
+    key = jax.random.PRNGKey(0)
+    params = ppo.init_policy(cfg, key)
+    opt, it_fn = ppo.make_train_iteration(env, cfg)
+    ost = opt.init(params)
+    rs = ppo.init_rollout_state(env, cfg, key)
+    rewards = []
+    for i in range(15):
+        key, k = jax.random.split(key)
+        params, ost, rs, m = it_fn(params, ost, rs, k)
+        rewards.append(float(m["mean_reward"]))
+    assert rewards[-1] > 0.9, rewards
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 2))
+    lg_f, v_f = ppo.policy_forward(params, x, fast_gates=True)
+    lg_e, v_e = ppo.policy_forward(params, x, fast_gates=False)
+    assert float(jnp.abs(lg_f - lg_e).max()) < 1e-2
+    assert float(jnp.abs(v_f - v_e).max()) < 1e-2
+
+
 def test_frame_stack_rollout_shapes():
     env = _make_bandit()
     cfg = ppo.PPOConfig(obs_dim=2, n_actions=2, frame_stack=4, n_envs=3,

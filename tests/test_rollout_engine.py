@@ -1,14 +1,22 @@
-"""Whole-horizon rollout engine: the native ``rollout`` overrides (scan,
-kernel-glue, and interpret-mode Pallas paths) are bitwise-identical to
-scanning the per-tick fused ``step``; the native batched multi-agent GS
-matches the vmapped scalar GS exactly; ``noise_fn``/``step_det`` obey the
-protocol invariant; stateless F-IALS freezes (only) the AIP state; PPO's
-bulk-noise rollout reproduces the keyed path bit-for-bit."""
+"""Whole-horizon rollout engine: the unified engine's native ``rollout``
+(scan, kernel-glue, and interpret-mode Pallas paths) is bitwise-identical
+to scanning the per-tick fused ``step`` for every {gru, fnn} x {single
+A=1, multi} x {traffic, warehouse} combination; stacked-weight AIP steps
+equal the vmapped per-agent construction; the kernel-boundary codec
+round-trips; the native batched multi-agent GS matches the vmapped scalar
+GS exactly; ``noise_fn``/``step_det`` obey the protocol invariant;
+stateless F-IALS freezes (only) the AIP state; PPO's bulk-noise rollout
+reproduces the keyed path bit-for-bit."""
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import ials, influence, multi_ials
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pure-pytest fallback (hypcompat)
+    from hypcompat import given, settings, st
+
+from repro.core import engine, ials, influence, multi_ials
 from repro.envs.api import batch_env, env_rollout, horizon_noise
 from repro.envs.traffic import (TrafficConfig,
                                 make_batched_local_traffic_env,
@@ -21,6 +29,9 @@ from repro.envs.warehouse import (WarehouseConfig,
 
 AGENTS4 = jnp.array([[0, 0], [1, 3], [2, 2], [4, 1]])
 
+COMBOS = [(d, k, A) for d in ("traffic", "warehouse")
+          for k in ("gru", "fnn") for A in (1, 3)]
+
 
 def _bls(domain, **cfg_kw):
     if domain == "traffic":
@@ -28,13 +39,28 @@ def _bls(domain, **cfg_kw):
     return make_batched_local_warehouse_env(WarehouseConfig(**cfg_kw))
 
 
-def _engine(domain, kind, **kw):
-    bls = _bls(domain)
+def _aip(bls, kind, A, seed=0):
     acfg = influence.AIPConfig(kind=kind, d_in=bls.spec.dset_dim,
                                n_out=bls.spec.n_influence, hidden=8,
                                stack=2)
-    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
-    return bls, ials.make_batched_ials(bls, params, acfg, **kw)
+    if A == 1:
+        return acfg, influence.init_aip(acfg, jax.random.PRNGKey(seed))
+    return acfg, jax.vmap(lambda k: influence.init_aip(acfg, k))(
+        jax.random.split(jax.random.PRNGKey(seed), A))
+
+
+def _engine(domain, kind, n_agents=1, **kw):
+    bls = _bls(domain)
+    acfg, params = _aip(bls, kind, n_agents)
+    return bls, engine.make_unified_ials(bls, params, acfg,
+                                         n_agents=n_agents, **kw)
+
+
+def _acts_keys(env, B, T, n_agents, seed=1):
+    key = jax.random.PRNGKey(seed)
+    shape = (T, B, n_agents) if n_agents > 1 else (T, B)
+    acts = jax.random.randint(key, shape, 0, env.spec.n_actions)
+    return acts, jax.random.split(jax.random.PRNGKey(seed + 1), T)
 
 
 def _scan_step(benv):
@@ -59,96 +85,73 @@ def _trees_equal(a, b):
 # whole-horizon rollout == scan of the per-tick fused step (bitwise)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("domain,kind", [
-    ("traffic", "gru"), ("traffic", "fnn"),
-    ("warehouse", "gru"), ("warehouse", "fnn"),
-])
-def test_whole_horizon_matches_per_tick_engine(domain, kind):
-    _, env = _engine(domain, kind)
-    key = jax.random.PRNGKey(1)
-    B, T = 6, 17
-    s0 = env.reset(key, B)
-    acts = jax.random.randint(key, (T, B), 0, env.spec.n_actions)
-    keys = jax.random.split(jax.random.PRNGKey(2), T)
-    sw, rw = jax.jit(
-        lambda s, a, k: env_rollout(env, s, a, k))(s0, acts, keys)
-    ss, rs = _scan_step(env)(s0, acts, keys)
-    assert jnp.array_equal(rw, rs)
-    assert _trees_equal(sw, ss)
-
-
-@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
-def test_whole_horizon_matches_per_tick_multi(domain):
-    bls = _bls(domain)
-    A = 3
-    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
-                               n_out=bls.spec.n_influence, hidden=8)
-    params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
-        jax.random.split(jax.random.PRNGKey(3), A))
-    env = multi_ials.make_batched_multi_ials(bls, params, acfg, A)
-    key = jax.random.PRNGKey(4)
+@pytest.mark.parametrize("domain,kind,A", COMBOS)
+def test_whole_horizon_matches_per_tick_engine(domain, kind, A):
+    """The unified engine's env_rollout (native rollout override) ==
+    scanning the per-tick fused step, for every backbone x multiplicity
+    x domain combination."""
+    _, env = _engine(domain, kind, A)
     B, T = 4, 11
-    s0 = env.reset(key, B)
-    acts = jax.random.randint(key, (T, B, A), 0, env.spec.n_actions)
-    keys = jax.random.split(jax.random.PRNGKey(5), T)
+    s0 = env.reset(jax.random.PRNGKey(1), B)
+    acts, keys = _acts_keys(env, B, T, A)
     sw, rw = jax.jit(
         lambda s, a, k: env_rollout(env, s, a, k))(s0, acts, keys)
     ss, rs = _scan_step(env)(s0, acts, keys)
-    assert rw.shape == (T, B, A)
+    assert rw.shape == ((T, B, A) if A > 1 else (T, B))
     assert jnp.array_equal(rw, rs)
     assert _trees_equal(sw, ss)
 
 
-@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
-def test_kernel_glue_route_matches_scan(domain):
-    """use_horizon_kernel=True exercises the full ops.ials_rollout glue
-    (leaf flatten/encode, tick/dset closures, param plumbing) — off-TPU
-    that lands on the ref oracle, which must stay bitwise with the
-    scan."""
+@pytest.mark.parametrize("domain,kind,A", COMBOS)
+def test_kernel_glue_route_matches_scan(domain, kind, A):
+    """use_horizon_kernel=True exercises the full kernels.ops rollout
+    glue (agent-major lane fold, leaf flatten/encode, tick/dset
+    closures, stacked-weight plumbing) — off-TPU that lands on the
+    stacked oracle, which must stay bitwise with the scan. Covers all
+    four backbone x multiplicity combinations."""
     bls = _bls(domain)
-    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
-                               n_out=bls.spec.n_influence, hidden=8)
-    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
-    env_k = ials.make_batched_ials(bls, params, acfg,
-                                   use_horizon_kernel=True)
-    env_s = ials.make_batched_ials(bls, params, acfg,
-                                   use_horizon_kernel=False)
-    key = jax.random.PRNGKey(6)
-    B, T = 5, 9
-    s0 = env_k.reset(key, B)
-    acts = jax.random.randint(key, (T, B), 0, env_k.spec.n_actions)
-    keys = jax.random.split(key, T)
+    acfg, params = _aip(bls, kind, A)
+    env_k = engine.make_unified_ials(bls, params, acfg, n_agents=A,
+                                     use_horizon_kernel=True)
+    env_s = engine.make_unified_ials(bls, params, acfg, n_agents=A,
+                                     use_horizon_kernel=False)
+    B, T = 4, 9
+    s0 = env_k.reset(jax.random.PRNGKey(6), B)
+    acts, keys = _acts_keys(env_k, B, T, A, seed=6)
     sk, rk = jax.jit(env_k.rollout)(s0, acts, keys)
     ss, rs = jax.jit(env_s.rollout)(s0, acts, keys)
     assert jnp.array_equal(rk, rs)
     assert _trees_equal(sk, ss)
 
 
-@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
-def test_interpret_kernel_matches_scan(domain, monkeypatch):
-    """The actual aip_rollout Pallas kernel (interpret mode: real grid,
-    BlockSpecs, VMEM scratch) reproduces the scan engine bitwise."""
+@pytest.mark.parametrize("domain,kind", [
+    ("traffic", "gru"), ("traffic", "fnn"),
+    ("warehouse", "gru"), ("warehouse", "fnn"),
+])
+def test_interpret_kernel_matches_scan(domain, kind, monkeypatch):
+    """The actual Pallas rollout kernels (interpret mode: the real
+    (A·B-blocks, T) grid, BlockSpecs, per-agent weight indexing, VMEM
+    scratch) reproduce the scan engine bitwise — stacked weights
+    included (A=2)."""
     from repro.kernels import ops
 
-    orig = ops.ials_rollout
+    name = "ials_rollout_multi" if kind == "gru" else "fnn_rollout"
+    orig = getattr(ops, name)
 
     def forced(*args, **kw):
         kw["interpret"] = True
         return orig(*args, **kw)
 
-    monkeypatch.setattr(ops, "ials_rollout", forced)
+    monkeypatch.setattr(ops, name, forced)
+    A = 2
     bls = _bls(domain)
-    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
-                               n_out=bls.spec.n_influence, hidden=8)
-    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
-    env_k = ials.make_batched_ials(bls, params, acfg,
-                                   use_horizon_kernel=True)
-    env_s = ials.make_batched_ials(bls, params, acfg,
-                                   use_horizon_kernel=False)
+    acfg, params = _aip(bls, kind, A)
+    env_k = engine.make_unified_ials(bls, params, acfg, n_agents=A,
+                                     use_horizon_kernel=True)
+    env_s = engine.make_unified_ials(bls, params, acfg, n_agents=A,
+                                     use_horizon_kernel=False)
     s0 = env_k.reset(jax.random.PRNGKey(1), 4)
-    acts = jax.random.randint(jax.random.PRNGKey(1), (7, 4), 0,
-                              env_k.spec.n_actions)
-    keys = jax.random.split(jax.random.PRNGKey(2), 7)
+    acts, keys = _acts_keys(env_k, 4, 7, A)
     # both sides eager: the interpret-mode kernel cannot be jitted into
     # the same program as the scan, and XLA fusion moves float results
     # by 1 ulp between program shapes — eager-to-eager is exact
@@ -157,6 +160,98 @@ def test_interpret_kernel_matches_scan(domain, monkeypatch):
     assert jnp.array_equal(rk, rs)
     assert _trees_equal(sk.ls_state, ss.ls_state)
     assert jnp.array_equal(sk.aip_state, ss.aip_state)
+
+
+# ---------------------------------------------------------------------------
+# stacked-weight AIP steps == vmapped per-agent construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gru", "fnn"])
+def test_stacked_weights_match_vmapped_per_agent(kind):
+    """The stacked-weight multi-agent AIP tick (the formulation each
+    whole-horizon kernel lane block runs against its agent's weight
+    slice) equals vmapping the single-agent fused step over agents —
+    and equals whatever formulation ``influence.step_sample_multi``
+    (the engine's per-tick path) actually dispatches — weights, state,
+    and the drawn u bits alike."""
+    from repro.kernels import ref as kref
+
+    A, B, D, M = 3, 5, 7, 4
+    acfg = influence.AIPConfig(kind=kind, d_in=D, n_out=M, hidden=8,
+                               stack=2)
+    params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+        jax.random.split(jax.random.PRNGKey(0), A))
+    key = jax.random.PRNGKey(1)
+    d = jax.random.normal(key, (B, A, D))
+    state = jax.random.normal(
+        jax.random.PRNGKey(3),
+        (B, A) + influence.init_state(acfg).shape) * 0.4
+    bits = jax.random.bits(jax.random.PRNGKey(2), (B, A, M), jnp.uint32)
+
+    if kind == "gru":                       # the kernels' stacked math
+        st_s, lg_s, u_s = kref.aip_step_multi_ref(
+            d, state, params["gru"]["wx"], params["gru"]["wh"],
+            params["gru"]["b"], params["head"]["w"], params["head"]["b"],
+            bits)
+    else:                                   # fnn: the engine IS stacked
+        lg_s, st_s, u_s = influence.step_sample_multi(params, acfg,
+                                                      state, d, bits)
+
+    lg_v, st_v, u_v = jax.vmap(
+        lambda p, h, dd, bt: influence.step_sample(p, acfg, h, dd, bt),
+        in_axes=(0, 1, 1, 1), out_axes=(1, 1, 1))(params, state, d, bits)
+    assert jnp.allclose(lg_s, lg_v, atol=1e-6)
+    assert jnp.allclose(st_s, st_v, atol=1e-6)
+    assert jnp.array_equal(u_s, u_v)
+
+    # the engine's dispatch agrees with both formulations
+    lg_e, st_e, u_e = influence.step_sample_multi(params, acfg, state, d,
+                                                  bits)
+    assert jnp.allclose(lg_e, lg_v, atol=1e-6)
+    assert jnp.allclose(st_e, st_v, atol=1e-6)
+    assert jnp.array_equal(u_e, u_v)
+
+    lg2_s, _ = influence.step_multi(params, acfg, state, d)
+    lg2_v, _ = jax.vmap(lambda p, h, dd: influence.step(p, acfg, h, dd),
+                        in_axes=(0, 1, 1), out_axes=(1, 1))(params, state,
+                                                            d)
+    assert jnp.allclose(lg2_s, lg2_v, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernel-boundary codec round-trip (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 7), n=st.integers(1, 9))
+def test_kernel_codec_round_trip(seed, n):
+    """bool/int8 leaves encode to int32 and decode back bit-exactly, and
+    already-wide leaves pass through untouched — for any leaf mix."""
+    from repro.envs.api import KERNEL_ENC_DTYPES, kernel_codec
+
+    key = jax.random.PRNGKey(seed)
+    tree = {
+        "b": jax.random.bernoulli(key, 0.4, (n, 3)),
+        "i8": jax.random.randint(key, (n,), -7, 7).astype(jnp.int8),
+        "i32": jax.random.randint(key, (n, 2), 0, 100),
+        "f32": jax.random.normal(key, (n, 4)),
+        "u32": jax.random.bits(key, (n,), jnp.uint32),
+    }
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    dtypes = tuple(l.dtype for l in leaves)
+    enc, dec = kernel_codec(treedef, dtypes)
+    encoded = enc(leaves)
+    for e in encoded:
+        assert e.dtype not in KERNEL_ENC_DTYPES
+    for e, l in zip(encoded, leaves):
+        if l.dtype in KERNEL_ENC_DTYPES:
+            assert e.dtype == jnp.int32
+        else:
+            assert e.dtype == l.dtype
+    back = dec(encoded)
+    assert _trees_equal(back, tree)
+    assert all(b.dtype == l.dtype
+               for b, l in zip(jax.tree_util.tree_leaves(back), leaves))
 
 
 def test_kernel_lane_blocking():

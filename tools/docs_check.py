@@ -7,7 +7,10 @@ Fails when the documentation and the tree disagree:
   3. a ``make <target>`` quoted in the docs names a target the Makefile
      does not define (snippet drift);
   4. a ``python -m <module>`` entry point quoted in the docs does not
-     resolve to a module file under ``src/`` or the repo root.
+     resolve to a module file under ``src/`` or the repo root;
+  5. a ``path/to/file.py::symbol`` reference (the engine dispatch table's
+     cell format) names a file that does not exist or a symbol the file
+     does not define at top level.
 
 Pure stdlib, no imports of the package itself — the checker must keep
 working even when the package is broken.
@@ -96,11 +99,63 @@ def stale_module_refs() -> list[str]:
     return errors
 
 
+_SYMBOL_ROOTS = ("", "src", "src/repro")
+
+
+def _resolve_doc_path(rel: str):
+    for root in _SYMBOL_ROOTS:
+        p = REPO / root / rel
+        if p.is_file():
+            return p
+    return None
+
+
+def _top_level_names(path: Path) -> set[str]:
+    names = set()
+    for node in ast.parse(path.read_text(), filename=str(path)).body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name):
+                names.add(node.target.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add(alias.asname or alias.name.split(".")[0])
+    return names
+
+
+def stale_symbol_refs() -> list[str]:
+    """``file.py::symbol`` references (the ARCHITECTURE dispatch table's
+    cell format) must name a real file defining that symbol at top
+    level, so the table cannot quietly outlive a refactor."""
+    errors = []
+    for name in DOC_FILES:
+        path = REPO / name
+        if not path.is_file():
+            continue
+        snippets = _code_snippets(path.read_text())
+        for rel, sym in re.findall(r"([\w][\w/.-]*\.py)::(\w+)", snippets):
+            target = _resolve_doc_path(rel)
+            if target is None:
+                errors.append(f"{name} references `{rel}::{sym}` but no "
+                              f"such file exists")
+            elif sym not in _top_level_names(target):
+                errors.append(f"{name} references `{rel}::{sym}` but "
+                              f"{rel} defines no top-level `{sym}`")
+    return errors
+
+
 def run_checks() -> list[str]:
     errors = missing_docs()
     errors += missing_docstrings()
     errors += stale_make_refs()
     errors += stale_module_refs()
+    errors += stale_symbol_refs()
     return errors
 
 
