@@ -170,6 +170,42 @@ def run(quick: bool = False):
                     "note": f"us= {Tp}-tick scan of the (16,) env "
                             f"batch"}))
 
+    # AIP training throughput (train_aip / train_aip_batched): the
+    # offline fit is the other half of the paper's wall-clock story, and
+    # since PR 5 the jitted epoch loop is a module-level cached program
+    # (no per-call retrace) with donatable epoch buffers — timed here
+    # without donation so the same arrays can be re-fed every repeat
+    from repro.core import influence as infl
+    N, Tt, Dd_t, Mt, At = (8, 16, 12, 4, 2) if quick \
+        else (32, 64, 12, 4, 4)
+    ep_t = 2 if quick else 4
+    tcfg = infl.AIPConfig(kind="gru", d_in=Dd_t, n_out=Mt, hidden=32)
+    d_seq = jax.random.normal(jax.random.PRNGKey(21), (N, Tt, Dd_t))
+    u_seq = jax.random.bernoulli(jax.random.PRNGKey(22), 0.3,
+                                 (N, Tt, Mt)).astype(jnp.float32)
+    us_fit = time_fn(
+        lambda: infl.train_aip(tcfg, d_seq, u_seq,
+                               jax.random.PRNGKey(23), epochs=ep_t)[0],
+        warmup=1, iters=3 if quick else 6)
+    out.append(row("kernel/train_aip", us_fit,
+                   {"samples_per_s": round(N * Tt * ep_t
+                                           / (us_fit / 1e6)),
+                    "epochs": ep_t}))
+
+    d_b = jax.random.normal(jax.random.PRNGKey(24), (At, N, Tt, Dd_t))
+    u_b = jax.random.bernoulli(jax.random.PRNGKey(25), 0.3,
+                               (At, N, Tt, Mt)).astype(jnp.float32)
+    ks_b = jax.random.split(jax.random.PRNGKey(26), At)
+    us_fit = time_fn(
+        lambda: infl.train_aip_batched(tcfg, d_b, u_b, ks_b,
+                                       epochs=ep_t)[0],
+        warmup=1, iters=3 if quick else 6)
+    out.append(row("kernel/train_aip_batched", us_fit,
+                   {"agents": At,
+                    "samples_per_s": round(At * N * Tt * ep_t
+                                           / (us_fit / 1e6)),
+                    "epochs": ep_t}))
+
     # rmsnorm
     x = jax.random.normal(key, (4096, 512), jnp.bfloat16)
     g = jnp.ones((512,))

@@ -112,7 +112,7 @@ def _domain_setup(domain: str, quick: bool):
                                stack=stack)
     aips, _ = influence.train_aip_batched(
         acfg, data["d"], data["u"], jax.random.split(k2, A),
-        epochs=1 if quick else 4)
+        epochs=1 if quick else 4, donate=True)
     aip0 = jax.tree_util.tree_map(lambda l: l[0], aips)
     return gs, gs_multi, gs_multi_b, ls, bls, agents, aips, aip0, acfg
 

@@ -32,6 +32,7 @@ MODULES = [
     "roofline_report",
     "simulator_throughput",
     "multi_agent_throughput",
+    "train_throughput",
     "aip_accuracy",
     "dset_ablation",
     "memory_dependence",
@@ -41,7 +42,8 @@ MODULES = [
 # modules whose saved JSONs are flat {simulator: steps/s} rate tables —
 # the --check regression gate compares these against the committed files
 CHECK_MODULES = {"simulator_throughput": "sim_throughput_",
-                 "multi_agent_throughput": "multi_agent_throughput_"}
+                 "multi_agent_throughput": "multi_agent_throughput_",
+                 "train_throughput": "train_throughput_"}
 CHECK_TOLERANCE = 0.30
 
 
@@ -80,6 +82,10 @@ def main(argv=None):
     ap.add_argument("--check", action="store_true",
                     help="re-measure throughput benches, fail on a >30%% "
                          "steps/s regression vs results/bench baselines")
+    ap.add_argument("--out", default=None,
+                    help="write every module's emitted rows to this JSON "
+                         "file (CI uploads it as the bench-smoke "
+                         "artifact); never touches results/bench")
     args = ap.parse_args(argv)
 
     if args.check:
@@ -98,13 +104,14 @@ def main(argv=None):
 
     print("name,us_per_call,derived")
     failures = 0
+    collected = {}
     try:
         for name in mods:
             t0 = time.time()
             print(f"# --- {name} ---", flush=True)
             try:
                 mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-                mod.run(quick=args.quick)
+                collected[name] = mod.run(quick=args.quick)
                 print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
             except Exception:
                 failures += 1
@@ -115,6 +122,11 @@ def main(argv=None):
     finally:
         for path, old in baselines.items():   # gate is side-effect-free,
             path.write_text(json.dumps(old, indent=1))  # crash included
+        if args.out:
+            from pathlib import Path
+            Path(args.out).write_text(json.dumps(
+                {"quick": args.quick, "failures": failures,
+                 "rows": collected}, indent=1))
     if failures:
         sys.exit(1)
 

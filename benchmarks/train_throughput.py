@@ -1,0 +1,212 @@
+"""Train-throughput tier: end-to-end PPO samples/second.
+
+The paper's headline claim is about the *training process*, not just the
+simulator — so this tier times the two things the RL loop actually pays
+for, per domain x {ials, gs}:
+
+  train-<sim>   ``ppo.make_train_iteration``'s full iteration (rollout +
+                GAE + minibatch epochs, donated buffers threaded between
+                calls exactly as ``rl_train`` threads them), in
+                samples/s = n_envs * rollout_len / wall-clock
+  eval-<sim>    the cached greedy evaluator (``ppo.make_evaluator`` —
+                episodes-as-batch on the whole-horizon path), in
+                samples/s = n_episodes * ep_len / wall-clock
+
+``--ab`` runs the same-phase A/B instead (one process, so host phase
+cancels out — the PR-3 baseline protocol): per domain it times the
+*rollout* under three genuinely different programs on the single-agent
+IALS engine —
+
+  fused-actor-scan   the default: Gumbel action noise, env noise, and
+                     reset states all pre-drawn, deterministic scan body
+  keyed-scan         ``hoist_rollout_noise=False`` — the PR-4 keyed
+                     policy-in-the-loop scan (categorical + in-scan
+                     resets; env noise still bulk), preserved exactly
+  ops-policy-rollout the engine's ``policy_rollout`` route forced
+                     (``use_horizon_kernel=True``: on CPU the stacked
+                     oracle scan, on TPU the fused Pallas kernel)
+
+plus the full ``train_iteration`` for the fused vs keyed pair, and emits
+a ratios row. No JSON is saved in --ab or --quick mode (the committed
+``results/bench`` baselines stay full-``run`` floors).
+
+    PYTHONPATH=src python -m benchmarks.train_throughput [--quick] [--ab]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import build_sims, row, save_json, time_fn
+
+
+def _time_stateful(step, carry, *, iters: int, repeats: int = 3) -> float:
+    """-> microseconds per call for a state-threading ``step(carry) ->
+    carry`` (required because ``train_iteration`` donates its inputs —
+    re-calling it with the same arguments would read deleted buffers).
+    Min-of-chunks like ``time_fn``; the compile call is excluded."""
+    carry = step(carry)                      # warmup / compile
+    jax.block_until_ready(carry)
+    per = max(1, iters // repeats)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(per):
+            carry = step(carry)
+        jax.block_until_ready(carry)
+        best = min(best, (time.perf_counter() - t0) / per)
+    return best * 1e6
+
+
+def _ppo_cfg(spec, domain: str, n_envs: int, T: int, **kw):
+    from repro.rl import ppo
+    return ppo.PPOConfig(obs_dim=spec.obs_dim, n_actions=spec.n_actions,
+                         frame_stack=8 if domain == "warehouse" else 1,
+                         n_envs=n_envs, rollout_len=T, episode_len=T,
+                         **kw)
+
+
+def _train_step(env, cfg, key):
+    """-> (step(carry) -> carry, initial carry) for the donated
+    ``train_iteration``, threading (params, opt_state, rollout state,
+    key) exactly as the ``rl_train`` driver does."""
+    from repro.rl import ppo
+    params = ppo.init_policy(cfg, key)
+    opt, it_fn = ppo.make_train_iteration(env, cfg)
+    ost = opt.init(params)
+    rs = ppo.init_rollout_state(env, cfg, key)
+
+    def step(carry):
+        params, ost, rs, key = carry
+        key, k = jax.random.split(key)
+        params, ost, rs, _ = it_fn(params, ost, rs, k)
+        return params, ost, rs, key
+
+    return step, (params, ost, rs, key)
+
+
+def run(quick: bool = False):
+    from repro.rl import ppo
+
+    out = []
+    n_envs, T = (4, 32) if quick else (16, 128)
+    n_eps, ep_len = (4, 32) if quick else (16, 128)
+    iters = 3 if quick else 8
+    domains = ["traffic"] if quick else ["traffic", "warehouse"]
+    for domain in domains:
+        key = jax.random.PRNGKey(0)
+        sims, *_ = build_sims(domain, key,
+                              collect_episodes=8 if quick else 24,
+                              aip_epochs=2 if quick else 6)
+        rates = {}
+        for name in ("ials", "gs"):
+            env = sims[name]
+            cfg = _ppo_cfg(env.spec, domain, n_envs, T)
+            step, carry = _train_step(env, cfg, key)
+            us = _time_stateful(step, carry, iters=iters)
+            rates[f"train-{name}"] = n_envs * T / (us / 1e6)
+            out.append(row(f"train_throughput/{domain}/train-{name}",
+                           us / (n_envs * T),
+                           {"samples_per_s": round(rates[f'train-{name}'])}
+                           ))
+
+            params = ppo.init_policy(cfg, key)
+            ev = ppo.make_evaluator(env, cfg, n_episodes=n_eps,
+                                    ep_len=ep_len)
+            us = time_fn(ev, params, key, warmup=1, iters=iters)
+            rates[f"eval-{name}"] = n_eps * ep_len / (us / 1e6)
+            out.append(row(f"train_throughput/{domain}/eval-{name}",
+                           us / (n_eps * ep_len),
+                           {"samples_per_s": round(rates[f'eval-{name}'])}
+                           ))
+        out.append(row(f"train_throughput/{domain}/speedup", 0.0,
+                       {"train_ials_over_gs":
+                        round(rates["train-ials"] / rates["train-gs"], 2),
+                        "eval_ials_over_gs":
+                        round(rates["eval-ials"] / rates["eval-gs"], 2)}))
+        if not quick:
+            # quick-mode rates are not baselines: writing them would
+            # silently corrupt the committed bench-check floors
+            save_json(f"train_throughput_{domain}", rates)
+    return out
+
+
+def ab_run(quick: bool = False):
+    """Same-phase A/B of the acting-loop programs (see module docstring).
+    Every pair compared executes genuinely different computations."""
+    from repro.rl import ppo
+
+    out = []
+    n_envs, T = (4, 32) if quick else (16, 128)
+    # a rollout call is ~1ms at full size: short timing chunks are pure
+    # host noise (a 0.84x-vs-1.2x swing in early sessions), so the A/B
+    # rows use wider windows than the rate table
+    iters = 3 if quick else 30
+    domains = ["traffic"] if quick else ["traffic", "warehouse"]
+    for domain in domains:
+        key = jax.random.PRNGKey(0)
+        sims, _, (aip_params, _, acfg), _, _, bls = build_sims(
+            domain, key, collect_episodes=8 if quick else 24,
+            aip_epochs=2 if quick else 6)
+        from repro.core import engine
+        env = sims["ials"]
+        env_ops = engine.make_unified_ials(bls, aip_params, acfg,
+                                           use_horizon_kernel=True)
+        cfg = _ppo_cfg(env.spec, domain, n_envs, T)
+        cfg_keyed = dataclasses.replace(cfg, hoist_rollout_noise=False)
+        variants = {
+            "fused-actor-scan": (env, cfg),
+            "keyed-scan": (env, cfg_keyed),
+            "ops-policy-rollout": (env_ops, cfg),
+        }
+        params = ppo.init_policy(cfg, key)
+        rates = {}
+        for name, (e, c) in variants.items():
+            rs0 = ppo.init_rollout_state(e, c, key)
+            fn = jax.jit(lambda p, rs, k, _e=e, _c=c:
+                         ppo.rollout(_e, _c, p, rs, k)[1]["r"].sum())
+            us = time_fn(fn, params, rs0, key, warmup=1, iters=iters)
+            rates[name] = n_envs * T / (us / 1e6)
+            out.append(row(f"train_ab/{domain}/rollout/{name}",
+                           us / (n_envs * T),
+                           {"samples_per_s": round(rates[name])}))
+        for name, (e, c) in (("train-fused", (env, cfg)),
+                             ("train-keyed", (env, cfg_keyed))):
+            step, carry = _train_step(e, c, key)
+            us = _time_stateful(step, carry, iters=max(2, iters // 3))
+            rates[name] = n_envs * T / (us / 1e6)
+            out.append(row(f"train_ab/{domain}/{name}",
+                           us / (n_envs * T),
+                           {"samples_per_s": round(rates[name])}))
+        out.append(row(
+            f"train_ab/{domain}/ratios", 0.0,
+            {"fused_over_keyed":
+             round(rates["fused-actor-scan"] / rates["keyed-scan"], 3),
+             "ops_over_fused":
+             round(rates["ops-policy-rollout"]
+                   / rates["fused-actor-scan"], 3),
+             "train_fused_over_keyed":
+             round(rates["train-fused"] / rates["train-keyed"], 3)}))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ab", action="store_true",
+                    help="same-phase A/B of the acting-loop programs "
+                         "instead of the standard rate table")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.ab:
+        ab_run(quick=args.quick)
+    else:
+        run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

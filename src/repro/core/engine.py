@@ -21,9 +21,15 @@ transition over all B·A lanes. State leaves are (B, ...) when A=1 and
 (B, A, ...) otherwise; PPO consumes either shape as extra batch
 dimensions.
 
-Whole-horizon layer (``noise_fn`` / ``step_det`` / ``rollout`` — see
-``envs/api.py`` and docs/ARCHITECTURE.md): ``rollout`` advances all T
-ticks in one call. When the AIP is real (not a fixed marginal) and the
+Whole-horizon layer (``noise_fn`` / ``step_det`` / ``rollout`` /
+``policy_rollout`` — see ``envs/api.py`` and docs/ARCHITECTURE.md):
+``rollout`` advances all T ticks in one call, and ``policy_rollout``
+goes one level further — the PPO actor joins the loop (policy forward,
+Gumbel-argmax actions, episode resets traced in alongside the AIP+LS
+tick), so an entire acting horizon is one ``kernels.ops.policy_rollout``
+dispatch; the slot is set only when the kernel route is active (TPU, or
+``use_horizon_kernel=True``), since off-TPU PPO's own hoisted scan is
+the bit-identical default. When the AIP is real (not a fixed marginal) and the
 LS exposes ``rollout_tick``, that is ONE kernel-route dispatch —
 ``kernels.ops.ials_rollout_multi`` (GRU) or ``kernels.ops.fnn_rollout``
 (FNN) — with the AIP recurrent state and every LS leaf VMEM-resident
@@ -216,9 +222,9 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
             return x
         return _stream_fold(x.reshape((x.shape[0], B, A) + x.shape[2:]))
 
-    _kernel_fns = {}      # structural key -> stable (tick, dset) closures
-    #                       (stable identity keeps the kernel's jit cache
-    #                       warm across rollout calls)
+    _kernel_fns = {}      # structural key -> stable (tick, dset, obs)
+    #                       closures (stable identity keeps the kernel's
+    #                       jit cache warm across rollout calls)
 
     def _kernel_closures(ls_def, ls_dtypes, nz_def, nz_dtypes):
         key_ = (ls_def, ls_dtypes, nz_def, nz_dtypes)
@@ -234,7 +240,10 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
                                                 nz_dec(nzv))
                 return ls_enc(jax.tree_util.tree_leaves(st2)), r
 
-            _kernel_fns[key_] = (k_tick, k_dset)
+            def k_obs(vals):
+                return local_env.obs_fn(ls_dec(vals))
+
+            _kernel_fns[key_] = (k_tick, k_dset, k_obs)
         return _kernel_fns[key_]
 
     def _stacked(tree):
@@ -263,8 +272,8 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
                 tmap(lambda l: _noise_fold(l, B), noise["env"]))
             ls_dtypes = tuple(l.dtype for l in ls_leaves)
             nz_dtypes = tuple(l.dtype for l in nz_leaves)
-            k_tick, k_dset = _kernel_closures(ls_def, ls_dtypes, nz_def,
-                                              nz_dtypes)
+            k_tick, k_dset, _ = _kernel_closures(ls_def, ls_dtypes,
+                                                 nz_def, nz_dtypes)
             ls_enc, ls_dec = kernel_codec(ls_def, ls_dtypes)
             nz_enc, _ = kernel_codec(nz_def, nz_dtypes)
             acts = _stream_fold(actions)               # (T, A·B)
@@ -300,6 +309,101 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
 
         return jax.lax.scan(tick, state, (actions, noise), unroll=8)
 
+    # --- actor-in-the-loop path (the training-loop contract) ----------
+    # set on the env ONLY when the kernel route is active (TPU, or
+    # forced via use_horizon_kernel=True): PPO hands the whole acting
+    # loop over; off-TPU by default PPO's own hoisted bulk-noise scan is
+    # the bit-identical program, so there is nothing to dispatch to
+    kernel_route = (marg is None
+                    and local_env.rollout_tick is not None
+                    and local_env.noise_fn is not None
+                    and local_env.obs_fn is not None
+                    and (use_horizon_kernel if use_horizon_kernel
+                         is not None
+                         else jax.default_backend() == "tpu"))
+
+    def policy_rollout(state: IALSState, frames, t_in_ep, pol_params,
+                       gumbel, noise, reset_states, *, episode_len: int,
+                       fast_gates: bool):
+        """``BatchedEnv.policy_rollout`` (see envs/api.py): T PPO acting
+        ticks — policy forward, Gumbel-argmax actions, AIP sample, LS
+        tick, reward, periodic resets — as ONE ``kernels.ops`` dispatch
+        (the Pallas kernel on TPU, the identical-math oracle scan
+        elsewhere). All randomness arrives pre-drawn: ``gumbel``
+        (T, B, [A,] n_actions), ``noise`` = ``horizon_noise`` of this
+        engine's ``noise_fn``, ``reset_states`` = T-stacked ``reset``
+        results. The episode-reset schedule is closed-form from
+        ``t_in_ep`` (invariant: 0 <= t_in_ep < episode_len, which PPO's
+        reset logic maintains); resets restore the streamed LS leaves
+        and re-zero the AIP state (its init value)."""
+        from repro.kernels import ops  # deferred: keeps kernels optional
+        B = _batch(state)
+        T = gumbel.shape[0]
+        ls_leaves, ls_def = jax.tree_util.tree_flatten(
+            tmap(_lane_fold, state.ls_state))
+        nz_leaves, nz_def = jax.tree_util.tree_flatten(
+            tmap(lambda l: _noise_fold(l, B), noise["env"]))
+        ls_dtypes = tuple(l.dtype for l in ls_leaves)
+        nz_dtypes = tuple(l.dtype for l in nz_leaves)
+        k_tick, k_dset, k_obs = _kernel_closures(ls_def, ls_dtypes,
+                                                 nz_def, nz_dtypes)
+        ls_enc, ls_dec = kernel_codec(ls_def, ls_dtypes)
+        nz_enc, _ = kernel_codec(nz_def, nz_dtypes)
+        rls_leaves, _ = jax.tree_util.tree_flatten(
+            tmap(_stream_fold, reset_states.ls_state))
+
+        # the deterministic reset schedule: tick i is done iff the
+        # episode counter hits episode_len there — exactly the scan
+        # path's t >= episode_len given the 0 <= t_in_ep invariant
+        ticks = (t_in_ep[None, :] + 1
+                 + jnp.arange(T, dtype=jnp.int32)[:, None])
+        done_env = (ticks % episode_len) == 0            # (T, B)
+        t_out = (t_in_ep + T) % episode_len
+        done_lanes = done_env.astype(jnp.int32)
+        if multi:                       # lane a*B + b <-> env b
+            done_lanes = jnp.tile(done_lanes, (1, A))
+
+        frames_l = _lane_fold(frames)                    # (L, k, d)
+        stack, d_obs = frames_l.shape[-2], frames_l.shape[-1]
+        p = _stacked(aip_params)
+        if aip_cfg.kind == "gru":
+            aw = (p["gru"]["wx"], p["gru"]["wh"], p["gru"]["b"],
+                  p["head"]["w"], p["head"]["b"])
+            s0 = _lane_fold(state.aip_state)
+        else:
+            aw = (p["l1"]["w"], p["l1"]["b"], p["l2"]["w"],
+                  p["l2"]["b"], p["head"]["w"], p["head"]["b"])
+            buf = _lane_fold(state.aip_state)
+            s0 = buf.reshape(buf.shape[0], -1)
+        pw = (pol_params["l1"]["w"], pol_params["l1"]["b"],
+              pol_params["l2"]["w"], pol_params["l2"]["b"],
+              pol_params["pi"]["w"], pol_params["pi"]["b"],
+              pol_params["v"]["w"], pol_params["v"]["b"])
+        fin_ls, sT, fT, x, a, logits, v, r = ops.policy_rollout(
+            ls_enc(ls_leaves), s0,
+            frames_l.reshape(frames_l.shape[0], -1), aw, pw,
+            _stream_fold(gumbel), _stream_fold(noise["bits"]),
+            done_lanes, nz_enc(nz_leaves), ls_enc(rls_leaves),
+            kind=aip_cfg.kind, n_agents=A, fast_gates=fast_gates,
+            tick_fn=k_tick, dset_fn=k_dset, obs_fn=k_obs)
+        ls_T = tmap(lambda l: _lane_unfold(l, B), ls_dec(fin_ls))
+        if aip_cfg.kind == "gru":
+            aip_T = _lane_unfold(sT, B)
+        else:
+            aip_T = _lane_unfold(
+                sT.reshape(-1, aip_cfg.stack, aip_cfg.d_in), B)
+        frames_T = _lane_unfold(fT.reshape(-1, stack, d_obs), B)
+        r_u = _stream_unfold(r, B)
+        ash_n = 1 if multi else 0
+        done_b = jnp.broadcast_to(
+            done_env.reshape(done_env.shape + (1,) * ash_n),
+            r_u.shape).astype(jnp.float32)
+        out = {"x": _stream_unfold(x, B), "a": _stream_unfold(a, B),
+               "logits": _stream_unfold(logits, B),
+               "v": _stream_unfold(v, B), "r": r_u, "done": done_b}
+        return (IALSState(ls_state=ls_T, aip_state=aip_T), frames_T,
+                t_out, out)
+
     def observe(state: IALSState):
         B = _batch(state)
         obs = local_env.observe(_flat(state.ls_state, B))
@@ -307,7 +411,9 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
 
     return BatchedEnv(spec=spec, reset=reset, step=step, observe=observe,
                       rollout=rollout, noise_fn=noise_fn,
-                      step_det=step_det)
+                      step_det=step_det,
+                      policy_rollout=(policy_rollout if kernel_route
+                                      else None))
 
 
 def make_batched_ials(local_env: BatchedLocalEnv, aip_params,

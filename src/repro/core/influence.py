@@ -20,6 +20,8 @@ paper-scale implementation.
 """
 from __future__ import annotations
 
+import functools
+
 from dataclasses import dataclass
 from typing import Any, Dict, Tuple
 
@@ -228,19 +230,64 @@ def _train_core(cfg: AIPConfig, dsets, us, key, *, epochs: int,
     return params, losses
 
 
+# The jitted fit entry points live at module level with the config
+# threaded through static_argnames, so repeated fits at the same
+# shapes/config reuse one compiled program — the historical closure-jit
+# re-traced on EVERY train_aip call.
+#
+# Donation audit (the ``donate=True`` flag): XLA input-output aliasing
+# is structurally UNUSABLE at this boundary — the only outputs are the
+# fitted params and the (epochs,) losses, and neither matches the
+# dataset buffers, so ``jit(donate_argnums=...)`` would be a warning and
+# a no-op on every backend. What the callers actually want from
+# "donating the epoch buffers" is ownership: the fit consumes the
+# dataset, so its memory is released the moment training returns
+# instead of lingering until the caller's references die. ``donate=True``
+# implements exactly that — the buffers are deleted after the fit (the
+# caller's arrays become invalid), the fitted params are identical
+# either way.
+
+_FIT_STATICS = ("cfg", "epochs", "batch_size", "lr", "window")
+
+
+@functools.partial(jax.jit, static_argnames=_FIT_STATICS)
+def _fit(dsets, us, key, *, cfg, epochs, batch_size, lr, window):
+    return _train_core(cfg, dsets, us, key, epochs=epochs,
+                       batch_size=batch_size, lr=lr, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=_FIT_STATICS)
+def _fit_batched(dsets, us, keys, *, cfg, epochs, batch_size, lr,
+                 window):
+    return jax.vmap(lambda d, u, k: _train_core(
+        cfg, d, u, k, epochs=epochs, batch_size=batch_size, lr=lr,
+        window=window))(dsets, us, keys)
+
+
+def _consume(*bufs):
+    for b in bufs:
+        if hasattr(b, "delete"):
+            b.delete()
+
+
 def train_aip(cfg: AIPConfig, dsets, us, key, *, epochs: int = 10,
-              batch_size: int = 32, lr: float = 3e-3,
-              window: int = 0) -> Tuple[Params, Dict]:
+              batch_size: int = 32, lr: float = 3e-3, window: int = 0,
+              donate: bool = False) -> Tuple[Params, Dict]:
     """Fit the AIP on (N, T, d_in)/(N, T, M) sequences from Algorithm 1.
 
     ``window`` > 0 truncates each sampled sequence to that many steps
-    (Theorem 1: match it to the agent's memory k).
+    (Theorem 1: match it to the agent's memory k). ``donate=True``
+    donates the (dsets, us) epoch buffers to the fit: their memory is
+    released as soon as training returns and the caller's arrays become
+    invalid — pass it when the dataset is dead after the fit (the
+    production drivers do; diagnostics that re-read the data keep the
+    default). Fitted params are identical either way.
     """
-    fit = jax.jit(lambda d, u, k: _train_core(
-        cfg, d, u, k, epochs=epochs, batch_size=batch_size, lr=lr,
-        window=window))
-    params, losses = fit(dsets, us, key)
+    params, losses = _fit(dsets, us, key, cfg=cfg, epochs=epochs,
+                          batch_size=batch_size, lr=lr, window=window)
     history = [float(l) for l in losses]
+    if donate:
+        _consume(dsets, us)
     metrics = {"loss_history": history,
                "final_loss": history[-1] if history else float("nan")}
     return params, metrics
@@ -248,18 +295,21 @@ def train_aip(cfg: AIPConfig, dsets, us, key, *, epochs: int = 10,
 
 def train_aip_batched(cfg: AIPConfig, dsets, us, keys, *, epochs: int = 10,
                       batch_size: int = 32, lr: float = 3e-3,
-                      window: int = 0) -> Tuple[Params, Dict]:
+                      window: int = 0,
+                      donate: bool = False) -> Tuple[Params, Dict]:
     """Fit A independent AIPs in one batched pass — ``vmap`` of the training
     loop over a leading agent axis (the Distributed-IALS construction).
 
     ``dsets``: (A, N, T, d_in), ``us``: (A, N, T, M), ``keys``: (A,) PRNG
     keys. Returns params with (A, ...) stacked leaves + per-agent losses.
+    ``donate`` as in ``train_aip``.
     """
-    fit = jax.jit(jax.vmap(lambda d, u, k: _train_core(
-        cfg, d, u, k, epochs=epochs, batch_size=batch_size, lr=lr,
-        window=window)))
-    params, losses = fit(dsets, us, keys)
+    params, losses = _fit_batched(dsets, us, keys, cfg=cfg, epochs=epochs,
+                                  batch_size=batch_size, lr=lr,
+                                  window=window)
     final = losses[:, -1] if losses.shape[-1] else losses.sum(-1)
     metrics = {"final_loss_per_agent": [float(l) for l in final],
                "final_loss": float(final.mean())}
+    if donate:
+        _consume(dsets, us)
     return params, metrics

@@ -37,6 +37,21 @@ shared across agents exactly as ``step`` shares them. Every path is
 bitwise-equal to scanning ``step``; the overrides only change *where* the
 work happens.
 
+Actor-in-the-loop layer (the training-loop contract, see
+docs/ARCHITECTURE.md): ``env_rollout`` needs the actions up front, which a
+PPO rollout cannot provide (actions depend on observations mid-horizon).
+``BatchedEnv.policy_rollout`` closes that gap: the env advances T ticks
+with the *policy in the loop* — frame-stacked observation buffer, policy
+forward pass, Gumbel-argmax action sampling (bitwise-equal to
+``jax.random.categorical`` given the same pre-drawn Gumbel noise), the
+env tick, and the periodic episode reset all inside one whole-horizon
+program (ONE Pallas dispatch on TPU). All randomness is *passed in*,
+pre-drawn: per-tick Gumbel noise for action sampling, the horizon's env
+noise (``horizon_noise``), and the per-tick reset states; the callee is a
+pure function. Engines set the slot only when their kernel route is
+active (TPU, or forced); off-TPU the PPO-side bulk-noise scan is the
+default and produces bit-identical batches.
+
 ``kernel_codec`` is the one place the kernel-boundary dtype rules live:
 Pallas VMEM scratch cannot hold bool/int8 leaves, so engines round-trip
 them through int32 — domain code never sees encoded leaves.
@@ -105,6 +120,16 @@ class BatchedEnv(NamedTuple):
     step_det: Any = None  # optional (state, actions, noise) -> (state, obs,
     #                       r, info); step(s,a,k) == step_det(s,a,
     #                       noise_fn(k,B)) bitwise
+    policy_rollout: Any = None  # optional whole-horizon actor-in-the-loop
+    #   rollout: (state, frames (B, [A,] k, obs_dim), t_in_ep (B,) int32,
+    #   policy_params, gumbel (T, B, [A,] n_actions), noise (the pytree
+    #   ``horizon_noise(noise_fn, keys, B)`` returns), reset_states
+    #   (T-stacked env states), *, episode_len, fast_gates) ->
+    #   (state, frames, t_in_ep, out) where out carries the PPO batch
+    #   streams {"x", "a", "logits", "v", "r", "done"}. Invariant:
+    #   0 <= t_in_ep < episode_len on entry (PPO maintains it). Engines
+    #   set this ONLY when the fused kernel route is active — absent, the
+    #   caller's own bulk-noise scan is the (bit-identical) default.
 
 
 class BatchedLocalEnv(NamedTuple):
@@ -124,6 +149,12 @@ class BatchedLocalEnv(NamedTuple):
     #                           leaves — traceable inside a Pallas kernel
     #                           body, which is what the whole-horizon fused
     #                           engine inlines per grid step
+    obs_fn: Any = None  # optional kernel-safe observe: state -> obs
+    #                     (B, obs_dim) f32, bitwise-equal to ``observe``
+    #                     but written constant-free (no captured array
+    #                     tables, no dynamic scatters) so the
+    #                     actor-in-the-loop rollout kernel can trace it
+    #                     per grid step to refill the policy frame stack
 
 
 def _batch_size(state) -> int:

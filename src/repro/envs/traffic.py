@@ -503,4 +503,8 @@ def make_batched_local_traffic_env(
     return BatchedLocalEnv(spec=spec, reset=reset, step=step,
                            observe=observe, dset_fn=dset_fn,
                            noise_fn=noise_fn, step_det=step_det,
-                           rollout_tick=rollout_tick)
+                           rollout_tick=rollout_tick,
+                           # reshape + astype + concat only: already
+                           # kernel-safe, so the policy-rollout kernel
+                           # traces the real observe
+                           obs_fn=observe)

@@ -533,7 +533,19 @@ def make_batched_local_warehouse_env(
         return jnp.concatenate([(state.items > 0).astype(jnp.float32),
                                 at.astype(jnp.float32)], axis=-1)
 
+    def obs_fn(state: LocalWarehouseState):
+        # ``observe`` without the dynamic one-hot scatter: the position
+        # bitmap is rebuilt by comparing a 2D iota against the robot
+        # coordinates (value-identical to the ``.at[].set`` one-hot) —
+        # traced into the policy-rollout kernel per grid step
+        B = state.pos.shape[0]
+        idx = jax.lax.broadcasted_iota(jnp.int32, (B, S * S), 1)
+        bitmap = ((idx // S == state.pos[:, 0:1])
+                  & (idx % S == state.pos[:, 1:2])).astype(jnp.float32)
+        return jnp.concatenate(
+            [bitmap, (state.items > 0).astype(jnp.float32)], axis=-1)
+
     return BatchedLocalEnv(spec=spec, reset=reset, step=step,
                            observe=observe, dset_fn=dset_fn,
                            noise_fn=noise_fn, step_det=step_det,
-                           rollout_tick=rollout_tick)
+                           rollout_tick=rollout_tick, obs_fn=obs_fn)

@@ -36,6 +36,16 @@ cell traced into it:
     shift + two relu GEMMs + head (``_fnn_cell``), recurrent state = the
     (lanes, stack·d_in) flattened d-set buffer.
 
+``policy_rollout`` goes one level further still: the PPO *actor* joins
+the loop. Its kernel body (``_policy_rollout_kernel``) traces the policy
+network (``_policy_cell`` — the exact ``rl/ppo.py::policy_forward``
+math, frame stack in VMEM scratch like ``fnn_rollout``'s d-set buffer),
+Gumbel-argmax action sampling on pre-drawn noise (bitwise-equal to
+``jax.random.categorical``'s own Gumbel-max derivation), either backbone
+cell, the LS transition, the observation function, and the periodic
+episode-reset merge into one grid — an entire PPO rollout (act + AIP +
+LS + reward) is ONE dispatch on TPU.
+
 Randomness is *passed in* as uint32 bits (one `jax.random.bits` call per
 tick, generated in bulk by the rollout engine) so the kernels themselves
 are pure functions — the same bits give the same u_t on every backend,
@@ -99,6 +109,30 @@ def _fnn_cell(w, buf, d, bits):
     probs = fast_sigmoid(logits)
     u = (uniform_from_bits(bits) < probs).astype(jnp.float32)
     return buf2, logits, u
+
+
+def _policy_cell(w, x, *, fast_gates: bool):
+    """The PPO actor-critic forward on VMEM-resident values — the exact
+    math of ``rl/ppo.py::policy_forward`` (dense = x @ w + b, hidden tanh
+    layers through the shared gates; exact ``jnp.tanh`` when the policy
+    was configured that way).
+
+    w = (w1 (S, Hp), b1, w2 (Hp, Hp), b2, piw (Hp, n_act), pib,
+    vw (Hp, 1), vb) values; x: (B, S) f32 frame-stacked obs
+    -> (logits (B, n_act) f32, value (B,) f32).
+    """
+    w1, b1, w2, b2, piw, pib, vw, vb = (v.astype(jnp.float32) for v in w)
+    act = fast_tanh if fast_gates else jnp.tanh
+    h = act(jax.lax.dot_general(x, w1, (((1,), (0,)), ((), ()))) + b1)
+    h = act(jax.lax.dot_general(h, w2, (((1,), (0,)), ((), ()))) + b2)
+    # both heads as ONE (Hp, n_act+1) GEMM: an (Hp, 1) matvec on its own
+    # is a fusion-order wildcard (1-ulp drift between program shapes) AND
+    # a dispatch-bound micro-GEMM; fusing pins the reduction order shared
+    # with the oracle and feeds the MXU one op instead of two
+    hw = jnp.concatenate([piw, vw], axis=1)
+    hb = jnp.concatenate([pib, vb], axis=0)
+    out = jax.lax.dot_general(h, hw, (((1,), (0,)), ((), ()))) + hb
+    return out[:, :-1], out[:, -1]
 
 
 def _aip_step_kernel(d_ref, h_ref, wx_ref, wh_ref, b_ref, hw_ref, hb_ref,
@@ -356,4 +390,232 @@ def aip_rollout(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
         tuple(ls), h0, wx[None], wh[None], b[None], hw[None], hb[None],
         actions, bits, tuple(noise), n_agents=1, tick_fn=tick_fn,
         dset_fn=dset_fn, block_b=block_b, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Actor-in-the-loop rollout: the policy traced into the same grid
+# ---------------------------------------------------------------------------
+
+def _policy_rollout_kernel(*refs, n_ls: int, n_noise: int, n_w: int,
+                           T: int, cell_fn, pol_fn, tick_fn, dset_fn,
+                           obs_fn):
+    """Grid (A·B-blocks, T): one PPO acting tick per grid step.
+
+    Ref layout (positional): LS leaves | AIP state s0 | policy frame
+    stack f0 | n_w stacked AIP weights (per-agent block axis) | 8 shared
+    policy weights | gumbel, bits, done streams | noise leaves | reset
+    LS leaves || final LS leaves, sT, framesT, x, a, logits, v, rewards
+    || scratch: AIP state, frames, LS leaves. Per tick: policy forward
+    on the VMEM frame stack -> Gumbel-argmax action -> AIP cell +
+    Bernoulli draw -> LS transition -> observation refills the frame
+    stack -> the streamed ``done`` schedule merges in the streamed reset
+    state (AIP state back to zeros, frames re-seeded from the reset
+    observation). Only the PPO batch streams and final states leave
+    VMEM."""
+    i = n_ls
+    ls0 = refs[:n_ls]
+    s0_ref, f0_ref = refs[i], refs[i + 1]
+    i += 2
+    w_refs = refs[i:i + n_w]
+    i += n_w
+    pw_refs = refs[i:i + 8]
+    i += 8
+    gum_ref, bits_ref, done_ref = refs[i], refs[i + 1], refs[i + 2]
+    i += 3
+    noise_refs = refs[i:i + n_noise]
+    i += n_noise
+    reset_refs = refs[i:i + n_ls]
+    i += n_ls
+    ls_out = refs[i:i + n_ls]
+    i += n_ls
+    sT_ref, fT_ref = refs[i], refs[i + 1]
+    i += 2
+    x_ref, a_ref, lg_ref, v_ref, rew_ref = refs[i:i + 5]
+    i += 5
+    s_scr, f_scr = refs[i], refs[i + 1]
+    ls_scr = refs[i + 2:i + 2 + n_ls]
+
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_scr[...] = s0_ref[...].astype(jnp.float32)
+        f_scr[...] = f0_ref[...].astype(jnp.float32)
+        for dst, src in zip(ls_scr, ls0):
+            dst[...] = src[...]
+
+    x = f_scr[...]                                     # (Bblk, S)
+    logits, value = pol_fn(tuple(r[...] for r in pw_refs), x)
+    a = jnp.argmax(logits + gum_ref[0], axis=-1).astype(jnp.int32)
+
+    ls_vals = tuple(s[...] for s in ls_scr)
+    d = dset_fn(ls_vals, a).astype(jnp.float32)        # (Bblk, Dd)
+    w = tuple(r[0] for r in w_refs)                    # this block's agent
+    s2, _, u = cell_fn(w, s_scr[...], d, bits_ref[0])
+    new_ls, rew = tick_fn(ls_vals, a, u,
+                          tuple(nr[0] for nr in noise_refs))
+    obs = obs_fn(new_ls).astype(jnp.float32)           # (Bblk, d_obs)
+    d_obs = obs.shape[-1]
+    frames2 = jnp.concatenate([x[:, d_obs:], obs], axis=1)
+
+    dn = done_ref[0] != 0                              # (Bblk,)
+    ls_m = tuple(
+        jnp.where(dn.reshape((-1,) + (1,) * (n.ndim - 1)), r[0], n)
+        for n, r in zip(new_ls, reset_refs))
+    s_m = jnp.where(dn[:, None], jnp.zeros_like(s2), s2)
+    obs0 = obs_fn(ls_m).astype(jnp.float32)
+    frames_reset = jnp.concatenate(
+        [jnp.zeros_like(x[:, d_obs:]), obs0], axis=1)
+    f_m = jnp.where(dn[:, None], frames_reset, frames2)
+
+    s_scr[...] = s_m
+    f_scr[...] = f_m
+    for dst, val in zip(ls_scr, ls_m):
+        dst[...] = val.astype(dst.dtype)
+    x_ref[0] = x.astype(x_ref.dtype)
+    a_ref[0] = a
+    lg_ref[0] = logits.astype(lg_ref.dtype)
+    v_ref[0] = value.astype(v_ref.dtype)
+    rew_ref[0] = rew.astype(rew_ref.dtype)
+
+    @pl.when(t == T - 1)
+    def _finish():
+        sT_ref[...] = s_scr[...].astype(sT_ref.dtype)
+        fT_ref[...] = f_scr[...].astype(fT_ref.dtype)
+        for dst, src in zip(ls_out, ls_scr):
+            dst[...] = src[...]
+
+
+def _launch_policy_rollout(cell_fn, pol_fn, ls, s0, frames0, weights,
+                           pol_w, gumbel, bits, done, noise, reset_ls, *,
+                           n_agents: int, tick_fn, dset_fn, obs_fn,
+                           block_b: int | None, interpret: bool):
+    """``pallas_call`` builder for the actor-in-the-loop rollout.
+
+    Layout as in ``_launch_rollout`` plus: ``frames0`` (L, stack·obs_dim)
+    f32 policy frame stack; ``pol_w`` tuple of 8 SHARED policy weights
+    (full blocks — parameter-shared PPO has no agent axis); ``gumbel``
+    (T, L, n_actions) f32; ``done`` (T, L) int32 reset schedule;
+    ``reset_ls`` tuple of (T, L, ...) streamed reset-state leaves (same
+    dtypes as ``ls``). -> (final ls leaves, s_T, frames_T, x (T, L, S),
+    a (T, L) int32, logits (T, L, n_actions), v (T, L), r (T, L))."""
+    L = s0.shape[0]
+    A = n_agents
+    if L % A:
+        raise ValueError(f"lane count {L} not divisible by n_agents={A}")
+    B = L // A
+    T = gumbel.shape[0]
+    if block_b is None:
+        block_b = B
+    if B % block_b:
+        raise ValueError(f"block_b={block_b} must divide per-agent "
+                         f"batch {B}")
+    nB = B // block_b
+    S = frames0.shape[1]
+    n_act = gumbel.shape[-1]
+
+    def w_spec(leaf):          # (A, ...) stacked weight -> this agent's
+        s = leaf.shape[1:]
+        return pl.BlockSpec((1,) + s,
+                            lambda bi, t, _n=len(s): (bi // nB,)
+                            + (0,) * _n)
+
+    def full_spec(leaf):       # shared weight -> whole array, invariant
+        return pl.BlockSpec(leaf.shape,
+                            lambda bi, t, _n=leaf.ndim: (0,) * _n)
+
+    def state_spec(leaf):      # (L, ...) leaf -> per-block, t-invariant
+        s = leaf.shape[1:]
+        return pl.BlockSpec((block_b,) + s,
+                            lambda bi, t, _n=len(s): (bi,) + (0,) * _n)
+
+    def stream_spec(leaf):     # (T, L, ...) leaf -> one tick per grid step
+        s = leaf.shape[2:]
+        return pl.BlockSpec((1, block_b) + s,
+                            lambda bi, t, _n=len(s): (t, bi) + (0,) * _n)
+
+    stream_outs = [
+        jax.ShapeDtypeStruct((T, L, S), jnp.float32),       # x
+        jax.ShapeDtypeStruct((T, L), jnp.int32),            # a
+        jax.ShapeDtypeStruct((T, L, n_act), jnp.float32),   # logits
+        jax.ShapeDtypeStruct((T, L), jnp.float32),          # v
+        jax.ShapeDtypeStruct((T, L), jnp.float32),          # rewards
+    ]
+    kernel = functools.partial(_policy_rollout_kernel, n_ls=len(ls),
+                               n_noise=len(noise), n_w=len(weights), T=T,
+                               cell_fn=cell_fn, pol_fn=pol_fn,
+                               tick_fn=tick_fn, dset_fn=dset_fn,
+                               obs_fn=obs_fn)
+    out = pl.pallas_call(
+        kernel,
+        grid=(A * nB, T),
+        in_specs=[state_spec(l) for l in ls]
+        + [state_spec(s0), state_spec(frames0)]
+        + [w_spec(w) for w in weights]
+        + [full_spec(w) for w in pol_w]
+        + [stream_spec(gumbel), stream_spec(bits), stream_spec(done)]
+        + [stream_spec(n) for n in noise]
+        + [stream_spec(r) for r in reset_ls],
+        out_specs=[state_spec(l) for l in ls]
+        + [state_spec(s0), state_spec(frames0)]
+        + [stream_spec(o) for o in stream_outs],
+        out_shape=[jax.ShapeDtypeStruct(l.shape, l.dtype) for l in ls]
+        + [jax.ShapeDtypeStruct(s0.shape, s0.dtype),
+           jax.ShapeDtypeStruct(frames0.shape, frames0.dtype)]
+        + stream_outs,
+        scratch_shapes=[pltpu.VMEM((block_b, s0.shape[1]), jnp.float32),
+                        pltpu.VMEM((block_b, S), jnp.float32)]
+        + [pltpu.VMEM((block_b,) + l.shape[1:], l.dtype) for l in ls],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*ls, s0, frames0, *weights, *pol_w, gumbel, bits, done, *noise,
+      *reset_ls)
+    nl = len(ls)
+    return (tuple(out[:nl]), out[nl], out[nl + 1], out[nl + 2],
+            out[nl + 3], out[nl + 4], out[nl + 5], out[nl + 6])
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "n_agents",
+                                             "fast_gates", "tick_fn",
+                                             "dset_fn", "obs_fn",
+                                             "block_b", "interpret"))
+def policy_rollout(ls, s0, frames0, aip_w, pol_w, gumbel, bits, done,
+                   noise, reset_ls, *, kind: str, n_agents: int,
+                   fast_gates: bool, tick_fn, dset_fn, obs_fn,
+                   block_b: int | None = None,
+                   interpret: bool | None = None):
+    """Whole-horizon actor-in-the-loop IALS rollout — an ENTIRE PPO
+    acting horizon (policy forward + Gumbel-argmax action + AIP sample +
+    LS transition + reward + periodic episode resets) in ONE kernel
+    dispatch, with the policy frame stack, AIP recurrent state, and every
+    LS leaf VMEM-resident across all T grid steps.
+
+    ``kind`` picks the AIP backbone cell ("gru": ``aip_w`` = stacked
+    (wx, wh, b, hw, hb); "fnn": (w1, b1, w2, b2, hw, hb)); ``pol_w`` is
+    the shared policy tuple (w1, b1, w2, b2, piw, pib, vw, vb) evaluated
+    with the rational gates when ``fast_gates`` (exact tanh otherwise);
+    randomness is all pre-drawn (``gumbel`` for actions, ``bits`` for
+    the AIP Bernoulli draw, ``noise`` for the LS, ``reset_ls`` +
+    ``done`` for the episode-reset schedule), so the kernel is a pure
+    function. ``obs_fn(ls_leaves) -> (lanes, obs_dim)`` must be pure,
+    constant-free jnp (the ``BatchedLocalEnv.obs_fn`` contract) — it is
+    traced into the body to refill the frame stack each tick.
+
+    Layout and the remaining arguments as in ``aip_rollout_multi`` /
+    ``_launch_policy_rollout``; bitwise-equal to
+    ``ref.policy_rollout_ref`` given the same streams.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if kind == "gru":
+        cell = functools.partial(_gru_cell, H=aip_w[1].shape[1])
+    else:
+        cell = _fnn_cell
+    pol = functools.partial(_policy_cell, fast_gates=fast_gates)
+    return _launch_policy_rollout(
+        cell, pol, tuple(ls), s0, frames0, tuple(aip_w), tuple(pol_w),
+        gumbel, bits, done, tuple(noise), tuple(reset_ls),
+        n_agents=n_agents, tick_fn=tick_fn, dset_fn=dset_fn,
+        obs_fn=obs_fn, block_b=block_b, interpret=interpret)
 

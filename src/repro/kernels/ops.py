@@ -170,6 +170,47 @@ def ials_rollout(ls, h0, wx, wh, b, hw, hb, actions, bits, noise, *,
                             interpret=interpret)
 
 
+def policy_rollout(ls, s0, frames0, aip_w, pol_w, gumbel, bits, done,
+                   noise, reset_ls, *, kind, n_agents, fast_gates,
+                   tick_fn, dset_fn, obs_fn, block_b=None,
+                   interpret=None):
+    """Whole-horizon actor-in-the-loop IALS rollout: an entire PPO acting
+    horizon — policy forward on the VMEM-resident frame stack,
+    Gumbel-argmax action sampling on pre-drawn noise, the AIP backbone
+    cell (``kind`` in {"gru", "fnn"}) with its Bernoulli draw, the LS
+    transition + reward, and the periodic episode-reset merge — in ONE
+    kernel dispatch (``aip_step.policy_rollout``'s (A·B-blocks, T) grid)
+    on TPU; the identical-math ``ref.policy_rollout_ref`` scan elsewhere.
+    Both paths run the caller's ``tick_fn``/``dset_fn``/``obs_fn`` on the
+    same values in the same order, so they agree bitwise given the same
+    streams — and both are bitwise with PPO's own hoisted scan, which is
+    what lets the engine hand its acting loop over wholesale.
+
+    ``interpret=None`` is the production dispatch above; passing a bool
+    forces the Pallas kernel itself (interpret mode off-TPU — the parity
+    tests exercise the real grid/scratch machinery that way).
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _aip.policy_rollout(
+                tuple(ls), s0, frames0, tuple(aip_w), tuple(pol_w),
+                gumbel, bits, done, tuple(noise), tuple(reset_ls),
+                kind=kind, n_agents=n_agents, fast_gates=fast_gates,
+                tick_fn=tick_fn, dset_fn=dset_fn, obs_fn=obs_fn,
+                block_b=block_b, interpret=False)
+        return _ref.policy_rollout_ref(
+            tuple(ls), s0, frames0, tuple(aip_w), tuple(pol_w), gumbel,
+            bits, done, tuple(noise), tuple(reset_ls), kind=kind,
+            n_agents=n_agents, fast_gates=fast_gates, tick_fn=tick_fn,
+            dset_fn=dset_fn, obs_fn=obs_fn)
+    return _aip.policy_rollout(
+        tuple(ls), s0, frames0, tuple(aip_w), tuple(pol_w), gumbel, bits,
+        done, tuple(noise), tuple(reset_ls), kind=kind,
+        n_agents=n_agents, fast_gates=fast_gates, tick_fn=tick_fn,
+        dset_fn=dset_fn, obs_fn=obs_fn, block_b=block_b,
+        interpret=interpret)
+
+
 def rmsnorm(x, g, *, eps: float = 1e-6):
     shp = x.shape
     out = _rms.rmsnorm(x.reshape(-1, shp[-1]), g, eps=eps,

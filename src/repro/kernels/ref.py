@@ -241,6 +241,110 @@ def fnn_rollout_ref(ls, buf0, w1, b1, w2, b2, hw, hb, actions, bits,
     return ls_T, _ba_to_lanes(buf_T), rews
 
 
+def _policy_fwd_ref(pol_w, x, fast_gates: bool):
+    """The PPO actor-critic forward on a flat weight tuple — the exact
+    math of ``rl/ppo.py::policy_forward`` (dense = x @ w + b, hidden
+    layers through the shared gates), so the actor-in-the-loop rollout
+    stays bitwise with the PPO scan path. pol_w = (w1, b1, w2, b2, piw,
+    pib, vw, vb); x: (..., S) -> (logits (..., n_actions), value (...))."""
+    w1, b1, w2, b2, piw, pib, vw, vb = pol_w
+    act = fast_tanh if fast_gates else jnp.tanh
+    h = act(x @ w1 + b1)
+    h = act(h @ w2 + b2)
+    # both heads as one GEMM, matching the kernel's ``_policy_cell``
+    # exactly (a lone (Hp, 1) matvec drifts by 1 ulp across program
+    # shapes); vs the PPO scan path this makes ``v`` the one documented
+    # allclose-not-bitwise leaf of the fused-actor routes
+    out = h @ jnp.concatenate([piw, vw], axis=1) \
+        + jnp.concatenate([pib, vb], axis=0)
+    return out[..., :-1], out[..., -1]
+
+
+def policy_rollout_ref(ls, s0, frames0, aip_w, pol_w, gumbel, bits, done,
+                       noise, reset_ls, *, kind: str, n_agents: int,
+                       fast_gates: bool, tick_fn, dset_fn, obs_fn):
+    """Whole-horizon actor-in-the-loop rollout oracle: the
+    ``policy_rollout`` kernel's ground truth, and bit-for-bit the PPO
+    hoisted-scan tick (frame-stack shift, policy forward, Gumbel-argmax
+    action, AIP sample, LS tick, periodic reset merge) in lane layout.
+
+    ls / reset_ls: tuples of (L, ...) / (T, L, ...) kernel-encoded LS
+    leaves, L = A·B agent-major; s0: (L, K) AIP recurrent state (GRU
+    hidden / flattened FNN frame buffer); frames0: (L, stack·obs_dim)
+    flattened policy frame stack; aip_w: stacked (A, ...) backbone
+    weights ((wx, wh, b, hw, hb) for ``kind="gru"``, (w1, b1, w2, b2,
+    hw, hb) for ``"fnn"``); pol_w: the SHARED (parameter-shared PPO)
+    policy weight tuple of ``_policy_fwd_ref``; gumbel: (T, L,
+    n_actions) f32 pre-drawn action noise; bits: (T, L, M) uint32;
+    done: (T, L) int32 episode-reset schedule; noise: tuple of (T, L,
+    ...) LS noise leaves; the AIP state resets to zeros (its init value)
+    on done, matching the engine's ``reset``.
+
+    The AIP cell runs in (B, A, ...) layout through the same
+    formulations the per-tick engine dispatches off-TPU (vmapped GRU /
+    stacked-einsum FNN), and the policy forward runs in (B, A, S) — the
+    PPO scan's own shapes — so the forced-ops route stays bitwise with
+    the scan. -> (final ls leaves, s_T (L, K), frames_T (L, S), x (T, L,
+    S), a (T, L) int32, logits (T, L, n_actions), v (T, L), r (T, L))."""
+    A = n_agents
+    to_ba = (lambda x: _lanes_to_ba(x, A)) if A > 1 else (lambda x: x)
+    to_l = _ba_to_lanes if A > 1 else (lambda x: x)
+
+    def aip_cell(s, d, bt):
+        if kind == "gru":
+            wx, wh, b, hw, hb = aip_w
+            if A == 1:
+                return aip_step_ref(d, s, wx[0], wh[0], b[0], hw[0],
+                                    hb[0], bt)
+            return aip_step_multi_vmapped_ref(d, s, wx, wh, b, hw, hb,
+                                              bt)
+        w1, b1, w2, b2, hw, hb = aip_w
+        if A == 1:
+            buf2 = jnp.concatenate([s[:, d.shape[-1]:], d], axis=1)
+            h = jax.nn.relu(buf2 @ w1[0] + b1[0])
+            h = jax.nn.relu(h @ w2[0] + b2[0])
+            logits = h @ hw[0] + hb[0]
+        else:
+            buf2, logits = fnn_step_multi_ref(s, d, w1, b1, w2, b2, hw,
+                                              hb)
+        u = (uniform_from_bits(bt) < fast_sigmoid(logits)
+             ).astype(jnp.float32)
+        return buf2, logits, u
+
+    def tick(carry, xs):
+        lsc, s, frames = carry              # frames: (B, [A,] S) f32
+        g, bt, dn, nz, rls = xs
+        x = frames
+        logits, value = _policy_fwd_ref(pol_w, x, fast_gates)
+        a_ba = jnp.argmax(logits + to_ba(g), axis=-1)
+        a = to_l(a_ba)
+        d = to_ba(dset_fn(lsc, a).astype(jnp.float32))
+        s2, _, u_ba = aip_cell(s, d, to_ba(bt))
+        ls2, r = tick_fn(lsc, a, to_l(u_ba), nz)
+        obs = obs_fn(ls2)
+        d_obs = obs.shape[-1]
+        obs_ba = to_ba(obs)
+        frames2 = jnp.concatenate([x[..., d_obs:], obs_ba], axis=-1)
+        dn_b = to_ba(dn) != 0               # (B, [A])
+        ls_m = tuple(
+            jnp.where((dn != 0).reshape((-1,) + (1,) * (n.ndim - 1)),
+                      rl, n) for n, rl in zip(ls2, rls))
+        s_m = jnp.where(dn_b[..., None], jnp.zeros_like(s2), s2)
+        obs0_ba = to_ba(obs_fn(ls_m))
+        frames_reset = jnp.concatenate(
+            [jnp.zeros_like(x[..., d_obs:]), obs0_ba], axis=-1)
+        frames_m = jnp.where(dn_b[..., None], frames_reset, frames2)
+        out = (to_l(x), a, to_l(logits), to_l(value),
+               r.astype(jnp.float32))
+        return (tuple(ls_m), s_m, frames_m), out
+
+    init = (tuple(ls), to_ba(s0), to_ba(frames0))
+    (ls_T, s_T, f_T), (xs, acts, lgs, vs, rs) = jax.lax.scan(
+        tick, init, (gumbel, bits, done, tuple(noise), tuple(reset_ls)),
+        unroll=8)
+    return ls_T, to_l(s_T), to_l(f_T), xs, acts, lgs, vs, rs
+
+
 def rmsnorm_ref(x, g, *, eps: float = 1e-6):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

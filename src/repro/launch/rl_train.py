@@ -141,15 +141,17 @@ def build_simulator(simulator: str, gs, ls, aip_kind: str, key, *,
         diag["aip_train_time_s"] = time.time() - t0
         return env, diag
 
-    # trained IALS
+    # trained IALS (the dataset is dead after the fit -> donate the
+    # epoch buffers to the jitted training loop)
     if A > 1:
         params, m = influence.train_aip_batched(
             acfg, data["d"], data["u"], jax.random.split(k2, A),
-            epochs=aip_epochs, window=aip_window)
+            epochs=aip_epochs, window=aip_window, donate=True)
         diag["aip_xent_per_agent"] = m["final_loss_per_agent"]
     else:
         params, m = influence.train_aip(acfg, data["d"], data["u"], k2,
-                                        epochs=aip_epochs, window=aip_window)
+                                        epochs=aip_epochs,
+                                        window=aip_window, donate=True)
     diag["aip_xent"] = m["final_loss"]
     diag["aip_train_time_s"] = time.time() - t0
     return _make_sim(ls, params, acfg, A), diag

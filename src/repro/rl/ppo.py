@@ -13,17 +13,30 @@ dimension everywhere — one policy network, T * n_envs * A samples per update.
 ``shard_rollout`` places the env batch on the mesh ``data`` axis so rollouts
 scale across devices.
 
-Rollouts run on the batched env protocol: a native ``BatchedEnv`` (the
-fused IALS engine) steps the whole env batch with one key per tick and its
-randomness drawn in bulk; a scalar ``Env`` is lifted through the
-``batch_env`` vmap adapter, which reproduces the historical
-split-keys-then-vmap derivation exactly. When the env exposes the
-whole-horizon pair ``noise_fn``/``step_det`` (see ``envs/api.py``), the
-rollout draws ALL of the horizon's env randomness before the scan and the
-scan body steps the deterministic tick — the policy stays in the loop (it
-has to: actions depend on observations), but the env side of every tick
-is pure compute, bitwise-equal to the keyed path. ``train_iteration``
-donates its (params, opt_state, rollout-state) arguments, so each PPO
+The training-loop contract (see docs/ARCHITECTURE.md §"training-loop
+contract"): when the env exposes the whole-horizon pair
+``noise_fn``/``step_det``, the rollout hoists ALL of its randomness out of
+the scan — the horizon's env noise (``horizon_noise``), per-tick Gumbel
+noise for action sampling (``bulk_gumbel``; ``gumbel_argmax(logits, g)`` is
+bitwise-equal to ``jax.random.categorical`` on the same key, which is
+exactly how jax itself derives the draw), and the per-tick episode-reset
+states — so the scan body is fully deterministic: frame-stack shift +
+policy forward + ``step_det`` fuse into one pure-compute tick with zero
+in-scan key derivation. When the env additionally provides
+``policy_rollout`` (the unified IALS engine sets it when its kernel route
+is active), the ENTIRE acting loop — act + AIP + LS + reward + resets —
+is handed to the env as one whole-horizon dispatch — bit-identical to
+the scan on every leaf except the value stream ``v`` (the fused routes
+compute both policy heads as one GEMM, a 1-ulp drift documented in
+ARCHITECTURE §4). The scan paths themselves are fully bit-identical;
+``PPOConfig.hoist_rollout_noise=False`` is the documented opt-out that
+preserves the keyed per-tick derivation exactly.
+
+Learner side: GAE is a log-depth ``lax.associative_scan`` over the affine
+recurrence (not a T-step sequential scan), minibatch epochs do ONE
+permutation gather per epoch and stream contiguous slices through the
+update scan (no per-minibatch gather copies), and ``train_iteration``
+donates its (params, opt_state, rollout-state) arguments so each PPO
 iteration updates in place instead of round-tripping fresh buffers.
 """
 from __future__ import annotations
@@ -64,6 +77,13 @@ class PPOConfig:
     fast_gates: bool = True       # rational tanh (nn/act.py) in the policy
     #                               net — the same transcendental diet the
     #                               AIP tick got; False = exact jnp.tanh
+    hoist_rollout_noise: bool = True  # pre-draw Gumbel action noise + reset
+    #                               states alongside the bulk env noise so
+    #                               the rollout scan body is deterministic;
+    #                               False = the keyed per-tick derivation,
+    #                               preserved exactly (the documented
+    #                               opt-out — batches are bitwise-equal
+    #                               either way)
 
     @property
     def agent_shape(self) -> tuple:
@@ -98,6 +118,27 @@ def policy_forward(params, x, *, fast_gates: bool):
     h = act(dense(params["l1"], x))
     h = act(dense(params["l2"], h))
     return dense(params["pi"], h), dense(params["v"], h)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Action sampling: the hoisted Gumbel-max derivation
+# ---------------------------------------------------------------------------
+
+def bulk_gumbel(keys, shape, dtype=jnp.float32):
+    """(T,) keys -> (T,) + shape Gumbel noise, row t being exactly
+    ``jax.random.gumbel(keys[t], shape, dtype)`` — the same values
+    ``jax.random.categorical(keys[t], logits)`` derives internally, drawn
+    for the whole horizon before the rollout scan."""
+    return jax.vmap(lambda k: jax.random.gumbel(k, shape, dtype))(keys)
+
+
+def gumbel_argmax(logits, g):
+    """Gumbel-max sampling on pre-drawn noise: bitwise-equal to
+    ``jax.random.categorical(key, logits)`` when ``g`` came from
+    ``jax.random.gumbel(key, logits.shape, logits.dtype)`` (float addition
+    is commutative, and jax's categorical IS argmax(gumbel + logits) —
+    pinned by the property test in tests/test_train_engine.py)."""
+    return jnp.argmax(logits + g, axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -144,42 +185,56 @@ def shard_rollout(rs: RolloutState, mesh) -> RolloutState:
     return jax.tree_util.tree_map(put, rs)
 
 
+def _split_tick_keys(key, T: int):
+    """The per-tick (action, env, reset) keys, pre-split outside the scan —
+    the same values the historical in-body ``jax.random.split(k, 3)``
+    drew, shared by every rollout path so they stay bitwise-comparable."""
+    keys = jax.random.split(key, T)
+    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
+    return k3[:, 0], k3[:, 1], k3[:, 2]
+
+
 def rollout(env, cfg: PPOConfig, params, rs: RolloutState, key):
     """-> (new RolloutState, batch with (T, n_envs, *agent_shape, ...)
-    leaves). The agent axis (if any) is just extra batch dimension: one
-    parameter-shared policy acts for every agent of every env copy.
+    leaves, v_last). The agent axis (if any) is just extra batch
+    dimension: one parameter-shared policy acts for every agent of every
+    env copy.
 
-    ``env`` may be a scalar ``Env`` or a native ``BatchedEnv``; either
-    way the scan body is one batched env step per tick, with the per-step
-    key array pre-split outside the scan. When the env exposes
-    ``noise_fn``/``step_det``, the whole horizon's env randomness is
-    drawn in bulk before the scan and the body runs the deterministic
-    tick — bit-identical trajectories, no per-tick key derivation on the
-    hot path."""
+    Dispatch, most fused first — every path derives its randomness from
+    the same pre-split keys, so the scan paths (2, 3) are bit-identical
+    and path 1 matches them on every leaf except the 1-ulp ``v`` value
+    stream (see the module docstring):
+      1. ``benv.policy_rollout`` (the unified IALS engine sets it when
+         its kernel route is active): the whole acting loop — frame
+         stack, policy forward, Gumbel-argmax sampling, AIP + LS tick,
+         reward, periodic resets — is ONE whole-horizon env dispatch
+         (a single Pallas call on TPU).
+      2. The hoisted deterministic scan (the off-TPU default when the env
+         has ``noise_fn``/``step_det``): Gumbel action noise, env noise,
+         and reset states are all pre-drawn, so the body is pure compute
+         with zero in-scan key derivation.
+      3. ``cfg.hoist_rollout_noise=False`` or no whole-horizon pair: the
+         keyed per-tick path (``jax.random.categorical`` + in-scan
+         resets; env noise still bulk when available) — the historical
+         derivation, preserved exactly.
+    """
     benv = as_batched(env)
     whole_horizon = (benv.step_det is not None
                      and benv.noise_fn is not None)
+    hoist = cfg.hoist_rollout_noise and whole_horizon
+    ka, ks, kr = _split_tick_keys(key, cfg.rollout_len)
 
-    def step(carry, xs):
-        rs = carry
-        ka, ks, kr = xs
-        x = _stack_obs(rs.frames)
-        logits, value = policy_forward(params, x,
-                                       fast_gates=cfg.fast_gates)
-        a = jax.random.categorical(ka, logits)
+    def finish_tick(rs, x, logits, value, a, env_state, obs, r,
+                    reset_state):
+        """Everything after the env step — frame update, periodic reset,
+        batch row — shared verbatim by the keyed and hoisted bodies so
+        they stay bitwise-equal by construction."""
         logp = jnp.take_along_axis(jax.nn.log_softmax(logits),
                                    a[..., None], -1)[..., 0]
-
-        if whole_horizon:
-            env_state, obs, r, _ = benv.step_det(rs.env_state, a, ks)
-        else:
-            env_state, obs, r, _ = benv.step(rs.env_state, a, ks)
         frames = jnp.concatenate(
             [rs.frames[..., 1:, :], obs[..., None, :]], axis=-2)
-
         t = rs.t_in_ep + 1
         done = t >= cfg.episode_len
-        reset_state = benv.reset(kr, cfg.n_envs)
         env_state = jax.tree_util.tree_map(
             lambda n, i: jnp.where(
                 done.reshape((-1,) + (1,) * (n.ndim - 1)), i, n),
@@ -196,32 +251,98 @@ def rollout(env, cfg: PPOConfig, params, rs: RolloutState, key):
                "done": done_b.astype(jnp.float32)}
         return RolloutState(env_state, frames, t), out
 
-    keys = jax.random.split(key, cfg.rollout_len)
-    # the per-tick (action, env, reset) keys, pre-split outside the scan —
-    # the same values the historical in-body jax.random.split(k, 3) drew
-    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys)
-    ka, ks, kr = k3[:, 0], k3[:, 1], k3[:, 2]
-    env_xs = (horizon_noise(benv.noise_fn, ks, cfg.n_envs)
-              if whole_horizon else ks)
-    rs, batch = lax.scan(step, rs, (ka, env_xs, kr))
+    if hoist:
+        gum = bulk_gumbel(
+            ka, (cfg.n_envs,) + cfg.agent_shape + (cfg.n_actions,))
+        env_noise = horizon_noise(benv.noise_fn, ks, cfg.n_envs)
+        reset_states = jax.vmap(lambda k: benv.reset(k, cfg.n_envs))(kr)
+
+        if benv.policy_rollout is not None:
+            rs, batch = _engine_policy_rollout(
+                benv, cfg, params, rs, gum, env_noise, reset_states)
+        else:
+            def step_h(carry, xs):
+                rs = carry
+                g, n, reset_state = xs
+                x = _stack_obs(rs.frames)
+                logits, value = policy_forward(params, x,
+                                               fast_gates=cfg.fast_gates)
+                a = gumbel_argmax(logits, g)
+                env_state, obs, r, _ = benv.step_det(rs.env_state, a, n)
+                return finish_tick(rs, x, logits, value, a, env_state,
+                                   obs, r, reset_state)
+
+            rs, batch = lax.scan(step_h, rs,
+                                 (gum, env_noise, reset_states))
+    else:
+        def step_k(carry, xs):
+            rs = carry
+            ka, ks, kr = xs
+            x = _stack_obs(rs.frames)
+            logits, value = policy_forward(params, x,
+                                           fast_gates=cfg.fast_gates)
+            a = jax.random.categorical(ka, logits)
+            if whole_horizon:
+                env_state, obs, r, _ = benv.step_det(rs.env_state, a, ks)
+            else:
+                env_state, obs, r, _ = benv.step(rs.env_state, a, ks)
+            reset_state = benv.reset(kr, cfg.n_envs)
+            return finish_tick(rs, x, logits, value, a, env_state, obs,
+                               r, reset_state)
+
+        env_xs = (horizon_noise(benv.noise_fn, ks, cfg.n_envs)
+                  if whole_horizon else ks)
+        rs, batch = lax.scan(step_k, rs, (ka, env_xs, kr))
+
     x_last = _stack_obs(rs.frames)
     _, v_last = policy_forward(params, x_last, fast_gates=cfg.fast_gates)
     return rs, batch, v_last
 
 
-def gae(batch, v_last, gamma, lam):
-    def back(carry, xs):
-        adv_next, v_next = carry
-        v, r, done = xs
-        nonterm = 1.0 - done
-        delta = r + gamma * v_next * nonterm - v
-        adv = delta + gamma * lam * nonterm * adv_next
-        return (adv, v), adv
+def _engine_policy_rollout(benv: BatchedEnv, cfg: PPOConfig, params, rs,
+                           gum, env_noise, reset_states):
+    """Hand the whole acting loop to the env's ``policy_rollout`` (the
+    unified engine's fused actor-in-the-loop dispatch) and reassemble the
+    PPO batch from its streams. The engine computes logits/values with
+    the same policy math, so ``logp`` derived from the streamed logits is
+    bitwise-equal to the scan path's."""
+    env_state, frames, t_in_ep, out = benv.policy_rollout(
+        rs.env_state, rs.frames, rs.t_in_ep, params, gum, env_noise,
+        reset_states, episode_len=cfg.episode_len,
+        fast_gates=cfg.fast_gates)
+    logp = jnp.take_along_axis(jax.nn.log_softmax(out["logits"]),
+                               out["a"][..., None], -1)[..., 0]
+    batch = {"x": out["x"], "a": out["a"], "logp": logp, "v": out["v"],
+             "r": out["r"], "done": out["done"]}
+    return RolloutState(env_state, frames, t_in_ep), batch
 
-    (_, _), advs = lax.scan(
-        back, (jnp.zeros_like(v_last), v_last),
-        (batch["v"], batch["r"], batch["done"]), reverse=True)
-    returns = advs + batch["v"]
+
+def gae(batch, v_last, gamma, lam):
+    """Generalised advantage estimation as a log-depth parallel scan.
+
+    The recurrence adv_t = delta_t + gamma*lam*nonterm_t * adv_{t+1} is a
+    composition of affine maps, so it runs as a reverse
+    ``lax.associative_scan`` over (coeff, delta) pairs — O(log T) passes
+    of vectorised work instead of a T-step sequential dependency chain.
+    Matches the sequential scan to float-association accuracy (the
+    tests pin it against a hand-rolled backward recursion)."""
+    v, r, done = batch["v"], batch["r"], batch["done"]
+    nonterm = 1.0 - done
+    v_next = jnp.concatenate([v[1:], v_last[None]], axis=0)
+    delta = r + gamma * v_next * nonterm - v
+    coeff = (gamma * lam) * nonterm
+
+    def compose(a, b):
+        # affine map composition — in a reverse associative_scan the
+        # SECOND argument is the earlier timestep, which wraps the later
+        # suffix: (b ∘ a)(x) = cb*(ca*x + da) + db. Associative, so the
+        # scan may regroup freely.
+        ca, da = a
+        cb, db = b
+        return cb * ca, db + cb * da
+
+    _, advs = lax.associative_scan(compose, (coeff, delta), reverse=True)
+    returns = advs + v
     return advs, returns
 
 
@@ -251,6 +372,9 @@ def make_train_iteration(env, cfg: PPOConfig):
 
     @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
     def train_iteration(params, opt_state, rs: RolloutState, key):
+        # donation audit: params / opt_state / rollout state update in
+        # place every iteration; the key is tiny and freshly split by the
+        # caller, so it stays undonated
         k_roll, k_upd = jax.random.split(key)
         rs, batch, v_last = rollout(env, cfg, params, rs, k_roll)
         adv, ret = gae(batch, v_last, cfg.gamma, cfg.lam)
@@ -267,19 +391,23 @@ def make_train_iteration(env, cfg: PPOConfig):
 
         def epoch(carry, k):
             params, opt_state = carry
+            # ONE permutation gather per epoch; the scan then streams
+            # contiguous (mb_size, ...) slices — no per-minibatch gather
+            # copies (same minibatch contents as gathering row-by-row)
             perm = jax.random.permutation(k, total)[:n_mb * mb_size]
-            perm = perm.reshape(n_mb, mb_size)
+            shuf = jax.tree_util.tree_map(
+                lambda v: v[perm].reshape((n_mb, mb_size)
+                                          + v.shape[1:]), flat)
 
-            def mb_step(carry, idx):
+            def mb_step(carry, mb):
                 params, opt_state = carry
-                mb = jax.tree_util.tree_map(lambda v: v[idx], flat)
                 (l, m), g = jax.value_and_grad(ppo_loss, has_aux=True)(
                     params, cfg, mb)
                 params, opt_state, _ = opt.update(g, opt_state, params)
                 return (params, opt_state), l
 
             (params, opt_state), ls = lax.scan(mb_step,
-                                               (params, opt_state), perm)
+                                               (params, opt_state), shuf)
             return (params, opt_state), ls.mean()
 
         (params, opt_state), losses = lax.scan(
@@ -292,36 +420,77 @@ def make_train_iteration(env, cfg: PPOConfig):
     return opt, train_iteration
 
 
-def evaluate(env: Env, cfg: PPOConfig, params, key, *, n_episodes: int = 8,
-             ep_len: int | None = None, per_agent: bool = False):
-    """Mean per-step reward of the greedy policy on ``env`` (the paper's
-    periodic evaluation on the GS). With ``per_agent`` on a multi-agent env,
-    returns the (n_agents,) per-agent means instead of the overall mean."""
-    ep_len = ep_len or cfg.episode_len
+# ---------------------------------------------------------------------------
+# Greedy evaluation on the batched whole-horizon path
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def _cached_evaluator(env, cfg: PPOConfig, n_episodes: int, ep_len: int):
+    benv = as_batched(env)
+    whole = benv.step_det is not None and benv.noise_fn is not None
     ash = cfg.agent_shape
 
-    def episode(key):
-        k0, key = jax.random.split(key)
-        state = env.reset(k0)
-        frames = jnp.zeros(ash + (cfg.frame_stack, cfg.obs_dim))
-        frames = frames.at[..., -1, :].set(env.observe(state))
+    def run(params, key):
+        k0, ks = jax.random.split(key)
+        state = benv.reset(k0, n_episodes)
+        frames = jnp.zeros((n_episodes,) + ash
+                           + (cfg.frame_stack, cfg.obs_dim))
+        frames = frames.at[..., -1, :].set(benv.observe(state))
+        keys = jax.random.split(ks, ep_len)
+        xs = (horizon_noise(benv.noise_fn, keys, n_episodes) if whole
+              else keys)
 
-        def step(carry, k):
+        def tick(carry, x):
             state, frames = carry
-            x = frames.reshape(ash + (-1,)) if ash else frames.reshape(1, -1)
-            logits, _ = policy_forward(params, x,
+            logits, _ = policy_forward(params, _stack_obs(frames),
                                        fast_gates=cfg.fast_gates)
-            a = (jnp.argmax(logits, -1) if ash else jnp.argmax(logits[0]))
-            state, obs, r, _ = env.step(state, a, k)
+            a = jnp.argmax(logits, -1)
+            if whole:
+                state, obs, r, _ = benv.step_det(state, a, x)
+            else:
+                state, obs, r, _ = benv.step(state, a, x)
             frames = jnp.concatenate(
                 [frames[..., 1:, :], obs[..., None, :]], axis=-2)
             return (state, frames), r
 
-        _, rs = lax.scan(step, (state, frames), jax.random.split(key, ep_len))
-        return rs.mean(axis=0)        # () or (n_agents,)
+        _, rews = lax.scan(tick, (state, frames), xs, unroll=8)
+        return rews.mean(axis=0).mean(axis=0)       # () or (n_agents,)
 
-    keys = jax.random.split(key, n_episodes)
-    rewards = jax.jit(jax.vmap(episode))(keys).mean(axis=0)
-    if per_agent and ash:
+    return jax.jit(run)
+
+
+def make_evaluator(env, cfg: PPOConfig, *, n_episodes: int = 8,
+                   ep_len: int | None = None):
+    """-> cached jitted ``fn(params, key) -> mean rewards`` (scalar array,
+    or (n_agents,) on a multi-agent env).
+
+    The greedy policy needs no action noise, so evaluation episodes ride
+    the batched env protocol directly: episodes ARE the env batch, env
+    randomness is drawn in bulk when the env exposes
+    ``noise_fn``/``step_det``, and the whole evaluation is one jitted
+    scan-of-batched-ticks instead of a vmap of per-episode scalar keyed
+    scans. The evaluator is cached per (env, cfg, sizes), so periodic
+    evaluation stops re-tracing every call."""
+    return _cached_evaluator(env, cfg, n_episodes,
+                             ep_len or cfg.episode_len)
+
+
+def evaluate(env, cfg: PPOConfig, params, key, *, n_episodes: int = 8,
+             ep_len: int | None = None, per_agent: bool = False):
+    """Mean per-step reward of the greedy policy on ``env`` (the paper's
+    periodic evaluation on the GS). ``env`` may be a scalar ``Env`` or a
+    native ``BatchedEnv`` (the fused IALS engines evaluate directly).
+    With ``per_agent`` on a multi-agent env, returns the (n_agents,)
+    per-agent means instead of the overall mean.
+
+    Estimator note: episodes-as-batch draws env randomness with one key
+    per tick (shared across episodes, the batched protocol's derivation)
+    instead of the historical per-episode key chains — the same
+    distribution over trajectories, not the same key stream; the
+    equivalence test pins the two paths together on key-independent
+    dynamics."""
+    run = make_evaluator(env, cfg, n_episodes=n_episodes, ep_len=ep_len)
+    rewards = run(params, key)
+    if per_agent and cfg.agent_shape:
         return rewards
-    return float(rewards.mean())
+    return float(jnp.asarray(rewards).mean())

@@ -53,6 +53,30 @@ def test_symbol_checker_detects_drift(tmp_path, monkeypatch):
     assert len(errs) == 1 and "definitely_not_a_symbol" in errs[0]
 
 
+def test_required_snippets_detects_drift(monkeypatch):
+    """A doc that stops quoting a required snippet (the train-throughput
+    entry point, the policy_rollout dispatch cells) trips the gate."""
+    errs = docs_check.missing_required_snippets()
+    assert errs == []          # the tree currently quotes all of them
+    monkeypatch.setattr(
+        docs_check, "REQUIRED_SNIPPETS",
+        {"README.md": ("python -m benchmarks.no_such_bench",)})
+    errs = docs_check.missing_required_snippets()
+    assert len(errs) == 1 and "no_such_bench" in errs[0]
+
+
+def test_required_snippets_cover_the_new_tier():
+    """The required list itself keeps the training-loop contract pinned:
+    entry point + all three policy_rollout dispatch cells."""
+    need = {"python -m benchmarks.train_throughput",
+            "kernels/ops.py::policy_rollout",
+            "kernels/aip_step.py::policy_rollout",
+            "kernels/ref.py::policy_rollout_ref"}
+    listed = {s for snips in docs_check.REQUIRED_SNIPPETS.values()
+              for s in snips}
+    assert need <= listed
+
+
 def test_snippet_extraction_ignores_prose():
     text = ("Adapters make the two worlds interoperate.\n"
             "Run `make test-fast` or:\n```sh\nmake bench-check\n```\n")

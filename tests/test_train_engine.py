@@ -1,0 +1,421 @@
+"""The fused actor-in-the-loop training engine (PR 5).
+
+Pins down: bulk-Gumbel action sampling == keyed ``jax.random.categorical``
+bitwise (property test) with a distributional fallback where bitwise
+equality is not derivable; the PPO rollout's three dispatch paths
+(hoisted deterministic scan / keyed per-tick scan / fully-keyed legacy)
+produce bit-identical batches; the engine's ``policy_rollout`` route
+(forced ops -> stacked oracle on CPU, and the real Pallas kernel in
+interpret mode) reproduces the scan for both domains x backbones x
+multiplicities; GAE's associative scan matches the sequential recursion;
+the batched greedy evaluator matches the historical episodic path; and
+``train_aip`` donation invalidates exactly what it documents."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pure-pytest fallback (hypcompat)
+    from hypcompat import given, settings, st
+
+from repro.core import engine, influence
+from repro.envs.api import Env, EnvSpec
+from repro.envs.traffic import (TrafficConfig,
+                                make_batched_local_traffic_env)
+from repro.envs.warehouse import (WarehouseConfig,
+                                  make_batched_local_warehouse_env)
+from repro.rl import ppo
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        jnp.array_equal(x, y) for x, y in zip(la, lb))
+
+
+def _bls(domain):
+    if domain == "traffic":
+        return make_batched_local_traffic_env(TrafficConfig())
+    return make_batched_local_warehouse_env(WarehouseConfig())
+
+
+def _engine_pair(domain, kind, A):
+    """-> (forced-ops engine, scan engine) sharing params."""
+    bls = _bls(domain)
+    acfg = influence.AIPConfig(kind=kind, d_in=bls.spec.dset_dim,
+                               n_out=bls.spec.n_influence, hidden=8,
+                               stack=2)
+    if A == 1:
+        params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    else:
+        params = jax.vmap(lambda k: influence.init_aip(acfg, k))(
+            jax.random.split(jax.random.PRNGKey(0), A))
+    env_k = engine.make_unified_ials(bls, params, acfg, n_agents=A,
+                                     use_horizon_kernel=True)
+    env_s = engine.make_unified_ials(bls, params, acfg, n_agents=A,
+                                     use_horizon_kernel=False)
+    return bls, env_k, env_s
+
+
+def _ppo_cfg(bls, A, **kw):
+    kw.setdefault("frame_stack", 2)
+    kw.setdefault("n_envs", 4)
+    kw.setdefault("rollout_len", 7)
+    kw.setdefault("episode_len", 5)      # < rollout_len: resets exercised
+    kw.setdefault("hidden", 16)
+    return ppo.PPOConfig(obs_dim=bls.spec.obs_dim,
+                         n_actions=bls.spec.n_actions, n_agents=A, **kw)
+
+
+def _assert_batches_match(batch_a, batch_b, rs_a, rs_b, v_a, v_b):
+    """Bitwise on every leaf except the value stream ``v``: the fused
+    routes compute both policy heads as one GEMM (see
+    kernels/aip_step.py::_policy_cell), which can move ``v`` by 1 ulp
+    across program shapes — the one documented allclose leaf."""
+    for k in batch_a:
+        if k == "v":
+            assert jnp.allclose(batch_a[k], batch_b[k], atol=1e-6), k
+        else:
+            assert jnp.array_equal(batch_a[k], batch_b[k]), k
+    assert _trees_equal(rs_a, rs_b)
+    assert jnp.allclose(v_a, v_b, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bulk-Gumbel action sampling == jax.random.categorical (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=24, deadline=None)
+@given(seed=st.integers(0, 5), b=st.integers(1, 9),
+       n_act=st.sampled_from([2, 5]), agents=st.integers(1, 3),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_bulk_gumbel_matches_categorical_bitwise(seed, b, n_act, agents,
+                                                 dtype):
+    """argmax(logits + gumbel(key)) is BITWISE jax.random.categorical's
+    draw on the same key — jax derives categorical exactly that way and
+    float addition commutes — across batch shapes, agent axes, action
+    counts, and logit dtypes; and the bulk (vmapped-over-keys) draw
+    equals the per-key draws."""
+    dt = jnp.dtype(dtype)
+    shape = (b, agents, n_act) if agents > 1 else (b, n_act)
+    logits = jax.random.normal(jax.random.PRNGKey(seed + 100), shape,
+                               dt) * 3
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    want = jnp.stack([jax.random.categorical(k, logits) for k in keys])
+    gum = ppo.bulk_gumbel(keys, shape, dt)
+    got = ppo.gumbel_argmax(logits[None], gum)
+    assert jnp.array_equal(got, want)
+
+
+def test_gumbel_from_foreign_stream_matches_distribution():
+    """The fallback claim where bitwise equality is NOT derivable: Gumbel
+    noise from a different derivation (inverse-CDF on counter-bit
+    uniforms, the kernel-style stream) still samples softmax(logits) —
+    empirical action frequencies match to sampling error."""
+    from repro.nn.act import uniform_from_bits
+
+    logits = jnp.array([1.0, 0.0, -1.0, 0.5])
+    n = 40000
+    bits = jax.random.bits(jax.random.PRNGKey(3), (n, 4), jnp.uint32)
+    u = jnp.clip(uniform_from_bits(bits), 1e-7, 1.0 - 1e-7)
+    g = -jnp.log(-jnp.log(u))
+    a = ppo.gumbel_argmax(logits[None], g)
+    freq = jnp.bincount(a, length=4) / n
+    want = jax.nn.softmax(logits)
+    assert float(jnp.abs(freq - want).max()) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# the three PPO rollout paths are bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("domain,kind,A", [
+    ("warehouse", "gru", 1), ("warehouse", "gru", 3),
+    ("traffic", "fnn", 3),
+])
+def test_hoisted_rollout_matches_keyed_and_legacy(domain, kind, A):
+    """hoisted deterministic scan (the default) == keyed per-tick path
+    (hoist_rollout_noise=False, the PR-4 program, preserved exactly) ==
+    fully-keyed legacy (no whole-horizon pair at all), bitwise on every
+    leaf — episode resets included."""
+    import dataclasses
+
+    bls, _, env = _engine_pair(domain, kind, A)
+    cfg = _ppo_cfg(bls, A)
+    cfg_keyed = dataclasses.replace(cfg, hoist_rollout_noise=False)
+    legacy = env._replace(step_det=None, noise_fn=None, rollout=None)
+    key = jax.random.PRNGKey(11)
+    pol = ppo.init_policy(cfg, key)
+    rs0 = ppo.init_rollout_state(env, cfg, key)
+    out_h = ppo.rollout(env, cfg, pol, rs0, key)
+    out_k = ppo.rollout(env, cfg_keyed, pol, rs0, key)
+    out_l = ppo.rollout(legacy, cfg, pol, rs0, key)
+    for other in (out_k, out_l):
+        assert _trees_equal(out_h[1], other[1])
+        assert _trees_equal(out_h[0], other[0])
+        assert jnp.array_equal(out_h[2], other[2])
+    assert float(out_h[1]["done"].sum()) > 0      # resets really fired
+
+
+# ---------------------------------------------------------------------------
+# engine policy_rollout route (forced ops -> oracle) == scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("domain,kind,A", [
+    (d, k, A) for d in ("traffic", "warehouse")
+    for k in ("gru", "fnn") for A in (1, 3)])
+def test_policy_rollout_route_matches_scan(domain, kind, A):
+    """The engine's whole-acting-loop dispatch (use_horizon_kernel=True
+    -> kernels.ops.policy_rollout -> the stacked oracle on CPU) produces
+    the scan path's batch: bitwise everywhere except the documented
+    1-ulp ``v`` leaf. Covers all backbone x multiplicity x domain
+    combos, resets included."""
+    bls, env_k, env_s = _engine_pair(domain, kind, A)
+    assert env_k.policy_rollout is not None
+    assert env_s.policy_rollout is None
+    cfg = _ppo_cfg(bls, A)
+    key = jax.random.PRNGKey(5)
+    pol = ppo.init_policy(cfg, key)
+    rs0 = ppo.init_rollout_state(env_s, cfg, key)
+    rs_a, batch_a, v_a = ppo.rollout(env_k, cfg, pol, rs0, key)
+    rs_b, batch_b, v_b = ppo.rollout(env_s, cfg, pol, rs0, key)
+    _assert_batches_match(batch_a, batch_b, rs_a, rs_b, v_a, v_b)
+
+
+@pytest.mark.parametrize("domain,kind", [
+    ("warehouse", "gru"), ("warehouse", "fnn"),
+    ("traffic", "gru"), ("traffic", "fnn"),
+])
+def test_interpret_policy_kernel_matches_oracle(domain, kind,
+                                                monkeypatch):
+    """The actual Pallas policy_rollout kernel (interpret mode: the real
+    (A·B-blocks, T) grid, per-agent weight indexing, frame-stack VMEM
+    scratch, streamed resets) reproduces the ops oracle route bitwise on
+    EVERY leaf — stacked weights included (A=2). Eager-to-eager, like
+    the other interpret parity tests."""
+    from repro.kernels import ops
+
+    orig = ops.policy_rollout
+
+    def forced(*args, **kw):
+        kw["interpret"] = True
+        return orig(*args, **kw)
+
+    A = 2
+    bls, env_k, _ = _engine_pair(domain, kind, A)
+    cfg = _ppo_cfg(bls, A, rollout_len=6, episode_len=4)
+    key = jax.random.PRNGKey(9)
+    pol = ppo.init_policy(cfg, key)
+    rs0 = ppo.init_rollout_state(env_k, cfg, key)
+    rs_o, batch_o, v_o = ppo.rollout(env_k, cfg, pol, rs0, key)
+    monkeypatch.setattr(ops, "policy_rollout", forced)
+    rs_k, batch_k, v_k = ppo.rollout(env_k, cfg, pol, rs0, key)
+    assert _trees_equal(batch_o, batch_k)
+    assert _trees_equal(rs_o, rs_k)
+    assert jnp.array_equal(v_o, v_k)
+
+
+def test_train_iteration_on_policy_rollout_route():
+    """A full donated train_iteration runs end-to-end on the fused
+    actor-in-the-loop route and stays numerically in step with the scan
+    route (params allclose — ``v`` is the 1-ulp leaf, so bitwise is not
+    claimed)."""
+    bls, env_k, env_s = _engine_pair("warehouse", "gru", 1)
+    cfg = _ppo_cfg(bls, 1, rollout_len=8, episode_len=6)
+    key = jax.random.PRNGKey(2)
+    outs = {}
+    for name, env in (("ops", env_k), ("scan", env_s)):
+        pol = ppo.init_policy(cfg, key)
+        opt, it_fn = ppo.make_train_iteration(env, cfg)
+        ost = opt.init(pol)
+        rs = ppo.init_rollout_state(env, cfg, key)
+        pol, ost, rs, m = it_fn(pol, ost, rs, key)
+        outs[name] = (pol, m)
+        assert bool(jnp.isfinite(m["loss"]))
+    la = jax.tree_util.tree_leaves(outs["ops"][0])
+    lb = jax.tree_util.tree_leaves(outs["scan"][0])
+    assert all(jnp.allclose(a, b, atol=1e-5) for a, b in zip(la, lb))
+
+
+def test_policy_rollout_gating():
+    """The slot is set only when the fused route is active: never for
+    F-IALS (no AIP to fuse), never off-TPU by default."""
+    bls = _bls("traffic")
+    acfg = influence.AIPConfig(kind="gru", d_in=bls.spec.dset_dim,
+                               n_out=4, hidden=8)
+    params = influence.init_aip(acfg, jax.random.PRNGKey(0))
+    assert engine.make_unified_ials(bls, params, acfg).policy_rollout \
+        is None                                  # CPU default: the scan
+    assert engine.make_unified_ials(
+        bls, params, acfg, use_horizon_kernel=True,
+        fixed_marginal=0.3).policy_rollout is None   # F-IALS
+    assert engine.make_unified_ials(
+        bls, params, acfg,
+        use_horizon_kernel=True).policy_rollout is not None
+
+
+# ---------------------------------------------------------------------------
+# obs_fn: the kernel-safe observe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("domain", ["traffic", "warehouse"])
+def test_obs_fn_matches_observe(domain):
+    bls = _bls(domain)
+    state = bls.reset(jax.random.PRNGKey(4), 6)
+    assert jnp.array_equal(bls.obs_fn(state), bls.observe(state))
+
+
+# ---------------------------------------------------------------------------
+# GAE: associative scan == sequential recursion
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 3), t=st.integers(2, 17))
+def test_gae_associative_matches_sequential(seed, t):
+    import numpy as np
+
+    B = 3
+    v = jax.random.normal(jax.random.PRNGKey(seed), (t, B))
+    r = jax.random.normal(jax.random.PRNGKey(seed + 50), (t, B))
+    done = (jax.random.uniform(jax.random.PRNGKey(seed + 99), (t, B))
+            < 0.3).astype(jnp.float32)
+    v_last = jax.random.normal(jax.random.PRNGKey(seed + 7), (B,))
+    gamma, lam = 0.97, 0.9
+    adv, ret = ppo.gae({"v": v, "r": r, "done": done}, v_last, gamma,
+                       lam)
+    vv, rr, dd = (np.asarray(x) for x in (v, r, done))
+    acc, vn = np.zeros((B,)), np.asarray(v_last)
+    want = np.zeros((t, B))
+    for i in reversed(range(t)):
+        nonterm = 1.0 - dd[i]
+        delta = rr[i] + gamma * vn * nonterm - vv[i]
+        acc = delta + gamma * lam * nonterm * acc
+        want[i] = acc
+        vn = vv[i]
+    assert np.allclose(np.asarray(adv), want, atol=1e-5)
+    assert np.allclose(np.asarray(ret), want + vv, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# evaluate on the batched whole-horizon path
+# ---------------------------------------------------------------------------
+
+def _evaluate_episodic_reference(env, cfg, params, key, *, n_episodes,
+                                 ep_len):
+    """The pre-PR-5 evaluate, verbatim: vmap over episodes of a scalar
+    per-tick keyed scan — the equivalence reference."""
+    from jax import lax
+    ash = cfg.agent_shape
+
+    def episode(key):
+        k0, key = jax.random.split(key)
+        state = env.reset(k0)
+        frames = jnp.zeros(ash + (cfg.frame_stack, cfg.obs_dim))
+        frames = frames.at[..., -1, :].set(env.observe(state))
+
+        def step(carry, k):
+            state, frames = carry
+            x = (frames.reshape(ash + (-1,)) if ash
+                 else frames.reshape(1, -1))
+            logits, _ = ppo.policy_forward(params, x,
+                                           fast_gates=cfg.fast_gates)
+            a = (jnp.argmax(logits, -1) if ash else jnp.argmax(logits[0]))
+            state, obs, r, _ = env.step(state, a, k)
+            frames = jnp.concatenate(
+                [frames[..., 1:, :], obs[..., None, :]], axis=-2)
+            return (state, frames), r
+
+        _, rs = lax.scan(step, (state, frames),
+                         jax.random.split(key, ep_len))
+        return rs.mean(axis=0)
+
+    keys = jax.random.split(key, n_episodes)
+    return jax.jit(jax.vmap(episode))(keys).mean(axis=0)
+
+
+def _deterministic_env():
+    """Key-independent dynamics AND key-independent reset, so the
+    batched and episodic evaluators must agree exactly: reward depends
+    only on the (deterministic) state/action sequence."""
+    spec = EnvSpec(name="det", obs_dim=3, n_actions=3, n_influence=1,
+                   dset_dim=1, dset_full_dim=1)
+
+    def reset(key):
+        return jnp.int32(1)
+
+    def observe(s):
+        return jnp.stack([s, s * 2, -s]).astype(jnp.float32)
+
+    def step(s, a, key):
+        s2 = (s + 1) % 7
+        r = (a.astype(jnp.int32) + s).astype(jnp.float32)
+        return s2, observe(s2), r, {}
+
+    return Env(spec=spec, reset=reset, step=step, observe=observe)
+
+
+def test_evaluate_matches_episodic_reference_on_deterministic_env():
+    env = _deterministic_env()
+    cfg = ppo.PPOConfig(obs_dim=3, n_actions=3, frame_stack=2, hidden=8)
+    params = ppo.init_policy(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    got = ppo.evaluate(env, cfg, params, key, n_episodes=5, ep_len=9)
+    want = _evaluate_episodic_reference(env, cfg, params, key,
+                                        n_episodes=5, ep_len=9)
+    assert abs(got - float(want.mean())) < 1e-6
+
+
+def test_evaluate_on_engine_and_per_agent_shapes():
+    """The batched evaluator consumes a native BatchedEnv (the fused
+    IALS engine) directly — previously impossible — and the per-agent
+    multi path keeps its (A,) contract."""
+    bls, _, env = _engine_pair("warehouse", "gru", 3)
+    cfg = _ppo_cfg(bls, 3)
+    params = ppo.init_policy(cfg, jax.random.PRNGKey(0))
+    per = ppo.evaluate(env, cfg, params, jax.random.PRNGKey(1),
+                       n_episodes=4, ep_len=6, per_agent=True)
+    assert per.shape == (3,)
+    assert bool(jnp.all(jnp.isfinite(per)))
+    mean = ppo.evaluate(env, cfg, params, jax.random.PRNGKey(1),
+                        n_episodes=4, ep_len=6)
+    assert abs(mean - float(per.mean())) < 1e-6
+
+
+def test_evaluator_cache_reuses_jitted_fn():
+    """Periodic evaluation must not re-trace: the cached evaluator is
+    the same object across calls for the same (env, cfg, sizes)."""
+    env = _deterministic_env()
+    cfg = ppo.PPOConfig(obs_dim=3, n_actions=3, hidden=8)
+    f1 = ppo.make_evaluator(env, cfg, n_episodes=3, ep_len=4)
+    f2 = ppo.make_evaluator(env, cfg, n_episodes=3, ep_len=4)
+    assert f1 is f2
+    f3 = ppo.make_evaluator(env, cfg, n_episodes=4, ep_len=4)
+    assert f3 is not f1
+
+
+# ---------------------------------------------------------------------------
+# train_aip donation
+# ---------------------------------------------------------------------------
+
+def test_train_aip_donation_contract():
+    """donate=True invalidates exactly the (dsets, us) buffers and fits
+    identical params; donate=False leaves the caller's arrays alive."""
+    acfg = influence.AIPConfig(kind="gru", d_in=4, n_out=2, hidden=8)
+    key = jax.random.PRNGKey(0)
+
+    def data():
+        d = jax.random.normal(jax.random.PRNGKey(1), (6, 10, 4))
+        u = jax.random.bernoulli(jax.random.PRNGKey(2), 0.4,
+                                 (6, 10, 2)).astype(jnp.float32)
+        return d, u
+
+    d0, u0 = data()
+    p_keep, _ = influence.train_aip(acfg, d0, u0, key, epochs=2)
+    _ = d0 + 0, u0 + 0                       # still alive
+
+    d1, u1 = data()
+    p_don, _ = influence.train_aip(acfg, d1, u1, key, epochs=2,
+                                   donate=True)
+    assert d1.is_deleted() and u1.is_deleted()
+    assert _trees_equal(p_keep, p_don)

@@ -10,7 +10,13 @@ Fails when the documentation and the tree disagree:
      resolve to a module file under ``src/`` or the repo root;
   5. a ``path/to/file.py::symbol`` reference (the engine dispatch table's
      cell format) names a file that does not exist or a symbol the file
-     does not define at top level.
+     does not define at top level;
+  6. a REQUIRED snippet is missing from its doc (``REQUIRED_SNIPPETS``):
+     load-bearing entry points and dispatch-table cells the docs must
+     keep quoting — e.g. the ``python -m benchmarks.train_throughput``
+     train-throughput tier and the actor-in-the-loop ``policy_rollout``
+     dispatch symbols. (Checks 3-5 then verify those quotes resolve, so
+     the pair catches both "doc dropped it" and "tree renamed it".)
 
 Pure stdlib, no imports of the package itself — the checker must keep
 working even when the package is broken.
@@ -26,6 +32,20 @@ REPO = Path(__file__).resolve().parent.parent
 DOC_FILES = ("README.md", "docs/ARCHITECTURE.md")
 DOCSTRING_TREES = ("src/repro/core", "src/repro/envs", "src/repro/kernels",
                    "src/repro/rl")
+
+# snippets the named doc must quote (inside backticks or a fenced block);
+# the resolution checks below make sure each still matches the tree
+REQUIRED_SNIPPETS = {
+    "README.md": (
+        "python -m benchmarks.train_throughput",
+    ),
+    "docs/ARCHITECTURE.md": (
+        "kernels/ops.py::policy_rollout",
+        "kernels/aip_step.py::policy_rollout",
+        "kernels/ref.py::policy_rollout_ref",
+        "python -m benchmarks.train_throughput",
+    ),
+}
 
 
 def missing_docs() -> list[str]:
@@ -150,12 +170,30 @@ def stale_symbol_refs() -> list[str]:
     return errors
 
 
+def missing_required_snippets() -> list[str]:
+    """Load-bearing snippets (entry points, dispatch-table cells) must
+    stay quoted in their doc — dropping one from the docs is drift just
+    as much as quoting a dead one."""
+    errors = []
+    for name, snippets in REQUIRED_SNIPPETS.items():
+        path = REPO / name
+        if not path.is_file():
+            continue                      # missing_docs() reports it
+        quoted = _code_snippets(path.read_text())
+        for snip in snippets:
+            if snip not in quoted:
+                errors.append(f"{name} no longer quotes the required "
+                              f"snippet `{snip}`")
+    return errors
+
+
 def run_checks() -> list[str]:
     errors = missing_docs()
     errors += missing_docstrings()
     errors += stale_make_refs()
     errors += stale_module_refs()
     errors += stale_symbol_refs()
+    errors += missing_required_snippets()
     return errors
 
 
