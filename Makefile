@@ -22,8 +22,16 @@ multi-agent-bench:
 
 # Regression gate: re-measure the throughput benches and fail on a >30%
 # steps/s drop vs the committed results/bench baselines (side-effect-free).
+# Also fails when results/dryrun has zero ok cells (empty roofline).
 bench-check:
 	$(PY) -m benchmarks.run --check
 
+# Regenerate the roofline dry-run cells (results/dryrun/*.json) for the
+# real whole-horizon IALS programs on the simulated pod meshes, then
+# rebuild the committed roofline tables/summary from them.
+dryrun:
+	$(PY) -m repro.launch.dryrun --ials all
+	$(PY) -m benchmarks.run --only roofline_report
+
 .PHONY: test-fast test-all docs-check bench-quick multi-agent-bench \
-	bench-check
+	bench-check dryrun

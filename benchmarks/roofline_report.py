@@ -1,5 +1,12 @@
 """Dry-run roofline table: reads results/dryrun/*.json -> CSV rows + the
-markdown table EXPERIMENTS.md embeds (results/bench/roofline_table.md)."""
+markdown table EXPERIMENTS.md embeds (results/bench/roofline_table.md).
+
+The report is load-bearing: an empty/missing ``results/dryrun`` raises
+(so ``benchmarks.run`` — and CI — fail instead of committing header-only
+tables), and a malformed cell becomes a labeled error row instead of a
+KeyError. See the "roofline contract" section of docs/ARCHITECTURE.md
+for what a cell contains and how the times are derived.
+"""
 from __future__ import annotations
 
 import json
@@ -9,6 +16,9 @@ from .common import row, save_json
 
 DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
 
+# the command that (re)generates the IALS cells this report is built from
+DRYRUN_CMD = "PYTHONPATH=src python -m repro.launch.dryrun --ials all"
+
 
 def load_cells():
     cells = []
@@ -16,8 +26,30 @@ def load_cells():
         try:
             cells.append(json.loads(f.read_text()))
         except json.JSONDecodeError:
-            pass
+            cells.append({"arch": f.stem, "status": "error",
+                          "error": "unparseable JSON"})
     return cells
+
+
+def _cell_row(c) -> str:
+    """One table row; malformed cells (missing arch/shape/roofline keys)
+    degrade to a labeled error row instead of crashing the report."""
+    arch = c.get("arch", "?")
+    shape = c.get("shape", "?")
+    if c.get("status") != "ok":
+        return (f"| {arch} | {shape} | — | — | — | "
+                f"{c.get('status', '?')} | — | — | — |")
+    try:
+        r = c["roofline"]
+        m = c["memory"]["peak_bytes_per_device"] / 2**30
+        return (
+            f"| {arch} | {shape} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['bottleneck']} | {m:.2f} | "
+            f"{r.get('useful_flops_ratio', 0):.3f} | "
+            f"{r.get('mfu_upper_bound', 0):.4f} |")
+    except (KeyError, TypeError):
+        return f"| {arch} | {shape} | — | — | — | malformed-cell | — | — | — |"
 
 
 def make_table(cells, mesh: str = "pod1") -> str:
@@ -27,46 +59,52 @@ def make_table(cells, mesh: str = "pod1") -> str:
     for c in cells:
         if c.get("mesh") != mesh:
             continue
-        if c.get("status") != "ok":
-            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
-                         f"{c.get('status','?')} | — | — | — |")
-            continue
-        r = c["roofline"]
-        m = c["memory"]["peak_bytes_per_device"] / 2**30
-        lines.append(
-            f"| {c['arch']} | {c['shape']} | {r['t_compute_s']:.3f} | "
-            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
-            f"{r['bottleneck']} | {m:.1f} | "
-            f"{r.get('useful_flops_ratio', 0):.3f} | "
-            f"{r.get('mfu_upper_bound', 0):.4f} |")
+        lines.append(_cell_row(c))
     return "\n".join(lines)
 
 
 def run(quick: bool = False):
     out = []
     cells = load_cells()
+    if not cells:
+        raise RuntimeError(
+            f"no dry-run cells in {DRYRUN} — the roofline artifacts would "
+            f"be empty. Generate the cells first:\n    {DRYRUN_CMD}")
     ok = [c for c in cells if c.get("status") == "ok"]
     skip = [c for c in cells if str(c.get("status", "")).startswith("skip")]
-    err = [c for c in cells if c.get("status") == "error"]
+    err = [c for c in cells if c.get("status") not in ("ok",)
+           and not str(c.get("status", "")).startswith("skip")]
+    ials_ok = [c for c in ok if str(c.get("arch", "")).startswith("ials_")]
+    if not ok:
+        raise RuntimeError(
+            f"{len(cells)} dry-run cells in {DRYRUN} but none with "
+            f"status=ok — regenerate them:\n    {DRYRUN_CMD}")
     out.append(row("roofline/cells", 0.0,
-                   {"ok": len(ok), "skipped": len(skip), "error": len(err)}))
+                   {"ok": len(ok), "skipped": len(skip), "error": len(err),
+                    "ials_ok": len(ials_ok)}))
     for c in ok:
-        if c["mesh"] != "pod1":
-            continue
-        r = c["roofline"]
-        out.append(row(
-            f"roofline/{c['arch']}/{c['shape']}", 0.0,
-            {"bottleneck": r["bottleneck"],
-             "t_comp": round(r["t_compute_s"], 4),
-             "t_mem": round(r["t_memory_s"], 4),
-             "t_coll": round(r["t_collective_s"], 4),
-             "mfu_bound": round(r.get("mfu_upper_bound", 0), 5)}))
-    table = make_table(cells, "pod1")
+        try:
+            r = c["roofline"]
+            out.append(row(
+                f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}", 0.0,
+                {"bottleneck": r["bottleneck"],
+                 "t_comp": round(r["t_compute_s"], 4),
+                 "t_mem": round(r["t_memory_s"], 4),
+                 "t_coll": round(r["t_collective_s"], 4),
+                 "mfu_bound": round(r.get("mfu_upper_bound", 0), 5)}))
+        except (KeyError, TypeError):
+            out.append(row(f"roofline/{c.get('arch', '?')}/"
+                           f"{c.get('shape', '?')}/malformed", 0.0,
+                           {"error": "malformed cell"}))
+    programs = sorted({c.get("program") for c in ials_ok
+                       if c.get("program")})
     save_json("roofline_summary", {
-        "ok": len(ok), "skipped": len(skip), "error": len(err)})
+        "ok": len(ok), "skipped": len(skip), "error": len(err),
+        "ials_ok": len(ials_ok), "ials_programs": programs})
     outdir = Path(__file__).resolve().parent.parent / "results" / "bench"
     outdir.mkdir(parents=True, exist_ok=True)
-    (outdir / "roofline_table.md").write_text(table + "\n")
+    (outdir / "roofline_table.md").write_text(
+        make_table(cells, "pod1") + "\n")
     (outdir / "roofline_table_pod2.md").write_text(
         make_table(cells, "pod2") + "\n")
     return out

@@ -54,6 +54,21 @@ def _rate_files(mods):
                   if p.name.startswith(prefixes))
 
 
+def check_dryrun_cells() -> int:
+    """The roofline pipeline must have real cells: zero ok dry-run cells
+    means the committed roofline artifacts are (or would regenerate as)
+    empty — fail the gate and name the command that fixes it."""
+    from . import roofline_report
+    cells = roofline_report.load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    if not ok:
+        print(f"# check: {len(cells)} dry-run cells, 0 ok — the roofline "
+              f"artifacts are empty. Run: {roofline_report.DRYRUN_CMD}")
+        return 1
+    print(f"# check: roofline dry-run cells ok={len(ok)}")
+    return 0
+
+
 def check_regressions(baselines) -> int:
     """Compare freshly saved rate tables against the committed baselines.
     -> number of >CHECK_TOLERANCE regressions (0 == gate passes)."""
@@ -119,6 +134,7 @@ def main(argv=None):
                 traceback.print_exc()
         if args.check:
             failures += check_regressions(baselines)
+            failures += check_dryrun_cells()
     finally:
         for path, old in baselines.items():   # gate is side-effect-free,
             path.write_text(json.dumps(old, indent=1))  # crash included

@@ -78,8 +78,8 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
                       fixed_marginal: Optional[float] = None,
                       fixed_marginal_vec=None,
                       stateless: bool = False,
-                      use_horizon_kernel: Optional[bool] = None
-                      ) -> BatchedEnv:
+                      use_horizon_kernel: Optional[bool] = None,
+                      mesh=None) -> BatchedEnv:
     """The unified fused rollout engine — a natively batched IALS for any
     backbone x multiplicity combination.
 
@@ -104,8 +104,33 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
     elsewhere): True forces the ``kernels.ops`` route off-TPU too (on CPU
     that is the stacked oracle scan — the parity tests cover the kernel
     glue that way), False pins the scan.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) turns on SPMD partitioning: state
+    entering and leaving ``step_det`` / ``rollout`` / ``policy_rollout``
+    is pinned to the IALS rules of ``distributed/sharding.py`` (env lanes
+    over the data axes, the agent axis over "model" when it divides) via
+    ``with_sharding_constraint``, and GSPMD propagates through the
+    horizon. ``reset`` stays unconstrained on purpose: constraining its
+    output back-propagates the sharding into the threefry RNG lowering
+    and changes the drawn bits — shard fresh states eagerly with
+    ``sharding.shard_ials_state`` instead. ``mesh=None`` (or a size-1
+    mesh) adds no constraint ops — the default program is bitwise
+    unchanged — and data-parallel lane sharding introduces no cross-lane
+    reductions, so the sharded rollout is bitwise-equal to the
+    single-device one (tests/test_sharding.py).
     """
     _check_stateless(stateless, fixed_marginal, fixed_marginal_vec)
+    if mesh is not None:
+        from repro.distributed import sharding as _shd
+        if _shd.mesh_size(mesh) == 1:
+            mesh = None
+
+    def _constrain(state: "IALSState") -> "IALSState":
+        if mesh is None:
+            return state
+        from repro.distributed import sharding as _shd
+        return _shd.constrain_ials_state(state, mesh, n_agents)
+
     A = n_agents
     multi = A > 1
     M = local_env.spec.n_influence
@@ -136,9 +161,14 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
         return tmap(lambda l: l.reshape((B, A) + l.shape[1:]), tree)
 
     def reset(key, n_envs: int):
-        ls = _unflat(local_env.reset(key, n_envs * A), n_envs)
+        # NOT constrained: a sharding constraint here back-propagates into
+        # the threefry lowering of the LS's random init draws and changes
+        # the drawn bits (jax_threefry_partitionable=False), breaking the
+        # sharded-vs-single-device bitwise contract. Eager placement is
+        # ``sharding.shard_ials_state``'s job; the in-horizon constraints
+        # (step_det / rollout / policy_rollout) are the bitwise-safe ones.
         return IALSState(
-            ls_state=ls,
+            ls_state=_unflat(local_env.reset(key, n_envs * A), n_envs),
             aip_state=influence.init_state(aip_cfg, (n_envs,) + ash))
 
     def _batch(state: IALSState) -> int:
@@ -187,8 +217,8 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
         info["u_probs"] = probs
         if multi:
             obs, r = obs.reshape(B, A, -1), r.reshape(B, A)
-        return IALSState(ls_state=_unflat(ls2, B),
-                         aip_state=new_aip), obs, r, info
+        return _constrain(IALSState(ls_state=_unflat(ls2, B),
+                                    aip_state=new_aip)), obs, r, info
 
     def step(state: IALSState, actions, key):
         return step_det(state, actions, noise_fn(key, actions.shape[0]))
@@ -255,6 +285,7 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
         """(state, actions (T, B[, A]), keys (T,)) -> (state, rewards
         (T, B[, A])): the whole horizon in one call, bitwise-equal to
         scanning ``step``."""
+        state = _constrain(state)
         B = _batch(state)
         noise = horizon_noise(noise_fn, keys, B)
         use_kernel = (marg is None
@@ -299,7 +330,7 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
                 aip_T = _lane_unfold(
                     sT.reshape(L, aip_cfg.stack, aip_cfg.d_in), B)
             ls_T = tmap(lambda l: _lane_unfold(l, B), ls_dec(final))
-            return (IALSState(ls_state=ls_T, aip_state=aip_T),
+            return (_constrain(IALSState(ls_state=ls_T, aip_state=aip_T)),
                     _stream_unfold(rews, B))
 
         def tick(carry, xs):
@@ -337,6 +368,7 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
         reset logic maintains); resets restore the streamed LS leaves
         and re-zero the AIP state (its init value)."""
         from repro.kernels import ops  # deferred: keeps kernels optional
+        state = _constrain(state)
         B = _batch(state)
         T = gumbel.shape[0]
         ls_leaves, ls_def = jax.tree_util.tree_flatten(
@@ -401,8 +433,8 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
         out = {"x": _stream_unfold(x, B), "a": _stream_unfold(a, B),
                "logits": _stream_unfold(logits, B),
                "v": _stream_unfold(v, B), "r": r_u, "done": done_b}
-        return (IALSState(ls_state=ls_T, aip_state=aip_T), frames_T,
-                t_out, out)
+        return (_constrain(IALSState(ls_state=ls_T, aip_state=aip_T)),
+                frames_T, t_out, out)
 
     def observe(state: IALSState):
         B = _batch(state)
@@ -421,15 +453,16 @@ def make_batched_ials(local_env: BatchedLocalEnv, aip_params,
                       fixed_marginal: Optional[float] = None,
                       fixed_marginal_vec=None,
                       stateless: bool = False,
-                      use_horizon_kernel: Optional[bool] = None
-                      ) -> BatchedEnv:
+                      use_horizon_kernel: Optional[bool] = None,
+                      mesh=None) -> BatchedEnv:
     """Single-agent fused rollout engine — ``make_unified_ials`` at its
     A=1 squeeze (kept as the historical entry point)."""
     return make_unified_ials(local_env, aip_params, aip_cfg, n_agents=1,
                              fixed_marginal=fixed_marginal,
                              fixed_marginal_vec=fixed_marginal_vec,
                              stateless=stateless,
-                             use_horizon_kernel=use_horizon_kernel)
+                             use_horizon_kernel=use_horizon_kernel,
+                             mesh=mesh)
 
 
 def make_batched_multi_ials(local_env: BatchedLocalEnv, aip_params,
@@ -437,8 +470,8 @@ def make_batched_multi_ials(local_env: BatchedLocalEnv, aip_params,
                             *, fixed_marginal: Optional[float] = None,
                             fixed_marginal_vec=None,
                             stateless: bool = False,
-                            use_horizon_kernel: Optional[bool] = None
-                            ) -> BatchedEnv:
+                            use_horizon_kernel: Optional[bool] = None,
+                            mesh=None) -> BatchedEnv:
     """Fused Distributed IALS (one IALS + AIP per agent region) —
     ``make_unified_ials`` with the agent axis on (kept as the historical
     entry point). ``aip_params`` leaves are (A, ...) stacked."""
@@ -447,4 +480,5 @@ def make_batched_multi_ials(local_env: BatchedLocalEnv, aip_params,
                              fixed_marginal=fixed_marginal,
                              fixed_marginal_vec=fixed_marginal_vec,
                              stateless=stateless,
-                             use_horizon_kernel=use_horizon_kernel)
+                             use_horizon_kernel=use_horizon_kernel,
+                             mesh=mesh)

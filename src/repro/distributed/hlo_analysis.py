@@ -213,6 +213,9 @@ def analyze(hlo_text: str) -> Dict[str, float]:
     coll_bytes = defaultdict(float)
     coll_counts = defaultdict(float)
     flops = 0.0
+    flops_dot = 0.0
+    flops_elem = 0.0
+    custom_calls = 0.0
     hbm_bytes = 0.0
 
     for cname, comp in comps.items():
@@ -224,13 +227,21 @@ def analyze(hlo_text: str) -> Dict[str, float]:
             res_b, res_e = _type_bytes_elems(op.type_str)
             # ---- flops (count inside fusions too) ----
             if op.kind in ("dot", "convolution"):
-                flops += m * _dot_flops(op, comp)
+                f = m * _dot_flops(op, comp)
+                flops += f
+                flops_dot += f
             elif op.kind in ELEMENTWISE:
                 flops += m * res_e
+                flops_elem += m * res_e
             elif op.kind in ("reduce", "reduce-window"):
                 ob = sum(_type_bytes_elems(comp.types.get(o, ""))[1]
                          for o in op.operands[:1])
                 flops += m * ob
+                flops_elem += m * ob
+            elif op.kind == "custom-call":
+                # opaque to this model (e.g. a Pallas kernel body): count
+                # it so a cell with hidden compute is visible as such
+                custom_calls += m
             # ---- collectives ----
             if op.kind in COLLECTIVES:
                 ob = sum(_type_bytes_elems(comp.types.get(o, ""))[0]
@@ -246,6 +257,9 @@ def analyze(hlo_text: str) -> Dict[str, float]:
 
     return {
         "flops": flops,
+        "flops_dot": flops_dot,
+        "flops_elementwise": flops_elem,
+        "custom_call_count": custom_calls,
         "hbm_bytes": hbm_bytes,
         "collective_bytes": dict(coll_bytes),
         "collective_counts": dict(coll_counts),

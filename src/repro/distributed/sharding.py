@@ -273,3 +273,161 @@ def to_shardings(spec_tree, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# IALS partition rules (the unified whole-horizon engine, core/engine.py)
+# ---------------------------------------------------------------------------
+#
+# The engine's state layout is fixed by construction: every state leaf is
+# (B, ...) single-agent or (B, A, ...) multi-agent (``_unflat`` guarantees
+# the agent axis is dim 1 on every leaf), PPO rollout-state leaves follow
+# the same convention (frames (B, [A,] k, d), t_in_ep (B,)), and streamed
+# leaves prepend a horizon axis ((T, B, [A,] ...)). The rules:
+#
+# - env lanes (B) shard over the data-parallel axes ("pod", "data"), plus
+#   "model" when the agent axis leaves it idle — rollouts are
+#   embarrassingly parallel over lanes, so every divisible mesh axis is a
+#   free throughput multiplier;
+# - the agent axis (A) and the stacked per-agent AIP weights (leading
+#   (A, ...) leaves) co-shard over "model": each device owns its agents'
+#   lanes AND those agents' weights, so the per-agent weight indexing at
+#   the kernel boundary stays local;
+# - PPO policy/optimizer params replicate (pure DP — gradients all-reduce).
+#
+# Every rule degrades to replication when a dim does not divide its axis
+# (A ∈ {25, 36} on a 16-wide "model" axis replicates; A=36 on 2 shards).
+
+IALS_LANE_AXES = ("pod", "data")
+IALS_AGENT_AXIS = "model"
+
+
+def mesh_size(mesh) -> int:
+    """Device count of a Mesh (duck-typed: only ``.shape`` consulted)."""
+    n = 1
+    for v in dict(mesh.shape).values():
+        n *= v
+    return n
+
+
+def ials_lane_axes(batch: int, n_agents: int, mesh: Mesh):
+    """-> (lane_axes, agent_axis | None): which mesh axes the env-lane dim
+    and the agent dim take, with divisibility fallback. The two are
+    decided together so lanes can absorb an idle "model" axis."""
+    agent_ax = None
+    if (n_agents > 1 and IALS_AGENT_AXIS in mesh.axis_names
+            and mesh.shape[IALS_AGENT_AXIS] > 1
+            and n_agents % mesh.shape[IALS_AGENT_AXIS] == 0):
+        agent_ax = IALS_AGENT_AXIS
+    lane = []
+    rem = batch
+    cand = IALS_LANE_AXES + (() if agent_ax else (IALS_AGENT_AXIS,))
+    for a in cand:
+        if a in mesh.axis_names and mesh.shape[a] > 1 \
+                and rem % mesh.shape[a] == 0:
+            lane.append(a)
+            rem //= mesh.shape[a]
+    return tuple(lane), agent_ax
+
+
+def _lead(axes):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _pspec(specs, ndim) -> P:
+    """Pad to ndim, then trim trailing Nones (a fully-replicated leaf is
+    the canonical P())."""
+    specs = list(specs) + [None] * (ndim - len(specs))
+    while specs and specs[-1] is None:
+        specs.pop()
+    return P(*specs)
+
+
+def ials_state_pspec(leaf, mesh: Mesh, n_agents: int) -> P:
+    """One engine-state / rollout-state leaf -> PartitionSpec. Dim 0 is
+    the env-lane (B) dim; dim 1 is the agent dim when the leaf carries it
+    (multi-agent leaves have ``shape[1] == n_agents`` by the engine's
+    ``_unflat`` layout); everything else replicates."""
+    shape = getattr(leaf, "shape", ())
+    if len(shape) == 0:
+        return P()
+    lane, agent_ax = ials_lane_axes(shape[0], n_agents, mesh)
+    specs = [_lead(lane)]
+    if (n_agents > 1 and len(shape) >= 2 and shape[1] == n_agents
+            and agent_ax is not None):
+        specs.append(agent_ax)
+    return _pspec(specs, len(shape))
+
+
+def ials_state_specs(state, mesh: Mesh, n_agents: int = 1):
+    """PartitionSpec pytree for an engine ``IALSState`` (or a PPO
+    ``RolloutState`` — any pytree following the (B, [A,] ...) layout)."""
+    return jax.tree_util.tree_map(
+        lambda l: ials_state_pspec(l, mesh, n_agents), state)
+
+
+def ials_stream_pspec(leaf, mesh: Mesh, batch: int, n_agents: int) -> P:
+    """A streamed (T, B, [A,] ...) leaf (actions, Gumbel noise, bulk env
+    noise, T-stacked reset states): time replicated, then the state rule
+    shifted one dim right."""
+    shape = getattr(leaf, "shape", ())
+    if len(shape) <= 1:
+        return P()
+    lane, agent_ax = ials_lane_axes(batch, n_agents, mesh)
+    specs = [None, _lead(lane) if shape[1] == batch else None]
+    if (n_agents > 1 and len(shape) >= 3 and shape[2] == n_agents
+            and agent_ax is not None and shape[1] == batch):
+        specs.append(agent_ax)
+    return _pspec(specs, len(shape))
+
+
+def ials_stream_specs(tree, mesh: Mesh, batch: int, n_agents: int = 1):
+    return jax.tree_util.tree_map(
+        lambda l: ials_stream_pspec(l, mesh, batch, n_agents), tree)
+
+
+def ials_aip_param_specs(params, mesh: Mesh, n_agents: int = 1,
+                         batch: int = 0):
+    """Stacked per-agent AIP weights co-shard with the agent axis: each
+    (A, ...) leaf puts A on the same axis the state's agent dim took
+    (replicated when A does not divide). Single-agent AIPs replicate."""
+    _, agent_ax = ials_lane_axes(batch or 1, n_agents, mesh)
+
+    def spec(leaf):
+        shape = getattr(leaf, "shape", ())
+        if (n_agents > 1 and len(shape) >= 1 and shape[0] == n_agents
+                and agent_ax is not None):
+            return _pspec([agent_ax], len(shape))
+        return P()
+
+    return jax.tree_util.tree_map(spec, params)
+
+
+def ials_replicated_specs(params):
+    """PPO policy / optimizer params: replicated everywhere (pure DP)."""
+    return jax.tree_util.tree_map(lambda _: P(), params)
+
+
+def constrain_ials_state(state, mesh: Mesh, n_agents: int = 1):
+    """``with_sharding_constraint`` an engine/rollout state onto the IALS
+    rules — a no-op on a trivial (size-1) mesh, so the single-device
+    program is bitwise-unchanged."""
+    if mesh is None or mesh_size(mesh) == 1:
+        return state
+    return jax.tree_util.tree_map(
+        lambda l: jax.lax.with_sharding_constraint(
+            l, NamedSharding(mesh, ials_state_pspec(l, mesh, n_agents))),
+        state)
+
+
+def shard_ials_state(state, mesh: Mesh, n_agents: int = 1):
+    """``device_put`` an already-materialized state across the mesh (the
+    eager-side twin of ``constrain_ials_state``)."""
+    if mesh is None or mesh_size(mesh) == 1:
+        return state
+    return jax.tree_util.tree_map(
+        lambda l: jax.device_put(
+            l, NamedSharding(mesh, ials_state_pspec(l, mesh, n_agents))),
+        state)

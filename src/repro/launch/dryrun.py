@@ -5,10 +5,26 @@ For one (arch, shape, mesh) cell:
   NamedShardings -> .compile() -> memory_analysis + cost_analysis + the
   loop-corrected HLO collective/flops analysis -> JSON to results/dryrun/.
 
+Two cell families share that pipeline:
+
+- the LM demo cells (``--arch/--shape``, the original harness);
+- the IALS cells (``--ials``): THIS repo's real whole-horizon programs —
+  ``aip_rollout_multi`` / ``fnn_rollout`` (the engine's fused horizon
+  rollout, GRU / FNN backbone), ``policy_rollout`` (the
+  actor-in-the-loop dispatch) and the full PPO ``train_iteration`` —
+  lowered AOT at representative shapes (A in {1, 25, 36}, B sweeps,
+  both domains x both backbones) with inputs sharded under the IALS
+  partition rules of ``distributed/sharding.py``. The committed
+  roofline artifacts (``benchmarks/roofline_report.py``) are built from
+  these cells.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
       --shape train_4k --mesh pod1
   PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+  PYTHONPATH=src python -m repro.launch.dryrun --ials all --mesh pod1
+  PYTHONPATH=src python -m repro.launch.dryrun --ials policy_rollout \
+      --domain traffic --n-agents 25 --batch 64 --horizon 128 --mesh pod1
 """
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS") or
@@ -131,12 +147,284 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
     return out
 
 
+# ---------------------------------------------------------------------------
+# IALS cells: the repo's real whole-horizon programs
+# ---------------------------------------------------------------------------
+
+IALS_PROGRAMS = ("aip_rollout_multi", "fnn_rollout", "policy_rollout",
+                 "train_iteration")
+
+# (program, domain, backbone, A, B, T, mesh) — the committed sweep:
+# every program, A in {1, 25, 36} (full 5x5 traffic grid / 6x6 warehouse
+# floor), a B sweep, both domains, both backbones, pod1 + pod2. B is
+# picked divisible by the mesh data axes (16 on pod1, 2x16 on pod2).
+IALS_SWEEP = [
+    ("aip_rollout_multi", "traffic", "gru", 25, 64, 128, "pod1"),
+    ("aip_rollout_multi", "warehouse", "gru", 36, 64, 128, "pod1"),
+    ("aip_rollout_multi", "warehouse", "gru", 1, 512, 128, "pod1"),
+    ("fnn_rollout", "traffic", "fnn", 1, 512, 128, "pod1"),
+    ("fnn_rollout", "traffic", "fnn", 25, 64, 128, "pod1"),
+    ("fnn_rollout", "warehouse", "fnn", 36, 64, 128, "pod1"),
+    ("policy_rollout", "traffic", "fnn", 25, 64, 128, "pod1"),
+    ("policy_rollout", "warehouse", "gru", 36, 64, 128, "pod1"),
+    ("train_iteration", "traffic", "fnn", 1, 256, 128, "pod1"),
+    ("train_iteration", "warehouse", "gru", 1, 256, 128, "pod1"),
+    ("aip_rollout_multi", "warehouse", "gru", 36, 64, 128, "pod2"),
+    ("policy_rollout", "traffic", "fnn", 25, 64, 128, "pod2"),
+]
+
+
+def _ials_mesh(mesh_name: str):
+    """pod1/pod2 = the production meshes; "host" = whatever devices the
+    forced host platform exposes (the CI smoke runs on 8)."""
+    import jax
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    if mesh_name == "host":
+        n = len(jax.devices())
+        return make_host_mesh(model=2 if n % 2 == 0 and n > 1 else 1)
+    return make_production_mesh(multi_pod=(mesh_name == "pod2"))
+
+
+def _ials_model_flops(program: str, acfg, pcfg, B: int, A: int,
+                      T: int) -> float:
+    """Analytic useful-FLOP lower bound: the matmul flops the modeled
+    networks MUST do (2*m*k*n per GEMM), times lanes x ticks. Elementwise
+    tick work and the LS transition are excluded, so the ratio reported
+    against the HLO count is conservative."""
+    H = acfg.hidden
+    if acfg.kind == "gru":
+        f_aip = 2.0 * (acfg.d_in * 3 * H + H * 3 * H + H * acfg.n_out)
+    else:
+        f_aip = 2.0 * (acfg.stack * acfg.d_in * H + H * H
+                       + H * acfg.n_out)
+    lanes = float(T) * B * A
+    if program in ("aip_rollout_multi", "fnn_rollout"):
+        return lanes * f_aip
+    Hp = pcfg.hidden
+    f_pol = 2.0 * (pcfg.frame_stack * pcfg.obs_dim * Hp + Hp * Hp
+                   + Hp * (pcfg.n_actions + 1))
+    if program == "policy_rollout":
+        return lanes * (f_aip + f_pol)
+    # train_iteration: the acting rollout plus epochs x (fwd + bwd ~ 3x
+    # fwd) policy passes over every collected sample
+    return lanes * (f_aip + f_pol) + pcfg.epochs * lanes * 3.0 * f_pol
+
+
+def run_ials_cell(program: str, domain: str, backbone: str, n_agents: int,
+                  batch: int, horizon: int, mesh_name: str) -> dict:
+    """Lower one IALS whole-horizon program AOT with IALS-rule-sharded
+    inputs on a simulated mesh, and run the roofline pipeline on it."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import engine, influence
+    from repro.distributed import sharding as shd
+    from repro.distributed.hlo_analysis import analyze, roofline
+    from repro.envs.traffic import (TrafficConfig,
+                                    make_batched_local_traffic_env)
+    from repro.envs.warehouse import (WarehouseConfig,
+                                      make_batched_local_warehouse_env)
+    from repro.rl import ppo
+
+    if program not in IALS_PROGRAMS:
+        raise SystemExit(f"unknown IALS program {program!r} "
+                         f"(one of {IALS_PROGRAMS})")
+    if program == "aip_rollout_multi" and backbone != "gru":
+        backbone = "gru"          # the GRU-backbone horizon dispatch
+    if program == "fnn_rollout" and backbone != "fnn":
+        backbone = "fnn"
+    A, B, T = n_agents, batch, horizon
+    shape_name = f"{domain}_{backbone}_A{A}_B{B}_T{T}"
+    arch = f"ials_{program}"
+
+    if domain == "traffic":
+        bls, frame_stack = make_batched_local_traffic_env(
+            TrafficConfig()), 1
+    else:
+        bls, frame_stack = make_batched_local_warehouse_env(
+            WarehouseConfig()), 8
+    acfg = influence.AIPConfig(
+        kind=backbone, d_in=bls.spec.dset_dim, n_out=bls.spec.n_influence,
+        hidden=64, stack=8 if backbone == "fnn" else 1)
+
+    mesh = _ials_mesh(mesh_name)
+    n_chips = int(mesh.devices.size)
+    t0 = time.time()
+
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if A > 1:
+        aip_shapes = jax.eval_shape(
+            lambda ks: jax.vmap(lambda k: influence.init_aip(acfg, k))(ks),
+            jax.ShapeDtypeStruct((A, 2), jnp.uint32))
+    else:
+        aip_shapes = jax.eval_shape(
+            lambda k: influence.init_aip(acfg, k), key_s)
+
+    def sds(tree, specs):
+        return jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            tree, specs)
+
+    # forced kernel route: on CPU the ops layer dispatches the stacked
+    # oracle scans — the identical-math pure-XLA twin of the TPU Pallas
+    # kernels, so the lowered HLO is analyzable (a Pallas custom-call
+    # would be opaque; see the roofline contract in docs/ARCHITECTURE.md)
+    def build_engine(aip, *, kernel=True):
+        return engine.make_unified_ials(
+            bls, aip, acfg, n_agents=A, use_horizon_kernel=kernel,
+            mesh=mesh)
+
+    env0 = build_engine(aip_shapes)
+    state_shapes = jax.eval_shape(lambda k: env0.reset(k, B), key_s)
+
+    aip_in = sds(aip_shapes, shd.ials_aip_param_specs(
+        aip_shapes, mesh, A, batch=B))
+    state_in = sds(state_shapes, shd.ials_state_specs(
+        state_shapes, mesh, A))
+    rep = lambda t: sds(t, jax.tree_util.tree_map(lambda _: P(), t))
+    n_params = sum(int(l.size) for l in
+                   jax.tree_util.tree_leaves(aip_shapes))
+
+    if program in ("aip_rollout_multi", "fnn_rollout"):
+        act_shape = (T, B, A) if A > 1 else (T, B)
+        act_s = jax.ShapeDtypeStruct(act_shape, jnp.int32)
+        actions_in = sds(act_s, shd.ials_stream_pspec(act_s, mesh, B, A))
+        keys_in = rep(jax.ShapeDtypeStruct((T, 2), jnp.uint32))
+
+        def f(aip, state, actions, keys):
+            return build_engine(aip).rollout(state, actions, keys)
+
+        lowered = jax.jit(f).lower(aip_in, state_in, actions_in, keys_in)
+    else:
+        pcfg = ppo.PPOConfig(
+            obs_dim=bls.spec.obs_dim, n_actions=bls.spec.n_actions,
+            frame_stack=frame_stack, n_envs=B, rollout_len=T,
+            episode_len=T, n_agents=A)
+        pol_shapes = jax.eval_shape(
+            lambda k: ppo.init_policy(pcfg, k), key_s)
+        rs_shapes = jax.eval_shape(
+            lambda k: ppo.init_rollout_state(env0, pcfg, k), key_s)
+        pol_in = sds(pol_shapes, shd.ials_replicated_specs(pol_shapes))
+        rs_in = sds(rs_shapes, shd.ials_state_specs(rs_shapes, mesh, A))
+        key_in = rep(key_s)
+        n_params += sum(int(l.size) for l in
+                        jax.tree_util.tree_leaves(pol_shapes))
+
+        if program == "policy_rollout":
+            def f(aip, pol, rs, key):
+                return ppo.rollout(build_engine(aip), pcfg, pol, rs, key)
+
+            lowered = jax.jit(f).lower(aip_in, pol_in, rs_in, key_in)
+        else:                     # train_iteration
+            opt = ppo.make_optimizer(pcfg)
+            ost_shapes = jax.eval_shape(opt.init, pol_shapes)
+            ost_in = sds(ost_shapes,
+                         shd.ials_replicated_specs(ost_shapes))
+
+            def f(aip, pol, ost, rs, key):
+                # the default (scan) route: the program PPO trains with
+                it = ppo.train_iteration_fn(
+                    build_engine(aip, kernel=None), pcfg, opt, mesh=mesh)
+                return it(pol, ost, rs, key)
+
+            lowered = jax.jit(f, donate_argnums=(1, 2, 3)).lower(
+                aip_in, pol_in, ost_in, rs_in, key_in)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    hlo = analyze(compiled.as_text())
+    model_flops = _ials_model_flops(
+        program, acfg, pcfg if program in ("policy_rollout",
+                                           "train_iteration") else None,
+        B, A, T)
+    rf = roofline(hlo, n_chips, model_flops)
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "family": "ials", "program": program,
+        "domain": domain, "backbone": backbone, "n_agents": A,
+        "batch": B, "horizon": T, "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params_total": n_params, "params_active": n_params,
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        },
+        "cost_analysis": {"flops_body_once": ca.get("flops", 0.0),
+                          "bytes_body_once": ca.get("bytes accessed",
+                                                    0.0)},
+        "hlo": hlo,
+        "roofline": rf,
+    }
+
+
+def _ials_cell_filename(program, domain, backbone, A, B, T, mesh) -> str:
+    return (f"ials_{program}__{domain}_{backbone}_A{A}_B{B}_T{T}"
+            f"__{mesh}.json")
+
+
+def _ials_sweep(args):
+    """Run the committed IALS sweep, one subprocess per cell (isolates
+    compiles; a crashed cell records an error instead of killing the
+    sweep)."""
+    for prog, dom, bk, A, B, T, mesh in IALS_SWEEP:
+        if args.mesh == "host":
+            mesh = "host"         # CI smoke: every cell on the host mesh
+        elif args.mesh == "pod2" and mesh != "pod2":
+            continue              # explicit pod2-only rerun
+        # --mesh pod1 (default) / both: the sweep's own per-row meshes
+        fn = RESULTS / _ials_cell_filename(prog, dom, bk, A, B, T, mesh)
+        if fn.exists() and not args.force:
+            print(f"skip (cached): {fn.name}")
+            continue
+        print(f"=== ials {prog} {dom} {bk} A{A} B{B} T{T} {mesh} ===",
+              flush=True)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--ials", prog, "--domain", dom, "--backbone", bk,
+               "--n-agents", str(A), "--batch", str(B),
+               "--horizon", str(T), "--mesh", mesh]
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=7200)
+        print(r.stdout[-2000:])
+        if r.returncode != 0:
+            print("FAILED:", r.stderr[-3000:])
+            fn.write_text(json.dumps({
+                "arch": f"ials_{prog}", "family": "ials",
+                "shape": f"{dom}_{bk}_A{A}_B{B}_T{T}", "mesh": mesh,
+                "status": "error", "stderr": r.stderr[-3000:]}))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
-    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--mesh", default="pod1",
+                    choices=["pod1", "pod2", "both", "host"])
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ials", default=None, metavar="PROGRAM",
+                    help="IALS cell family: one of "
+                         f"{', '.join(IALS_PROGRAMS)}, or 'all' for the "
+                         "committed sweep")
+    ap.add_argument("--domain", default="traffic",
+                    choices=["traffic", "warehouse"])
+    ap.add_argument("--backbone", default=None, choices=["gru", "fnn"])
+    ap.add_argument("--n-agents", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--horizon", type=int, default=128)
     ap.add_argument("--overrides", default=None,
                     help="JSON dict of ArchConfig overrides (hillclimb)")
     ap.add_argument("--tag", default="",
@@ -144,6 +432,30 @@ def main():
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.ials == "all":
+        _ials_sweep(args)
+        return
+    if args.ials:
+        backbone = args.backbone or (
+            "gru" if args.domain == "warehouse" else "fnn")
+        mesh = "pod1" if args.mesh == "both" else args.mesh
+        res = run_ials_cell(args.ials, args.domain, backbone,
+                            args.n_agents, args.batch, args.horizon, mesh)
+        fn = RESULTS / _ials_cell_filename(
+            args.ials, args.domain, res["backbone"], args.n_agents,
+            args.batch, args.horizon, mesh)
+        fn.write_text(json.dumps(res, indent=1))
+        print(json.dumps({k: res[k] for k in
+                          ("arch", "shape", "mesh", "status")}))
+        r = res["roofline"]
+        print(f"  compile={res['compile_s']}s  "
+              f"peak_mem/dev="
+              f"{res['memory']['peak_bytes_per_device']/2**20:.2f}MiB  "
+              f"t_comp={r['t_compute_s']:.4f}s "
+              f"t_mem={r['t_memory_s']:.4f}s "
+              f"t_coll={r['t_collective_s']:.4f}s  -> {r['bottleneck']}")
+        return
 
     if args.all:
         _sweep(args)

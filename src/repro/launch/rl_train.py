@@ -208,12 +208,13 @@ def main(argv=None):
                          n_agents=args.n_agents,
                          fast_gates=not args.exact_policy_tanh)
     key, k0, k1 = jax.random.split(key, 3)
+    mesh = (make_host_mesh()
+            if len(jax.devices()) > 1
+            and args.n_envs % len(jax.devices()) == 0 else None)
     params = ppo.init_policy(pcfg, k0)
-    opt, iteration = ppo.make_train_iteration(env, pcfg)
+    opt, iteration = ppo.make_train_iteration(env, pcfg, mesh=mesh)
     ost = opt.init(params)
-    rs = ppo.init_rollout_state(env, pcfg, k1)
-    if len(jax.devices()) > 1 and args.n_envs % len(jax.devices()) == 0:
-        rs = ppo.shard_rollout(rs, make_host_mesh())
+    rs = ppo.init_rollout_state(env, pcfg, k1, mesh=mesh)
 
     steps_per_iter = args.n_envs * args.rollout_len * max(args.n_agents, 1)
     history = []

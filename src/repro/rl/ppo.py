@@ -155,34 +155,33 @@ def _stack_obs(frames):
     return frames.reshape(frames.shape[:-2] + (-1,))
 
 
-def init_rollout_state(env, cfg: PPOConfig, key) -> RolloutState:
+def init_rollout_state(env, cfg: PPOConfig, key,
+                       mesh=None) -> RolloutState:
     benv = as_batched(env)
     env_state = benv.reset(key, cfg.n_envs)
     obs = benv.observe(env_state)
     frames = jnp.zeros((cfg.n_envs,) + cfg.agent_shape
                        + (cfg.frame_stack, cfg.obs_dim))
     frames = frames.at[..., -1, :].set(obs)
-    return RolloutState(env_state=env_state, frames=frames,
-                        t_in_ep=jnp.zeros((cfg.n_envs,), jnp.int32))
+    rs = RolloutState(env_state=env_state, frames=frames,
+                      t_in_ep=jnp.zeros((cfg.n_envs,), jnp.int32))
+    return shard_rollout(rs, mesh, n_agents=cfg.n_agents)
 
 
-def shard_rollout(rs: RolloutState, mesh) -> RolloutState:
-    """Place the env batch on the mesh ``data`` axis (n_envs must divide).
+def shard_rollout(rs: RolloutState, mesh,
+                  n_agents: int = 1) -> RolloutState:
+    """Place the rollout state on the mesh under the IALS partition rules
+    (``distributed/sharding.py``): env lanes over the data axes, the
+    agent axis (frames' and the engine state's dim 1) co-sharded over
+    "model" when it divides, replication fallback otherwise.
 
     Under jit the computation follows the input sharding, so the whole
     rollout (env steps included) executes data-parallel across devices.
-    No-op when the mesh has a single data device."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    if mesh is None or mesh.shape.get("data", 1) == 1:
+    No-op for ``mesh=None`` or a single-device mesh."""
+    if mesh is None:
         return rs
-    n_data = mesh.shape["data"]
-
-    def put(x):
-        spec = (P("data") if x.ndim >= 1 and x.shape[0] % n_data == 0
-                else P())
-        return jax.device_put(x, NamedSharding(mesh, spec))
-
-    return jax.tree_util.tree_map(put, rs)
+    from repro.distributed import sharding as shd
+    return shd.shard_ials_state(rs, mesh, n_agents)
 
 
 def _split_tick_keys(key, T: int):
@@ -367,14 +366,25 @@ def ppo_loss(params, cfg: PPOConfig, mb):
     return total, {"pg_loss": pg, "v_loss": v_loss, "entropy": ent}
 
 
-def make_train_iteration(env, cfg: PPOConfig):
-    opt = adamw(cfg.lr, weight_decay=0.0, b2=0.999, clip_norm=0.5)
+def make_optimizer(cfg: PPOConfig):
+    """The PPO optimizer — one definition shared by the jitted trainer
+    and the AOT dry-run lowering (launch/dryrun.py)."""
+    return adamw(cfg.lr, weight_decay=0.0, b2=0.999, clip_norm=0.5)
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+
+def train_iteration_fn(env, cfg: PPOConfig, opt, mesh=None):
+    """The pure (un-jitted) one-PPO-iteration function —
+    ``(params, opt_state, rs, key) -> (params, opt_state, rs, metrics)``.
+    ``make_train_iteration`` jits it with donation; the dry-run harness
+    lowers it AOT with explicitly sharded arguments instead. ``mesh``
+    pins the rollout state to the IALS partition rules at iteration entry
+    (params and optimizer state stay replicated — pure DP, gradients
+    all-reduce); ``mesh=None`` adds no constraint ops."""
+
     def train_iteration(params, opt_state, rs: RolloutState, key):
-        # donation audit: params / opt_state / rollout state update in
-        # place every iteration; the key is tiny and freshly split by the
-        # caller, so it stays undonated
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            rs = shd.constrain_ials_state(rs, mesh, cfg.n_agents)
         k_roll, k_upd = jax.random.split(key)
         rs, batch, v_last = rollout(env, cfg, params, rs, k_roll)
         adv, ret = gae(batch, v_last, cfg.gamma, cfg.lam)
@@ -417,6 +427,16 @@ def make_train_iteration(env, cfg: PPOConfig):
                    "mean_value": batch["v"].mean()}
         return params, opt_state, rs, metrics
 
+    return train_iteration
+
+
+def make_train_iteration(env, cfg: PPOConfig, mesh=None):
+    opt = make_optimizer(cfg)
+    # donation audit: params / opt_state / rollout state update in place
+    # every iteration; the key is tiny and freshly split by the caller,
+    # so it stays undonated
+    train_iteration = jax.jit(train_iteration_fn(env, cfg, opt, mesh),
+                              donate_argnums=(0, 1, 2))
     return opt, train_iteration
 
 

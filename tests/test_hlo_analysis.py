@@ -80,6 +80,25 @@ def test_roofline_terms_and_bottleneck():
     assert abs(r["mfu_upper_bound"] - 0.5) < 1e-6
 
 
+def test_flops_breakdown_partitions_total():
+    """flops_dot + flops_elementwise == flops, with the matmuls dominant
+    and custom_call_count zero on a pure-XLA program."""
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = lax.scan(body, x, None, length=10)
+        return h
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    res = analyze(jax.jit(f).lower(x, w).compile().as_text())
+    assert res["flops"] == res["flops_dot"] + res["flops_elementwise"]
+    dot_iter = 2 * 128 * 256 * 256
+    assert abs(res["flops_dot"] - 10 * dot_iter) / (10 * dot_iter) < 0.01
+    assert 0 < res["flops_elementwise"] < res["flops_dot"]
+    assert res["custom_call_count"] == 0
+
+
 def test_parse_hlo_computations():
     comps = parse_hlo(_FAKE_HLO)
     assert "main" in comps

@@ -38,12 +38,14 @@ DOCSTRING_TREES = ("src/repro/core", "src/repro/envs", "src/repro/kernels",
 REQUIRED_SNIPPETS = {
     "README.md": (
         "python -m benchmarks.train_throughput",
+        "python -m repro.launch.dryrun --ials",
     ),
     "docs/ARCHITECTURE.md": (
         "kernels/ops.py::policy_rollout",
         "kernels/aip_step.py::policy_rollout",
         "kernels/ref.py::policy_rollout_ref",
         "python -m benchmarks.train_throughput",
+        "python -m repro.launch.dryrun --ials",
     ),
 }
 
