@@ -20,6 +20,17 @@ bench-quick:
 multi-agent-bench:
 	$(PY) -m benchmarks.run --quick --only multi_agent_throughput
 
+# Disaggregated actor/learner fleet: samples/s vs worker count + the
+# fault-resilience (time-to-target with a worker kill) report.
+fleet-bench:
+	$(PY) -m benchmarks.fleet_throughput
+
+# Kill-and-resume end-to-end: SIGTERM a short rl_train mid-run, resume
+# it, and require bitwise-identical final params vs the uninterrupted
+# same-seed run (what the CI fault-smoke job runs).
+fault-smoke:
+	$(PY) tools/ci_fault_smoke.py
+
 # Regression gate: re-measure the throughput benches and fail on a >30%
 # steps/s drop vs the committed results/bench baselines (side-effect-free).
 # Also fails when results/dryrun has zero ok cells (empty roofline).
@@ -34,4 +45,4 @@ dryrun:
 	$(PY) -m benchmarks.run --only roofline_report
 
 .PHONY: test-fast test-all docs-check bench-quick multi-agent-bench \
-	bench-check dryrun
+	fleet-bench fault-smoke bench-check dryrun

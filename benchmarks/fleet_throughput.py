@@ -1,0 +1,194 @@
+"""Fleet tier: disaggregated actor/learner throughput + fault resilience.
+
+Two questions, per domain, about ``distributed/actor_learner.py`` driving
+the fused IALS engine:
+
+1. **Scaling** — aggregate sample production (samples/s = batches produced
+   x n_envs x rollout_len / wall-clock) of the *async* fleet vs worker
+   count. On this single-process CPU container the workers time-share the
+   same cores, so the curve measures harness overhead (queue + param
+   store + staleness gate), not silicon scaling — flat-or-better is the
+   pass shape, and the per-worker rates are the committed regression
+   floors (``fleet_throughput_{domain}.json``, gated by ``--check``).
+
+2. **Fault resilience** — time-to-reward-target of the *deterministic*
+   fleet with and without an injected worker kill
+   (``fault_injection.KillWorker``: the worker loses its rollout state
+   mid-run and restarts). The target is seeded from the committed
+   ``learning_curves_{domain}.json`` IALS curve: its plateau (mean of
+   the last-half evals — the final point alone is a 4-episode draw),
+   with a band of 25% of the first-to-plateau travel (floored at 0.02 —
+   the warehouse curve's travel is small). "Reached" is
+   direction-agnostic — inside the band, or past the target on the
+   approach side — because these curves converge downward on traffic and
+   upward on warehouse. Results go to ``fleet_faults_{domain}.json``
+   (informational; never a regression baseline — wall-clock-to-target is
+   too seeded to gate on).
+
+    PYTHONPATH=src python -m benchmarks.fleet_throughput [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.distributed import actor_learner, fault_injection
+from repro.rl import ppo
+
+from .common import RESULTS_DIR, build_sims, row, save_json
+
+
+def _ppo_cfg(spec, domain: str, n_envs: int, T: int, ep_len: int):
+    return ppo.PPOConfig(obs_dim=spec.obs_dim, n_actions=spec.n_actions,
+                         frame_stack=8 if domain == "warehouse" else 1,
+                         n_envs=n_envs, rollout_len=T, episode_len=ep_len)
+
+
+def _reward_target(domain: str):
+    """-> (target, band, first) from the committed IALS learning curve,
+    or None when no curve is committed (fresh checkout).
+
+    The target is the curve's *plateau* — the mean of its last-half
+    evals — not the single final eval: each committed eval point is only
+    4 episodes, and on the warehouse reward scale (~0.01-0.06) one
+    lucky final draw would set a target no same-compute rerun reaches
+    (measured: an integrated-trainer rerun at the curve's own scale
+    plateaus at 0.01-0.03 while the curve's last point is 0.0605)."""
+    path = RESULTS_DIR / f"learning_curves_{domain}.json"
+    if not path.exists():
+        return None
+    curve = json.loads(path.read_text())["ials"]
+    evals = [r["gs_eval_r"] for r in curve]
+    first = evals[0]
+    tail = evals[len(evals) // 2:]
+    target = sum(tail) / len(tail)
+    band = max(0.25 * abs(target - first), 0.02)
+    return target, band, first
+
+
+def _reached(r: float, target: float, band: float, first: float) -> bool:
+    """Inside the band, or overshot the target coming from ``first``'s
+    side — curves that keep improving past the target still count."""
+    if abs(r - target) <= band:
+        return True
+    return r <= target if first > target else r >= target
+
+
+def _time_to_target(trainer, gs, pcfg, target, band, first, *,
+                    max_updates: int, eval_every: int, key):
+    """Run the fleet until the GS-eval reward reaches the target (or the
+    update budget runs out) -> result dict."""
+    state = trainer.init_state()
+    wallclock = 0.0
+    evals = []
+    while int(state.version) < max_updates:
+        state, info = trainer.run(state, eval_every)
+        wallclock += info["wallclock_s"]
+        v = int(state.version)
+        r = ppo.evaluate(gs, pcfg, state.params,
+                         jax.random.fold_in(key, v), n_episodes=4)
+        evals.append({"update": v, "gs_eval_r": round(float(r), 4)})
+        if _reached(float(r), target, band, first):
+            return {"reached": True, "updates_to_target": v,
+                    "train_wallclock_s": round(wallclock, 2),
+                    "evals": evals}
+    return {"reached": False, "updates_to_target": None,
+            "train_wallclock_s": round(wallclock, 2), "evals": evals}
+
+
+def run(quick: bool = False):
+    out = []
+    n_envs, T = (4, 32) if quick else (8, 64)
+    worker_counts = (1, 2) if quick else (1, 2, 4)
+    n_updates = 3 if quick else 8
+    domains = ["traffic"] if quick else ["traffic", "warehouse"]
+    for domain in domains:
+        key = jax.random.PRNGKey(0)
+        # full-size AIP build matches the committed learning-curves run:
+        # the reward target below was measured with THAT simulator quality
+        sims, *_ = build_sims(domain, key,
+                              collect_episodes=8 if quick else 48,
+                              aip_epochs=2 if quick else 8)
+        env = sims["ials"]
+        cfg = _ppo_cfg(env.spec, domain, n_envs, T, ep_len=T)
+
+        # -- 1. async fleet scaling -----------------------------------
+        rates = {}
+        for w in worker_counts:
+            fcfg = actor_learner.FleetConfig(n_workers=w, queue_size=8,
+                                             max_staleness=4,
+                                             deterministic=False, seed=0)
+            trainer = actor_learner.ActorLearnerTrainer(env, cfg, fcfg)
+            state = trainer.init_state()
+            state, _ = trainer.run(state, 1)       # warmup / compile
+            state, info = trainer.run(state, n_updates)
+            samples = info["produced"] * n_envs * T
+            rate = samples / max(info["wallclock_s"], 1e-9)
+            rates[f"fleet-w{w}"] = rate
+            out.append(row(
+                f"fleet_throughput/{domain}/w{w}",
+                info["wallclock_s"] * 1e6 / max(samples, 1),
+                {"samples_per_s": round(rate),
+                 "updates_per_s": round(
+                     info["updates"] / max(info["wallclock_s"], 1e-9), 2),
+                 "produced": info["produced"],
+                 "dropped": info["dropped"]}))
+        if not quick:
+            # quick-mode rates are not baselines: writing them would
+            # silently corrupt the committed bench-check floors
+            save_json(f"fleet_throughput_{domain}", rates)
+
+        # -- 2. time-to-target with and without a worker kill ---------
+        seeded = _reward_target(domain)
+        if seeded is None:
+            out.append(row(f"fleet_faults/{domain}/skipped", 0.0,
+                           {"reason": "no committed learning curve"}))
+            continue
+        target, band, first = seeded
+        # match the committed curve's training scale so the target is
+        # actually on this run's trajectory
+        fn_envs, fT = (8, 64) if quick else (16, 128)
+        fcfg_det = actor_learner.FleetConfig(n_workers=2, queue_size=8,
+                                             max_staleness=4,
+                                             deterministic=True, seed=2)
+        fcfg_cfg = _ppo_cfg(env.spec, domain, fn_envs, fT, ep_len=128)
+        max_updates = 6 if quick else 24
+        results = {"target": target, "band": band, "first": first}
+        for label, plan in (
+                ("no_fault", None),
+                ("with_fault", fault_injection.FaultPlan.of(
+                    fault_injection.KillWorker(worker_id=1, at_tick=1)))):
+            injector = (fault_injection.FaultInjector(plan)
+                        if plan is not None else None)
+            trainer = actor_learner.ActorLearnerTrainer(
+                env, fcfg_cfg, fcfg_det, injector=injector)
+            res = _time_to_target(trainer, sims["gs"], fcfg_cfg, target,
+                                  band, first, max_updates=max_updates,
+                                  eval_every=2, key=jax.random.PRNGKey(7))
+            if injector is not None:
+                res["kills"] = injector.kills_applied
+            results[label] = res
+            out.append(row(
+                f"fleet_faults/{domain}/{label}", 0.0,
+                {"reached": res["reached"],
+                 "updates_to_target": res["updates_to_target"],
+                 "train_wallclock_s": res["train_wallclock_s"],
+                 "kills": res.get("kills", 0),
+                 "target": round(target, 4), "band": round(band, 4)}))
+        if not quick:
+            save_json(f"fleet_faults_{domain}", results)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

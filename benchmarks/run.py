@@ -14,6 +14,7 @@ Mapping to the paper:
     multi_agent_throughput  Distributed-IALS: N batched IALS vs Python loop
     aip_accuracy          Fig. 3/5 bottom + App. E Eq. 9/10
     learning_curves       Fig. 3/5 top + App. E Fig. 11/12 (F-IALS)
+    fleet_throughput      disaggregated actor/learner scaling + faults
     memory_dependence     Fig. 6 (Theorem 1)
     dset_ablation         App. B / §4.2 (Theorem 2)
     kernel_bench          Pallas kernels vs oracles
@@ -33,6 +34,7 @@ MODULES = [
     "simulator_throughput",
     "multi_agent_throughput",
     "train_throughput",
+    "fleet_throughput",
     "aip_accuracy",
     "dset_ablation",
     "memory_dependence",
@@ -43,7 +45,10 @@ MODULES = [
 # the --check regression gate compares these against the committed files
 CHECK_MODULES = {"simulator_throughput": "sim_throughput_",
                  "multi_agent_throughput": "multi_agent_throughput_",
-                 "train_throughput": "train_throughput_"}
+                 "train_throughput": "train_throughput_",
+                 # fleet_faults_*.json is informational, not a baseline —
+                 # the prefix below deliberately excludes it
+                 "fleet_throughput": "fleet_throughput_"}
 CHECK_TOLERANCE = 0.30
 
 

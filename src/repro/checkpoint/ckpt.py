@@ -72,6 +72,17 @@ def _gc(ckpt_dir: Path, keep: int):
     steps = sorted(all_steps(ckpt_dir))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(ckpt_dir / f"step_{s:09d}", ignore_errors=True)
+    # torn-save debris: a crash mid-write leaves step_X.tmp (or, from a
+    # foreign writer, a step dir without COMMITTED) behind. Those are
+    # never loaded — latest_step only sees COMMITTED — but they would
+    # accumulate forever across crash-restart loops, so each successful
+    # save sweeps them (never touching a committed dir).
+    for p in ckpt_dir.iterdir():
+        torn = (re.fullmatch(r"step_\d+\.tmp", p.name) or
+                (re.fullmatch(r"step_\d+", p.name)
+                 and not (p / "COMMITTED").exists()))
+        if torn:
+            shutil.rmtree(p, ignore_errors=True)
 
 
 def all_steps(ckpt_dir: str | Path):
@@ -89,6 +100,21 @@ def all_steps(ckpt_dir: str | Path):
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     steps = all_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def read_metadata(ckpt_dir: str | Path,
+                  step: Optional[int] = None) -> Dict:
+    """The ``metadata`` dict a committed checkpoint was saved with,
+    without touching the array payload — resume paths read their
+    counters (RNG stream positions, learner version, worker count) from
+    here before deciding what tree structure to restore into."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:09d}"
+    return msgpack.unpackb((d / "meta.msgpack").read_bytes())["user"]
 
 
 def restore(ckpt_dir: str | Path, target: Any, step: Optional[int] = None,

@@ -63,14 +63,26 @@ class TokenPipeline:
 
     def iterator(self, start_step: int = 0, host_id: int = 0,
                  n_hosts: int = 1, prefetch: int = 2) -> Iterator:
-        """Prefetching iterator from ``start_step`` (resume-friendly)."""
+        """Prefetching iterator from ``start_step`` (resume-friendly).
+
+        The producer thread is leak-free: a full queue is waited on with a
+        timeout so the producer re-checks ``stop`` (a producer blocked on a
+        plain ``q.put`` would never observe ``stop.set()`` after the
+        consumer exits), and the ``finally`` drains the queue and joins the
+        thread, so closing the iterator releases the thread immediately."""
         q: queue.Queue = queue.Queue(maxsize=prefetch)
         stop = threading.Event()
 
         def producer():
             step = start_step
             while not stop.is_set():
-                q.put(self.get_batch(step, host_id, n_hosts))
+                batch = self.get_batch(step, host_id, n_hosts)
+                while not stop.is_set():
+                    try:
+                        q.put(batch, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
                 step += 1
 
         t = threading.Thread(target=producer, daemon=True)
@@ -80,6 +92,12 @@ class TokenPipeline:
                 yield q.get()
         finally:
             stop.set()
+            try:                     # unblock a producer mid-put
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=2.0)
 
 
 def write_token_file(path: str | Path, tokens: np.ndarray):

@@ -1,0 +1,395 @@
+"""Disaggregated actor/learner PPO: N rollout workers, one learner.
+
+SRL's scaling study (PAPERS.md) shows the throughput ceiling for deep RL
+at fleet scale comes from decoupling rollout generation from learning and
+tolerating worker churn. This module is that decoupling for the IALS
+training stack: each **worker** drives the fused whole-horizon acting
+program (``rl/ppo.py::rollout`` over the unified engine — the
+``policy_rollout`` kernel route on TPU) and streams trajectory batches,
+tagged ``(worker_id, policy_version, rng_position)``, through a bounded
+queue into a single **learner** that applies the exact PPO update the
+integrated trainer uses (``rl/ppo.py::learner_update_fn`` — shared
+verbatim, so the two trainers are bitwise-interchangeable on identical
+batches).
+
+Staleness contract (the documented drop policy): a batch acted under
+policy version ``p`` arriving when the learner is at version ``v`` has
+staleness ``v - p``. Batches with ``staleness <= max_staleness`` are
+applied — PPO's clipped ratio ``exp(logp_new - logp_behavior)`` *is* the
+importance correction for the version gap (``logp`` in the batch is the
+acting policy's) — and anything staler is dropped and counted, never
+silently averaged in. ``publish_every`` throttles parameter publication,
+which bounds worst-case self-inflicted staleness at
+``publish_every - 1 + queue residence``.
+
+Two schedules, one state:
+
+- ``deterministic=True`` (default): workers produce round-robin in the
+  learner's thread. The whole run is a pure function of
+  ``FleetConfig.seed`` — every key is ``fold_in``-derived from a stream
+  *position* (never a split chain), so a run killed at version k and
+  resumed from a ``FleetState`` checkpoint replays the **bitwise
+  identical** remaining trajectory (tests/test_actor_learner.py pins
+  this against an uninterrupted run).
+- ``deterministic=False``: free-running worker threads (jax ops release
+  the GIL), the throughput mode ``benchmarks/fleet_throughput.py``
+  measures. No bitwise claim — arrival order is wall-clock — but the
+  same staleness/drop/checkpoint machinery applies.
+
+``FleetState`` is the full RL training state — policy params, optimizer
+state, learner version, and per-worker (rollout/env state, RNG stream
+position, restart count) — a plain pytree that round-trips through
+``checkpoint/ckpt.py`` unchanged. ``resume_fleet`` restores it from the
+latest committed checkpoint, *resharding the fleet* when the worker
+count changed: learner state always survives, matching workers keep
+their exact stream positions, new workers initialize deterministically.
+
+Fault injection (``distributed/fault_injection.py``) hooks in at two
+seams: ``before_produce`` (kill/restart a worker — its in-memory rollout
+state is lost and re-initialized from its restart stream) and
+``delay_batch`` (hold a produced batch for n ticks so it ages past
+``max_staleness``). Both are consulted at deterministic points, so a
+faulted run is replayable.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.rl import ppo
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    n_workers: int = 2
+    queue_size: int = 8        # bounded trajectory queue (backpressure)
+    max_staleness: int = 4     # drop batches staler than this many versions
+    publish_every: int = 1     # learner updates between param publications
+    deterministic: bool = True  # round-robin schedule (bitwise-resumable)
+    seed: int = 0
+
+
+class TrajectoryBatch(NamedTuple):
+    worker_id: int
+    policy_version: int
+    rng_position: int
+    batch: Any                 # PPO streams, (T, n_envs, [A,] ...) leaves
+    v_last: Any                # bootstrap values from the acting policy
+
+
+class WorkerState(NamedTuple):
+    rs: Any                    # ppo.RolloutState (env + frames + t_in_ep)
+    rng_position: jax.Array    # () int32: rollouts produced on this stream
+    restarts: jax.Array        # () int32: kill/restart count
+
+
+class FleetState(NamedTuple):
+    params: Any
+    opt_state: Any
+    version: jax.Array         # () int32: learner updates applied
+    tick: jax.Array            # () int32: deterministic scheduler ticks
+    workers: Tuple[WorkerState, ...]
+
+
+class ParamStore:
+    """Versioned, lock-protected publication point between the learner
+    and the workers (threads in async mode; same-thread reads in
+    deterministic mode)."""
+
+    def __init__(self, params, version: int = 0):
+        self._lock = threading.Lock()
+        self._params = params
+        self._version = version
+
+    def publish(self, params, version: int):
+        with self._lock:
+            self._params, self._version = params, version
+
+    def snapshot(self):
+        with self._lock:
+            return self._params, self._version
+
+
+class ActorLearnerTrainer:
+    """The disaggregated trainer. ``env`` is anything PPO can act in —
+    the fused IALS engine is the intended workload. All randomness
+    derives from ``FleetConfig.seed`` via position-based ``fold_in``
+    streams (worker w's rollout p, worker w's restart r, learner update
+    v), never split chains — that is what makes ``FleetState`` a
+    complete description of the run."""
+
+    # fold_in tags for the independent streams
+    _LEARNER, _POLICY, _WORKER, _RESTART = 1, 2, 1000, 2000
+
+    def __init__(self, env, cfg: ppo.PPOConfig, fleet: FleetConfig,
+                 injector=None):
+        self.env = env
+        self.cfg = cfg
+        self.fleet = fleet
+        self.injector = injector
+        self._root = jax.random.PRNGKey(fleet.seed)
+        self.opt = ppo.make_optimizer(cfg)
+        # workers all run the same acting program; no donation — in async
+        # mode the ParamStore's snapshot must outlive the learner update
+        self._produce = jax.jit(
+            lambda params, rs, key: ppo.rollout(env, cfg, params, rs, key))
+        self._update = jax.jit(ppo.learner_update_fn(cfg, self.opt))
+
+    # -- RNG streams (positions, not chains) ---------------------------
+    def _worker_key(self, w: int, position: int):
+        return jax.random.fold_in(
+            jax.random.fold_in(self._root, self._WORKER + w), position)
+
+    def _restart_key(self, w: int, restarts: int):
+        return jax.random.fold_in(
+            jax.random.fold_in(self._root, self._RESTART + w), restarts)
+
+    def _learner_key(self, version: int):
+        return jax.random.fold_in(
+            jax.random.fold_in(self._root, self._LEARNER), version)
+
+    # -- state construction --------------------------------------------
+    def _init_worker(self, w: int, restarts: int = 0) -> WorkerState:
+        rs = ppo.init_rollout_state(self.env, self.cfg,
+                                    self._restart_key(w, restarts))
+        return WorkerState(rs=rs, rng_position=jnp.int32(0),
+                           restarts=jnp.int32(restarts))
+
+    def init_state(self) -> FleetState:
+        params = ppo.init_policy(
+            self.cfg, jax.random.fold_in(self._root, self._POLICY))
+        return FleetState(
+            params=params, opt_state=self.opt.init(params),
+            version=jnp.int32(0), tick=jnp.int32(0),
+            workers=tuple(self._init_worker(w)
+                          for w in range(self.fleet.n_workers)))
+
+    def state_template(self, n_workers: Optional[int] = None) -> FleetState:
+        """A FleetState with ``n_workers`` worker slots (default: this
+        fleet's) — the restore target for checkpoints written by a fleet
+        of that size."""
+        n = self.fleet.n_workers if n_workers is None else n_workers
+        params = ppo.init_policy(
+            self.cfg, jax.random.fold_in(self._root, self._POLICY))
+        return FleetState(
+            params=params, opt_state=self.opt.init(params),
+            version=jnp.int32(0), tick=jnp.int32(0),
+            workers=tuple(self._init_worker(min(w, self.fleet.n_workers - 1)
+                                            if self.fleet.n_workers else 0)
+                          for w in range(n)))
+
+    # -- the produce step (shared by both schedules) --------------------
+    def _produce_one(self, w: int, wstate: WorkerState, params,
+                     version: int, tick: int):
+        """-> (WorkerState, TrajectoryBatch | None). Consults the
+        injector's kill schedule first: a killed worker loses its rollout
+        state and restarts from its deterministic restart stream, then
+        produces normally (supervisor-with-auto-restart semantics)."""
+        if self.injector is not None and self.injector.should_kill(tick, w):
+            wstate = self._init_worker(w, int(wstate.restarts) + 1)
+        pos = int(wstate.rng_position)
+        rs, batch, v_last = self._produce(params, wstate.rs,
+                                          self._worker_key(w, pos))
+        wstate = wstate._replace(rs=rs, rng_position=jnp.int32(pos + 1))
+        return wstate, TrajectoryBatch(worker_id=w, policy_version=version,
+                                       rng_position=pos, batch=batch,
+                                       v_last=v_last)
+
+    def _apply(self, state: FleetState, item: TrajectoryBatch,
+               stats: dict, history: list):
+        """Staleness gate + learner update; returns the new FleetState
+        (unchanged when the batch is dropped)."""
+        version = int(state.version)
+        staleness = version - item.policy_version
+        if staleness > self.fleet.max_staleness:
+            stats["dropped"] += 1
+            history.append({"version": version, "worker": item.worker_id,
+                            "staleness": staleness, "dropped": True})
+            return state
+        params, opt_state, metrics = self._update(
+            state.params, state.opt_state, item.batch, item.v_last,
+            self._learner_key(version))
+        stats["updates"] += 1
+        history.append({"version": version + 1, "worker": item.worker_id,
+                        "staleness": staleness, "dropped": False,
+                        "loss": float(metrics["loss"]),
+                        "mean_reward": float(metrics["mean_reward"])})
+        return state._replace(params=params, opt_state=opt_state,
+                              version=jnp.int32(version + 1))
+
+    # -- deterministic (round-robin) schedule ---------------------------
+    def _run_deterministic(self, state: FleetState, n_updates: int,
+                           should_stop, stats, history):
+        target = int(state.version) + n_updates
+        workers = list(state.workers)
+        store = ParamStore(state.params, int(state.version))
+        pending: List[Tuple[int, TrajectoryBatch]] = []  # (due_tick, item)
+        # the tick counter lives in FleetState so fault schedules (keyed
+        # on global ticks) and resume both see one monotonic clock
+        # across run() chunks
+        tick = int(state.tick)
+        # ticks are bounded: every tick produces one batch and every
+        # batch is eventually applied or dropped, so the only slack is
+        # drops — cap generously and report if exhausted
+        max_ticks = tick + n_updates * (self.fleet.max_staleness + 4) + 16
+        while int(state.version) < target and tick < max_ticks:
+            if should_stop is not None and should_stop():
+                break
+            w = tick % self.fleet.n_workers
+            params, version = store.snapshot()
+            workers[w], item = self._produce_one(w, workers[w], params,
+                                                 version, tick)
+            stats["produced"] += 1
+            delay = (self.injector.delay_ticks(tick, w)
+                     if self.injector is not None else 0)
+            if delay > 0:
+                stats["delayed"] += 1
+            pending.append((tick + delay, item))
+            # deliver everything due, in FIFO order of due-tick then age
+            pending.sort(key=lambda p: p[0])
+            while pending and pending[0][0] <= tick \
+                    and int(state.version) < target:
+                _, due = pending.pop(0)
+                state = self._apply(state, due, stats, history)
+                if int(state.version) % self.fleet.publish_every == 0:
+                    store.publish(state.params, int(state.version))
+            tick += 1
+        # quiesce: deliver (or drop) anything still in flight so the
+        # returned FleetState is a complete description of the run —
+        # never a batch left in a queue
+        for _, due in sorted(pending, key=lambda p: p[0]):
+            if int(state.version) < target:
+                state = self._apply(state, due, stats, history)
+            else:
+                stats["dropped"] += 1   # delayed past the chunk's end
+        return state._replace(workers=tuple(workers), tick=jnp.int32(tick))
+
+    # -- async (free-running threads) schedule --------------------------
+    def _run_async(self, state: FleetState, n_updates: int, should_stop,
+                   stats, history):
+        target = int(state.version) + n_updates
+        store = ParamStore(state.params, int(state.version))
+        q: queue.Queue = queue.Queue(maxsize=self.fleet.queue_size)
+        stop = threading.Event()
+        workers = list(state.workers)
+        wlock = threading.Lock()
+
+        def worker_loop(w: int):
+            wstate = workers[w]
+            while not stop.is_set():
+                params, version = store.snapshot()
+                # async "ticks" are per-worker produce counts (= the RNG
+                # stream position), so fault plans stay meaningful and
+                # resume-stable without a global clock
+                wstate, item = self._produce_one(
+                    w, wstate, params, version, int(wstate.rng_position))
+                with wlock:
+                    stats["produced"] += 1
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+            with wlock:
+                workers[w] = wstate
+
+        threads = [threading.Thread(target=worker_loop, args=(w,),
+                                    daemon=True)
+                   for w in range(self.fleet.n_workers)]
+        for t in threads:
+            t.start()
+        try:
+            while int(state.version) < target:
+                if should_stop is not None and should_stop():
+                    break
+                try:
+                    item = q.get(timeout=0.2)
+                except queue.Empty:
+                    continue
+                state = self._apply(state, item, stats, history)
+                if int(state.version) % self.fleet.publish_every == 0:
+                    store.publish(state.params, int(state.version))
+        finally:
+            stop.set()
+            try:                     # unblock producers mid-put
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            for t in threads:
+                t.join(timeout=5.0)
+        return state._replace(workers=tuple(workers))
+
+    def run(self, state: FleetState, n_updates: int, *,
+            should_stop: Optional[Callable[[], bool]] = None):
+        """Advance the fleet by ``n_updates`` learner updates ->
+        (FleetState, info). Returns early when ``should_stop()`` goes
+        true (the SIGTERM hook — the caller checkpoints the returned
+        state, which is quiescent: no in-flight batches). ``info`` has
+        ``history`` (one row per applied/dropped batch) and the fleet
+        counters."""
+        stats = {"produced": 0, "updates": 0, "dropped": 0, "delayed": 0}
+        history: list = []
+        t0 = time.perf_counter()
+        run = (self._run_deterministic if self.fleet.deterministic
+               else self._run_async)
+        state = run(state, n_updates, should_stop, stats, history)
+        stats["wallclock_s"] = time.perf_counter() - t0
+        if self.injector is not None:
+            stats["kills"] = self.injector.kills_applied
+        return state, {"history": history, **stats}
+
+    # -- checkpoint plumbing -------------------------------------------
+    def save_metadata(self, state: FleetState) -> dict:
+        return {"n_workers": self.fleet.n_workers,
+                "version": int(state.version),
+                "tick": int(state.tick),
+                "rng_positions": [int(w.rng_position)
+                                  for w in state.workers],
+                "restarts": [int(w.restarts) for w in state.workers]}
+
+
+def resume_fleet(ckpt_dir, trainer: ActorLearnerTrainer,
+                 extra_template=None):
+    """Restore a ``FleetState`` (optionally wrapped with an ``extra``
+    pytree — e.g. the simulator's AIP params) from the latest committed
+    checkpoint, *resharding the fleet* if the worker count changed:
+
+    - same ``n_workers``: exact restore — every worker resumes at its
+      recorded RNG stream position with its exact rollout state (the
+      bitwise-resume path);
+    - different ``n_workers`` (elastic restart): the learner state
+      (params, opt state, version) survives; workers present in the
+      checkpoint keep their streams, new workers initialize from their
+      deterministic restart streams. No bitwise claim across a resize.
+
+    -> (FleetState, extra, start_version) or (None, None, 0) when no
+    committed checkpoint exists.
+    """
+    step = ckpt.latest_step(ckpt_dir)
+    if step is None:
+        return None, None, 0
+    meta = ckpt.read_metadata(ckpt_dir, step)
+    saved_workers = int(meta.get("n_workers", trainer.fleet.n_workers))
+    target = trainer.state_template(saved_workers)
+    if extra_template is not None:
+        target = {"fleet": target, "extra": extra_template}
+    tree, step, _ = ckpt.restore(ckpt_dir, target, step)
+    if extra_template is not None:
+        state, extra = tree["fleet"], tree["extra"]
+    else:
+        state, extra = tree, None
+    n = trainer.fleet.n_workers
+    if saved_workers != n:
+        kept = list(state.workers[:n])
+        fresh = [trainer._init_worker(w) for w in range(len(kept), n)]
+        state = state._replace(workers=tuple(kept + fresh))
+    return state, extra, int(state.version)

@@ -1,0 +1,144 @@
+"""Deterministic fault injection for the disaggregated trainer.
+
+Fleet RL is only as trustworthy as its behavior under churn, and churn
+is miserable to reproduce from real preemptions — so this module makes
+faults *first-class, scheduled events*. A ``FaultPlan`` is a literal
+list of what goes wrong and when, keyed on the trainer's deterministic
+tick counter, which means a faulted run is exactly replayable: the
+fault-injection tests pin the trainer's behavior (restart streams,
+staleness drops, torn-save recovery) bitwise, not statistically.
+
+Three fault families, matching the three seams in
+``distributed/actor_learner.py``:
+
+- ``KillWorker(worker_id, at_tick)`` — consulted by the trainer's
+  ``before-produce`` seam: the worker's in-memory rollout state is
+  discarded and re-initialized from its restart RNG stream (restart
+  count increments), modeling a preempted actor process whose
+  supervisor restarts it.
+- ``DelayBatch(worker_id, at_tick, ticks)`` — the batch produced at
+  that tick is held for ``ticks`` scheduler ticks before delivery,
+  aging it so it arrives staler than it was produced — the way to drive
+  batches past ``max_staleness`` and exercise the drop policy on
+  purpose.
+- ``torn_save(...)`` — not an event but a harness: reconstructs the
+  on-disk layouts a crash mid-``ckpt.save`` can leave behind (tmp-only,
+  missing COMMITTED sentinel, truncated array payload) so tests can
+  assert the COMMITTED contract holds: ``latest_step`` never surfaces a
+  torn checkpoint and ``restore`` falls back to the previous committed
+  one.
+"""
+from __future__ import annotations
+
+import shutil
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.checkpoint import ckpt
+
+
+@dataclass(frozen=True)
+class KillWorker:
+    """Kill worker ``worker_id`` just before it produces at ``at_tick``
+    (its rollout state is lost; the supervisor restarts it immediately)."""
+    worker_id: int
+    at_tick: int
+
+
+@dataclass(frozen=True)
+class DelayBatch:
+    """Hold the batch worker ``worker_id`` produces at ``at_tick`` for
+    ``ticks`` additional scheduler ticks before it reaches the learner."""
+    worker_id: int
+    at_tick: int
+    ticks: int
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    events: Tuple = ()
+
+    @staticmethod
+    def of(*events) -> "FaultPlan":
+        return FaultPlan(events=tuple(events))
+
+
+class FaultInjector:
+    """Stateful view over a ``FaultPlan``: the trainer consults it at
+    its deterministic seams; each event fires at most once and every
+    applied event is logged (``applied``) so tests can assert the plan
+    actually executed, not just that nothing crashed."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._pending: List = list(plan.events)
+        self.applied: List = []
+
+    def _take(self, kind, tick: int, worker_id: int):
+        for ev in self._pending:
+            if (isinstance(ev, kind) and ev.at_tick == tick
+                    and ev.worker_id == worker_id):
+                self._pending.remove(ev)
+                self.applied.append(ev)
+                return ev
+        return None
+
+    def should_kill(self, tick: int, worker_id: int) -> bool:
+        return self._take(KillWorker, tick, worker_id) is not None
+
+    def delay_ticks(self, tick: int, worker_id: int) -> int:
+        ev = self._take(DelayBatch, tick, worker_id)
+        return ev.ticks if ev is not None else 0
+
+    @property
+    def kills_applied(self) -> int:
+        return sum(isinstance(ev, KillWorker) for ev in self.applied)
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending
+
+
+def torn_save(ckpt_dir, step: int, tree, tear: str = "no-commit",
+              metadata=None) -> Path:
+    """Simulate a save killed mid-write. Performs a real ``ckpt.save``
+    into a scratch directory, then reconstructs the torn layout in
+    ``ckpt_dir``:
+
+    - ``"tmp-only"``: the crash hit before the atomic rename —
+      ``step_X.tmp`` exists, no final directory.
+    - ``"no-commit"``: the final directory exists but the COMMITTED
+      sentinel (written last) is missing — e.g. a foreign writer that
+      renamed early.
+    - ``"truncated"``: COMMITTED missing *and* the array payload is cut
+      short — the worst case a hard kill can leave.
+
+    Returns the torn path. The contract under test: ``ckpt.latest_step``
+    must not surface ``step``, ``ckpt.restore`` must fall back to the
+    previous committed checkpoint, and the next successful ``ckpt.save``
+    sweeps the debris.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    scratch = ckpt_dir / f".torn_scratch_{step}"
+    if scratch.exists():
+        shutil.rmtree(scratch)
+    ckpt.save(scratch, step, tree, metadata=metadata)
+    src = scratch / f"step_{step:09d}"
+    (src / "COMMITTED").unlink()
+    if tear == "tmp-only":
+        dst = ckpt_dir / f"step_{step:09d}.tmp"
+    elif tear in ("no-commit", "truncated"):
+        dst = ckpt_dir / f"step_{step:09d}"
+    else:
+        raise ValueError(f"unknown tear mode: {tear!r}")
+    if dst.exists():
+        shutil.rmtree(dst)
+    shutil.move(str(src), str(dst))
+    shutil.rmtree(scratch, ignore_errors=True)
+    if tear == "truncated":
+        npz = dst / "arrays.npz"
+        raw = npz.read_bytes()
+        npz.write_bytes(raw[: max(1, len(raw) // 2)])
+    return dst

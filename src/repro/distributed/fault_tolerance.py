@@ -30,20 +30,44 @@ from repro.checkpoint import ckpt
 # ---------------------------------------------------------------------------
 
 class TrainingGuard:
+    """Preemption-safe step-loop guard.
+
+    SIGTERM flips ``preempted``; the next ``maybe_save`` then flushes a
+    checkpoint and *clears the flag* (a forced save answers the
+    preemption — without clearing, every later step would re-save
+    forever). The previous SIGTERM handler is **chained**, not replaced:
+    whatever the process had installed (another guard, a supervisor's
+    handler) still runs. ``uninstall()`` restores the prior handler for
+    scoped use; drivers that exit on preemption read ``preempted``
+    *before* calling ``maybe_save``."""
+
     def __init__(self, ckpt_dir: str | Path, *, save_every: int = 100,
                  keep: int = 3, install_signal_handler: bool = True):
         self.ckpt_dir = Path(ckpt_dir)
         self.save_every = save_every
         self.keep = keep
         self.preempted = False
+        self._prev_handler = None
+        self._installed = False
         if install_signal_handler:
             try:
-                signal.signal(signal.SIGTERM, self._on_sigterm)
+                self._prev_handler = signal.signal(signal.SIGTERM,
+                                                   self._on_sigterm)
+                self._installed = True
             except ValueError:
                 pass  # not on main thread (tests)
 
     def _on_sigterm(self, signum, frame):
         self.preempted = True
+        if callable(self._prev_handler):
+            self._prev_handler(signum, frame)   # chain, don't swallow
+
+    def uninstall(self):
+        """Restore the SIGTERM handler this guard displaced."""
+        if self._installed:
+            signal.signal(signal.SIGTERM,
+                          self._prev_handler or signal.SIG_DFL)
+            self._installed = False
 
     def resume_or(self, init_fn: Callable, target=None, shardings=None):
         """-> (state, start_step). Restores the latest committed checkpoint
@@ -63,6 +87,7 @@ class TrainingGuard:
         if due:
             ckpt.save(self.ckpt_dir, step, state, metadata=metadata,
                       keep=self.keep)
+            self.preempted = False  # the forced flush answered the signal
         return due
 
 

@@ -103,8 +103,11 @@ def main(argv=None):
             history.append(row)
             print(json.dumps(row))
         if guard is not None:
+            # read the flag BEFORE maybe_save: a successful forced save
+            # clears it (the guard answers the signal once, not forever)
+            preempted = guard.preempted
             saved = guard.maybe_save(step + 1, state)
-            if guard.preempted and saved:
+            if preempted and saved:
                 print("preempted: checkpoint flushed, exiting cleanly")
                 return history
 

@@ -372,21 +372,24 @@ def make_optimizer(cfg: PPOConfig):
     return adamw(cfg.lr, weight_decay=0.0, b2=0.999, clip_norm=0.5)
 
 
-def train_iteration_fn(env, cfg: PPOConfig, opt, mesh=None):
-    """The pure (un-jitted) one-PPO-iteration function —
-    ``(params, opt_state, rs, key) -> (params, opt_state, rs, metrics)``.
-    ``make_train_iteration`` jits it with donation; the dry-run harness
-    lowers it AOT with explicitly sharded arguments instead. ``mesh``
-    pins the rollout state to the IALS partition rules at iteration entry
-    (params and optimizer state stay replicated — pure DP, gradients
-    all-reduce); ``mesh=None`` adds no constraint ops."""
+def learner_update_fn(cfg: PPOConfig, opt):
+    """The pure learner half of a PPO iteration —
+    ``(params, opt_state, batch, v_last, key) -> (params, opt_state,
+    metrics)``: GAE + flatten + minibatch epochs over an already-collected
+    trajectory batch.
 
-    def train_iteration(params, opt_state, rs: RolloutState, key):
-        if mesh is not None:
-            from repro.distributed import sharding as shd
-            rs = shd.constrain_ials_state(rs, mesh, cfg.n_agents)
-        k_roll, k_upd = jax.random.split(key)
-        rs, batch, v_last = rollout(env, cfg, params, rs, k_roll)
+    This is the exact program ``train_iteration`` runs after its rollout
+    (the integrated trainer calls it), split out so the *disaggregated*
+    actor/learner trainer (``distributed/actor_learner.py``) applies the
+    identical update to batches streamed in from rollout workers. PPO's
+    clipped ratio ``exp(logp_new - logp_behavior)`` is computed against
+    the ``logp`` the batch was *acted* with, so a batch produced by a
+    stale policy version is importance-corrected (and clipped) for free —
+    that, plus the fleet's ``max_staleness`` drop policy, is the
+    off-policy correction story (documented in ARCHITECTURE's
+    fault-tolerance contract)."""
+
+    def learner_update(params, opt_state, batch, v_last, key):
         adv, ret = gae(batch, v_last, cfg.gamma, cfg.lam)
         total = batch["a"].size          # T * n_envs * n_agents samples
         flat = {
@@ -421,10 +424,36 @@ def train_iteration_fn(env, cfg: PPOConfig, opt, mesh=None):
             return (params, opt_state), ls.mean()
 
         (params, opt_state), losses = lax.scan(
-            epoch, (params, opt_state), jax.random.split(k_upd, cfg.epochs))
+            epoch, (params, opt_state), jax.random.split(key, cfg.epochs))
         metrics = {"loss": losses.mean(),
                    "mean_reward": batch["r"].mean(),
                    "mean_value": batch["v"].mean()}
+        return params, opt_state, metrics
+
+    return learner_update
+
+
+def train_iteration_fn(env, cfg: PPOConfig, opt, mesh=None):
+    """The pure (un-jitted) one-PPO-iteration function —
+    ``(params, opt_state, rs, key) -> (params, opt_state, rs, metrics)``.
+    ``make_train_iteration`` jits it with donation; the dry-run harness
+    lowers it AOT with explicitly sharded arguments instead. ``mesh``
+    pins the rollout state to the IALS partition rules at iteration entry
+    (params and optimizer state stay replicated — pure DP, gradients
+    all-reduce); ``mesh=None`` adds no constraint ops. The learner half
+    is ``learner_update_fn`` — shared verbatim with the disaggregated
+    actor/learner trainer, so the two trainers apply bitwise-identical
+    updates to identical batches."""
+    learner_update = learner_update_fn(cfg, opt)
+
+    def train_iteration(params, opt_state, rs: RolloutState, key):
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            rs = shd.constrain_ials_state(rs, mesh, cfg.n_agents)
+        k_roll, k_upd = jax.random.split(key)
+        rs, batch, v_last = rollout(env, cfg, params, rs, k_roll)
+        params, opt_state, metrics = learner_update(
+            params, opt_state, batch, v_last, k_upd)
         return params, opt_state, rs, metrics
 
     return train_iteration

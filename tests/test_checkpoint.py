@@ -1,5 +1,6 @@
 """Checkpoint atomicity, roundtrip, keep-N, auto-resume, fault tolerance."""
 import os
+import signal
 from pathlib import Path
 
 import jax
@@ -7,6 +8,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.checkpoint import ckpt
+from repro.distributed import fault_injection as fi
 from repro.distributed.fault_tolerance import (StragglerDetector,
                                                TrainingGuard, elastic_plan)
 
@@ -72,6 +74,66 @@ def test_guard_preemption_flush(tmp_path):
     guard.preempted = True          # as the SIGTERM handler would set
     assert guard.maybe_save(3, _tree())
     assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_guard_clears_preempted_after_flush(tmp_path):
+    """A successful forced save answers the signal exactly once — the
+    flag clears, so later steps do not re-save forever."""
+    guard = TrainingGuard(tmp_path, save_every=1000,
+                          install_signal_handler=False)
+    guard.preempted = True
+    assert guard.maybe_save(3, _tree())
+    assert not guard.preempted
+    assert not guard.maybe_save(4, _tree())     # no longer forced
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_guard_sigterm_chains_and_uninstalls(tmp_path):
+    """Stacked guards both see SIGTERM (the newer handler chains the
+    displaced one), and uninstall() restores exactly what it displaced."""
+    orig = signal.getsignal(signal.SIGTERM)
+    g1 = TrainingGuard(tmp_path / "a")
+    g2 = TrainingGuard(tmp_path / "b")
+    try:
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert g2.preempted and g1.preempted    # chained, not swallowed
+        g1.preempted = g2.preempted = False
+        g2.uninstall()
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert g1.preempted and not g2.preempted
+    finally:
+        g2.uninstall()                          # idempotent
+        g1.uninstall()
+    assert signal.getsignal(signal.SIGTERM) == orig
+
+
+@pytest.mark.parametrize("tear", ["tmp-only", "no-commit", "truncated"])
+def test_torn_saves_never_loaded_and_swept(tmp_path, tear):
+    """The COMMITTED contract under every torn-save layout a crash can
+    leave: the torn step is invisible to latest_step, restore falls back
+    to the previous committed checkpoint, and the next successful save
+    sweeps the debris."""
+    tree = _tree()
+    ckpt.save(tmp_path, 1, tree)
+    torn = fi.torn_save(tmp_path, 2, _tree(seed=9), tear=tear)
+    assert torn.exists()
+    assert ckpt.latest_step(tmp_path) == 1
+    got, step, _ = ckpt.restore(tmp_path, jax.eval_shape(lambda: tree))
+    assert step == 1
+    assert bool((got["params"]["w"] == tree["params"]["w"]).all())
+    ckpt.save(tmp_path, 3, tree)                # sweeps the debris
+    assert not torn.exists()
+    assert ckpt.all_steps(tmp_path) == [1, 3]
+
+
+def test_read_metadata_without_arrays(tmp_path):
+    ckpt.save(tmp_path, 5, _tree(), metadata={"rng_position": 12,
+                                              "n_workers": 3})
+    (tmp_path / "step_000000005" / "arrays.npz").unlink()  # prove no read
+    meta = ckpt.read_metadata(tmp_path)
+    assert meta == {"rng_position": 12, "n_workers": 3}
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_metadata(tmp_path / "empty")
 
 
 def test_straggler_detector_fires_on_sustained_slowdown():

@@ -62,3 +62,16 @@ def test_iterator_resumes_at_step(tmp_path):
     it = p.iterator(start_step=7)
     first = next(it)
     assert np.array_equal(first["tokens"], p.get_batch(7)["tokens"])
+    it.close()
+
+
+def test_iterator_joins_producer_on_close():
+    """Closing the iterator must release the producer thread even while
+    it is blocked on a full prefetch queue (the pre-fix leak: a plain
+    ``q.put`` never observes the stop flag)."""
+    import threading
+    before = threading.active_count()
+    it = TokenPipeline(_cfg()).iterator(prefetch=1)
+    next(it)                   # producer running, queue refilling
+    it.close()                 # GeneratorExit -> finally: drain + join
+    assert threading.active_count() == before

@@ -1,0 +1,119 @@
+"""Kill-and-resume fault smoke (``make fault-smoke``; CI runs it too).
+
+Exercises the fault-tolerance contract (docs/ARCHITECTURE.md §7) with a
+real SIGTERM against a real ``rl_train`` process — the in-process tests
+pin the same property, but only a subprocess proves the signal path,
+the clean-exit flush, and the auto-resume CLI behave end to end:
+
+  1. run a short uninterrupted ``rl_train --ckpt-dir`` to completion
+     (the same-seed oracle);
+  2. launch the identical command against a fresh checkpoint dir, wait
+     for the first training iteration to stream past, SIGTERM it, and
+     require a clean exit that prints the "checkpoint flushed" line;
+  3. re-run that identical command — it must auto-resume from the
+     flushed checkpoint — and require ``final_params_md5`` (and the
+     final GS eval reward) to match the oracle run **bitwise**.
+
+Pure stdlib + the installed package via subprocess; safe for CI (writes
+only under a temp dir, never touches committed baselines).
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# small enough for a CPU CI runner, large enough that the kill lands
+# mid-run: the SIGTERM is sent after the first iteration row appears and
+# the guard flushes at the next iteration boundary (--save-every 1)
+BASE_ARGS = [
+    "--domain", "traffic", "--simulator", "ials", "--iterations", "4",
+    "--eval-every", "100", "--n-envs", "8", "--rollout-len", "8",
+    "--episode-len", "16", "--collect-episodes", "2", "--aip-epochs", "1",
+    "--seed", "4", "--save-every", "1",
+]
+TIMEOUT_S = 900
+
+
+def _cmd(ckpt_dir: Path, out: Path) -> list[str]:
+    return [sys.executable, "-m", "repro.launch.rl_train", *BASE_ARGS,
+            "--ckpt-dir", str(ckpt_dir), "--out", str(out)]
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["PYTHONUNBUFFERED"] = "1"
+    return env
+
+
+def _run_to_completion(ckpt_dir: Path, out: Path) -> dict:
+    subprocess.run(_cmd(ckpt_dir, out), env=_env(), cwd=REPO,
+                   check=True, timeout=TIMEOUT_S)
+    return json.loads(out.read_text())
+
+
+def _run_and_kill(ckpt_dir: Path, out: Path) -> None:
+    """Start the run, SIGTERM it after the first iteration row, and
+    require the clean preemption exit (flush + 'exiting cleanly')."""
+    proc = subprocess.Popen(_cmd(ckpt_dir, out), env=_env(), cwd=REPO,
+                            stdout=subprocess.PIPE, text=True, bufsize=1)
+    lines, sent = [], False
+    deadline = time.time() + TIMEOUT_S
+    try:
+        for line in proc.stdout:
+            lines.append(line.rstrip())
+            if time.time() > deadline:
+                raise TimeoutError("killed run exceeded timeout")
+            if not sent and line.startswith("{") and '"iter"' in line:
+                proc.send_signal(signal.SIGTERM)
+                sent = True
+        rc = proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert sent, f"no iteration row ever streamed:\n" + "\n".join(lines)
+    assert rc == 0, f"preempted run exited {rc}:\n" + "\n".join(lines)
+    assert any("checkpoint flushed, exiting cleanly" in ln
+               for ln in lines), \
+        "SIGTERM did not produce the clean flush line:\n" + "\n".join(lines)
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory(prefix="fault_smoke_") as tmp:
+        tmp = Path(tmp)
+        print("fault-smoke: [1/3] uninterrupted same-seed oracle run")
+        ref = _run_to_completion(tmp / "ref_ckpt", tmp / "ref.json")
+        assert not ref["preempted"]
+
+        print("fault-smoke: [2/3] SIGTERM mid-run, expect clean flush")
+        _run_and_kill(tmp / "kill_ckpt", tmp / "kill.json")
+        killed = json.loads((tmp / "kill.json").read_text())
+        assert killed["preempted"], "killed run did not record preemption"
+
+        print("fault-smoke: [3/3] re-run same command, expect auto-resume")
+        res = _run_to_completion(tmp / "kill_ckpt", tmp / "res.json")
+        assert res["diag"].get("resumed_from") or res["resumed_from"] > 0, \
+            "resumed run did not restore a checkpoint"
+
+        ok_md5 = res["final_params_md5"] == ref["final_params_md5"]
+        ref_eval = ref["history"][-1]["gs_eval_reward"]
+        res_eval = res["history"][-1]["gs_eval_reward"]
+        print(f"fault-smoke: oracle md5 {ref['final_params_md5']}  "
+              f"resumed md5 {res['final_params_md5']}")
+        print(f"fault-smoke: oracle eval {ref_eval}  resumed eval {res_eval}")
+        assert ok_md5, "resumed params differ from the uninterrupted run"
+        assert res_eval == ref_eval, "final GS eval reward drifted"
+        print("fault-smoke: BITWISE RESUME OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

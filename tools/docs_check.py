@@ -38,7 +38,9 @@ DOCSTRING_TREES = ("src/repro/core", "src/repro/envs", "src/repro/kernels",
 REQUIRED_SNIPPETS = {
     "README.md": (
         "python -m benchmarks.train_throughput",
+        "python -m benchmarks.fleet_throughput",
         "python -m repro.launch.dryrun --ials",
+        "make fault-smoke",
     ),
     "docs/ARCHITECTURE.md": (
         "kernels/ops.py::policy_rollout",
@@ -46,6 +48,13 @@ REQUIRED_SNIPPETS = {
         "kernels/ref.py::policy_rollout_ref",
         "python -m benchmarks.train_throughput",
         "python -m repro.launch.dryrun --ials",
+        # the fault-tolerance contract (§7) entry points
+        "distributed/actor_learner.py::ActorLearnerTrainer",
+        "distributed/fault_injection.py::FaultInjector",
+        "distributed/fault_injection.py::torn_save",
+        "checkpoint/ckpt.py::read_metadata",
+        "rl/ppo.py::learner_update_fn",
+        "python -m benchmarks.fleet_throughput",
     ),
 }
 
