@@ -2,8 +2,9 @@ PY := PYTHONPATH=src python
 
 # Tier-1: fast suite, `slow`-marked tests excluded via pyproject addopts.
 # Runs the docs drift gate first (it is also a pytest in tests/test_docs.py).
+# PYTEST_FLAGS passes extra flags through (CI sets --durations=15).
 test-fast: docs-check
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(PYTEST_FLAGS)
 
 # Everything, including the multi-minute jit-heavy tests.
 test-all:
@@ -25,6 +26,11 @@ multi-agent-bench:
 fleet-bench:
 	$(PY) -m benchmarks.fleet_throughput
 
+# Serving tier: slot-forward capacity + open-loop trace replay (QPS,
+# p50/p99 latency) per domain — the committed serve_throughput baselines.
+serve-bench:
+	$(PY) -m benchmarks.serve_throughput
+
 # Kill-and-resume end-to-end: SIGTERM a short rl_train mid-run, resume
 # it, and require bitwise-identical final params vs the uninterrupted
 # same-seed run (what the CI fault-smoke job runs).
@@ -45,4 +51,4 @@ dryrun:
 	$(PY) -m benchmarks.run --only roofline_report
 
 .PHONY: test-fast test-all docs-check bench-quick multi-agent-bench \
-	fleet-bench fault-smoke bench-check dryrun
+	fleet-bench serve-bench fault-smoke bench-check dryrun

@@ -14,6 +14,7 @@ Mapping to the paper:
     multi_agent_throughput  Distributed-IALS: N batched IALS vs Python loop
     aip_accuracy          Fig. 3/5 bottom + App. E Eq. 9/10
     learning_curves       Fig. 3/5 top + App. E Fig. 11/12 (F-IALS)
+    serve_throughput      continuous-batching policy serving: QPS + p50/p99
     fleet_throughput      disaggregated actor/learner scaling + faults
     memory_dependence     Fig. 6 (Theorem 1)
     dset_ablation         App. B / §4.2 (Theorem 2)
@@ -34,6 +35,7 @@ MODULES = [
     "simulator_throughput",
     "multi_agent_throughput",
     "train_throughput",
+    "serve_throughput",
     "fleet_throughput",
     "aip_accuracy",
     "dset_ablation",
@@ -46,6 +48,7 @@ MODULES = [
 CHECK_MODULES = {"simulator_throughput": "sim_throughput_",
                  "multi_agent_throughput": "multi_agent_throughput_",
                  "train_throughput": "train_throughput_",
+                 "serve_throughput": "serve_throughput_",
                  # fleet_faults_*.json is informational, not a baseline —
                  # the prefix below deliberately excludes it
                  "fleet_throughput": "fleet_throughput_"}

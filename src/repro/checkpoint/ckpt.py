@@ -102,19 +102,53 @@ def latest_step(ckpt_dir: str | Path) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _resolve_step(ckpt_dir: Path, step: Optional[int]) -> int:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    return step
+
+
+def _load_meta(d: Path) -> Dict:
+    """Read + decode ``meta.msgpack`` of one step directory, enforcing the
+    COMMITTED contract: a torn layout (missing sentinel, missing or
+    truncated/corrupt metadata — everything a crash mid-save or bitrot
+    can leave) raises a clear error instead of surfacing garbage.
+    ``step=None`` resume paths never get here for torn dirs
+    (``latest_step`` skips them); this guards *explicit* step requests
+    and committed-but-corrupted files."""
+    if not (d / "COMMITTED").exists():
+        raise FileNotFoundError(
+            f"{d} is not a committed checkpoint (missing COMMITTED — "
+            f"torn save?)")
+    try:
+        raw = (d / "meta.msgpack").read_bytes()
+    except FileNotFoundError:
+        raise FileNotFoundError(f"{d} has no meta.msgpack — torn save?")
+    try:
+        meta = msgpack.unpackb(raw)
+    except Exception as e:
+        raise ValueError(
+            f"corrupt checkpoint metadata in {d / 'meta.msgpack'}: "
+            f"{e}") from e
+    if not isinstance(meta, dict) or "user" not in meta:
+        raise ValueError(
+            f"corrupt checkpoint metadata in {d / 'meta.msgpack'}: "
+            f"not a checkpoint meta dict")
+    return meta
+
+
 def read_metadata(ckpt_dir: str | Path,
                   step: Optional[int] = None) -> Dict:
     """The ``metadata`` dict a committed checkpoint was saved with,
     without touching the array payload — resume paths read their
     counters (RNG stream positions, learner version, worker count) from
-    here before deciding what tree structure to restore into."""
+    here before deciding what tree structure to restore into. Torn or
+    corrupt metadata raises (``_load_meta``), never returns garbage."""
     ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
-    d = ckpt_dir / f"step_{step:09d}"
-    return msgpack.unpackb((d / "meta.msgpack").read_bytes())["user"]
+    step = _resolve_step(ckpt_dir, step)
+    return _load_meta(ckpt_dir / f"step_{step:09d}")["user"]
 
 
 def restore(ckpt_dir: str | Path, target: Any, step: Optional[int] = None,
@@ -122,12 +156,9 @@ def restore(ckpt_dir: str | Path, target: Any, step: Optional[int] = None,
     """Restore into the structure of ``target`` (a pytree of arrays or
     ShapeDtypeStructs). Returns (tree, step, user_metadata)."""
     ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    step = _resolve_step(ckpt_dir, step)
     d = ckpt_dir / f"step_{step:09d}"
-    meta = msgpack.unpackb((d / "meta.msgpack").read_bytes())
+    meta = _load_meta(d)
     data = np.load(d / "arrays.npz")
     leaves, treedef = jax.tree_util.tree_flatten(target)
     if len(leaves) != meta["n_leaves"]:
@@ -150,3 +181,46 @@ def restore(ckpt_dir: str | Path, target: Any, step: Optional[int] = None,
         out.append(x)
     tree = jax.tree_util.tree_unflatten(treedef, out)
     return tree, step, meta["user"]
+
+
+def restore_subtree(ckpt_dir: str | Path, target: Any, prefix: str,
+                    step: Optional[int] = None):
+    """Restore ONE subtree of a checkpoint — e.g. just ``['policy']`` out
+    of an ``rl_train`` full-RL-state checkpoint — without reading the
+    rest of the array payload. Returns (subtree, step, user_metadata).
+
+    ``target`` is a shape-correct pytree of the subtree (the serve-time
+    policy template); ``prefix`` is the ``jax.tree_util.keystr`` path of
+    the subtree root inside the saved tree (``"['policy']"``). Leaves are
+    matched by *path*, not position, and the npz payload is a zip — each
+    selected member decompresses individually, so a policy restore from a
+    checkpoint whose optimizer/rollout state dwarfs the policy touches
+    only the policy's bytes. This is the serving tier's restore path
+    (``repro.launch.policy_serve --ckpt-dir``): an inference process
+    never materialises training state."""
+    ckpt_dir = Path(ckpt_dir)
+    step = _resolve_step(ckpt_dir, step)
+    d = ckpt_dir / f"step_{step:09d}"
+    meta = _load_meta(d)
+    index = {p: i for i, p in enumerate(meta["paths"])}
+    leaves, treedef = jax.tree_util.tree_flatten(target)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_leaves_with_path(target)]
+    data = np.load(d / "arrays.npz")
+    out = []
+    for ref, sub_path in zip(leaves, paths):
+        full = prefix + sub_path
+        i = index.get(full)
+        if i is None:
+            raise ValueError(
+                f"checkpoint step {step} has no leaf {full!r} — "
+                f"wrong prefix or structure mismatch "
+                f"(saved paths start with e.g. {meta['paths'][0]!r})")
+        arr = data[_leaf_key(i)].view(np.dtype(meta["dtypes"][i])).reshape(
+            meta["shapes"][i])
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {full}: checkpoint shape {arr.shape} "
+                             f"!= target {ref.shape}")
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, out), step,
+            meta["user"])

@@ -407,10 +407,8 @@ def make_unified_ials(local_env: BatchedLocalEnv, aip_params,
                   p["l2"]["b"], p["head"]["w"], p["head"]["b"])
             buf = _lane_fold(state.aip_state)
             s0 = buf.reshape(buf.shape[0], -1)
-        pw = (pol_params["l1"]["w"], pol_params["l1"]["b"],
-              pol_params["l2"]["w"], pol_params["l2"]["b"],
-              pol_params["pi"]["w"], pol_params["pi"]["b"],
-              pol_params["v"]["w"], pol_params["v"]["b"])
+        from repro.rl.ppo import flat_policy_weights  # deferred: no cycle
+        pw = flat_policy_weights(pol_params)
         fin_ls, sT, fT, x, a, logits, v, r = ops.policy_rollout(
             ls_enc(ls_leaves), s0,
             frames_l.reshape(frames_l.shape[0], -1), aw, pw,

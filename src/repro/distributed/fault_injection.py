@@ -113,10 +113,15 @@ def torn_save(ckpt_dir, step: int, tree, tear: str = "no-commit",
       renamed early.
     - ``"truncated"``: COMMITTED missing *and* the array payload is cut
       short — the worst case a hard kill can leave.
+    - ``"torn-meta"``: COMMITTED missing *and* ``meta.msgpack`` is cut
+      short — the kill landed inside the metadata write itself, so even
+      the cheap no-payload readers (``ckpt.read_metadata``) see a
+      partial file.
 
     Returns the torn path. The contract under test: ``ckpt.latest_step``
     must not surface ``step``, ``ckpt.restore`` must fall back to the
-    previous committed checkpoint, and the next successful ``ckpt.save``
+    previous committed checkpoint, the explicit-step readers raise
+    instead of decoding garbage, and the next successful ``ckpt.save``
     sweeps the debris.
     """
     ckpt_dir = Path(ckpt_dir)
@@ -129,7 +134,7 @@ def torn_save(ckpt_dir, step: int, tree, tear: str = "no-commit",
     (src / "COMMITTED").unlink()
     if tear == "tmp-only":
         dst = ckpt_dir / f"step_{step:09d}.tmp"
-    elif tear in ("no-commit", "truncated"):
+    elif tear in ("no-commit", "truncated", "torn-meta"):
         dst = ckpt_dir / f"step_{step:09d}"
     else:
         raise ValueError(f"unknown tear mode: {tear!r}")
@@ -141,4 +146,8 @@ def torn_save(ckpt_dir, step: int, tree, tear: str = "no-commit",
         npz = dst / "arrays.npz"
         raw = npz.read_bytes()
         npz.write_bytes(raw[: max(1, len(raw) // 2)])
+    elif tear == "torn-meta":
+        mp = dst / "meta.msgpack"
+        raw = mp.read_bytes()
+        mp.write_bytes(raw[: max(1, len(raw) // 2)])
     return dst

@@ -52,6 +52,31 @@ pure function. Engines set the slot only when their kernel route is
 active (TPU, or forced); off-TPU the PPO-side bulk-noise scan is the
 default and produces bit-identical batches.
 
+Ragged-batch layer (the serving contract, docs/ARCHITECTURE.md §8): the
+fused programs above all run at a *fixed* batch shape, but real request
+traffic is ragged — thousands of heterogeneous agent regions submitting
+anywhere from 1 to B frames at once. ``pad_lanes`` / ``pad_mask`` are the
+one place the padding semantics live: a ragged group of n real lanes is
+packed into a fixed ``slot``-lane batch, lanes ``[0, n)`` real and lanes
+``[n, slot)`` *pad lanes*. The contract, pinned bitwise by
+``tests/test_serving.py``:
+
+  - pad lanes are a documented NO-OP: they are masked at the kernel
+    boundary (``kernels/ops.py::serve_forward`` zeroes their outputs
+    inside the dispatch), so their contents can NEVER perturb a real
+    lane's outputs — a real lane's results are bitwise-identical whatever
+    the pad lanes hold (zeros, stale frames, NaN) and wherever in the
+    slot the real lanes sit;
+  - the fixed slot shape is load-bearing: XLA may pick a different GEMM
+    reduction order for a different batch shape, so bitwise
+    reproducibility is guaranteed *at a given slot shape*, and the
+    serving tier always dispatches the same-shape program (that is what
+    makes continuous batching jit-cache-friendly too);
+  - ``pad_lanes`` fills pads by replicating lane 0 (a guaranteed-valid
+    row — keeps domain math NaN-free) unless ``fill`` overrides it;
+    consumers must treat pad outputs as garbage regardless, because the
+    no-op guarantee is the mask, not the fill.
+
 ``kernel_codec`` is the one place the kernel-boundary dtype rules live:
 Pallas VMEM scratch cannot hold bool/int8 leaves, so engines round-trip
 them through int32 — domain code never sees encoded leaves.
@@ -223,6 +248,40 @@ def kernel_codec(treedef, dtypes):
             treedef, [v.astype(dt) for v, dt in zip(vals, dtypes)])
 
     return encode, decode
+
+
+def pad_mask(n_valid: int, slot: int):
+    """(slot,) bool lane-validity mask: True for the n_valid real lanes,
+    False for the pad lanes. The single source of truth for which lanes
+    of a packed slot are real — ``kernels/ops.py::serve_forward`` applies
+    it at the kernel boundary so pad lanes can never perturb real-lane
+    outputs (the ragged-batch contract in the module docstring)."""
+    return jnp.arange(slot) < n_valid
+
+
+def pad_lanes(tree, slot: int, fill: str = "edge"):
+    """Pack a ragged batch into a fixed-slot batch: every (n, ...) leaf
+    of ``tree`` (n >= 1) becomes (slot, ...), lanes [0, n) the real rows
+    and lanes [n, slot) pad lanes. ``fill="edge"`` replicates lane 0 (a
+    guaranteed-valid row, so domain math on pads stays finite);
+    ``fill="zero"`` writes zeros. Pad-lane *outputs* are garbage by
+    contract either way — the no-op guarantee is ``pad_mask`` applied at
+    the kernel boundary, never the fill value."""
+    if fill not in ("edge", "zero"):
+        raise ValueError(f"unknown fill mode: {fill!r}")
+
+    def pad(leaf):
+        leaf = jnp.asarray(leaf)
+        n = leaf.shape[0]
+        if n > slot:
+            raise ValueError(f"ragged batch of {n} rows does not fit a "
+                             f"{slot}-lane slot")
+        pad_rows = (jnp.broadcast_to(leaf[:1], (slot - n,) + leaf.shape[1:])
+                    if fill == "edge" else
+                    jnp.zeros((slot - n,) + leaf.shape[1:], leaf.dtype))
+        return jnp.concatenate([leaf, pad_rows], axis=0)
+
+    return jax.tree_util.tree_map(pad, tree)
 
 
 def horizon_noise(noise_fn, keys, n_envs: int):

@@ -188,6 +188,79 @@ def aip_step(d, h, wx, wh, b, hw, hb, bits, *, interpret: bool | None = None):
     return h2, logits, u
 
 
+def _serve_forward_kernel(f_ref, m_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                          piw_ref, pib_ref, vw_ref, vb_ref, lg_ref, v_ref,
+                          *, fast_gates: bool):
+    x = f_ref[...].astype(jnp.float32)                 # (bs, D)
+    w = (w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...],
+         piw_ref[...], pib_ref[...], vw_ref[...], vb_ref[...])
+    logits, v = _policy_cell(w, x, fast_gates=fast_gates)
+    m = m_ref[...] != 0                                # (bs,)
+    lg_ref[...] = jnp.where(m[:, None], logits, 0.0).astype(lg_ref.dtype)
+    v_ref[...] = jnp.where(m, v, 0.0).astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fast_gates", "block_s", "interpret"))
+def serve_forward(frames, mask, pol_w, *, fast_gates: bool,
+                  block_s: int | None = None,
+                  interpret: bool | None = None):
+    """Masked fixed-slot policy forward — the serving tier's inference
+    dispatch (``ref.serve_forward_ref`` is the ground truth).
+
+    frames: (S, D) f32 packed request slot (D = frame_stack * obs_dim);
+    mask: (S,) int32/bool lane-validity mask; pol_w: the flat
+    ``rl/ppo.py::flat_policy_weights`` tuple -> (logits (S, n_actions)
+    f32, v (S,) f32), pad lanes exactly zero.
+
+    One grid pass over slot blocks, the whole policy net (two gated
+    GEMMs + the fused two-head GEMM of ``_policy_cell``) VMEM-resident
+    per block; the mask is applied INSIDE the kernel — the boundary of
+    the ragged-batch contract (``envs/api.py``) — so a pad lane's
+    contents can never reach a consumer. The slot shape is static per
+    server, so every dispatch reuses one compiled program.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S, D = frames.shape
+    n_act = pol_w[4].shape[1]
+    bs = min(block_s or 256, S)
+    while S % bs:
+        bs //= 2
+    mask = mask.astype(jnp.int32)
+    kernel = functools.partial(_serve_forward_kernel,
+                               fast_gates=fast_gates)
+    w1, b1, w2, b2, piw, pib, vw, vb = pol_w
+    Hp = w1.shape[1]
+    logits, v = pl.pallas_call(
+        kernel,
+        grid=(S // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, D), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((D, Hp), lambda i: (0, 0)),
+            pl.BlockSpec((Hp,), lambda i: (0,)),
+            pl.BlockSpec((Hp, Hp), lambda i: (0, 0)),
+            pl.BlockSpec((Hp,), lambda i: (0,)),
+            pl.BlockSpec((Hp, n_act), lambda i: (0, 0)),
+            pl.BlockSpec((n_act,), lambda i: (0,)),
+            pl.BlockSpec((Hp, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, n_act), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, n_act), jnp.float32),
+            jax.ShapeDtypeStruct((S,), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(),
+        interpret=interpret,
+    )(frames, mask, w1, b1, w2, b2, piw, pib, vw, vb)
+    return logits, v
+
+
 # ---------------------------------------------------------------------------
 # The whole-horizon rollout family: one kernel body, two cells, any A
 # ---------------------------------------------------------------------------

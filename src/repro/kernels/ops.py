@@ -211,6 +211,39 @@ def policy_rollout(ls, s0, frames0, aip_w, pol_w, gumbel, bits, done,
         interpret=interpret)
 
 
+def serve_forward(frames, mask, pol_w, *, fast_gates, block_s=None,
+                  interpret=None):
+    """Masked fixed-slot policy forward — the serving tier's one inference
+    dispatch (``serving/server.py::PolicyServer`` drives it): the packed
+    request slot ``frames`` (S, D) f32 and lane-validity ``mask`` (S,)
+    through the PPO actor-critic net (``pol_w`` = the flat
+    ``rl/ppo.py::flat_policy_weights`` tuple) -> (logits (S, n_actions),
+    v (S,)), pad lanes exactly zeroed INSIDE the dispatch — the kernel
+    boundary of the ragged-batch contract (``envs/api.py``): pad-lane
+    contents can never perturb a real lane, and at the fixed slot shape
+    real-lane outputs are bitwise independent of lane position and pad
+    pattern. On TPU this is the compiled Pallas kernel
+    (``aip_step.serve_forward``); elsewhere the identical-math oracle
+    (``ref.serve_forward_ref``) — both compute the two policy heads as
+    one fused GEMM, so logits are bitwise across routes and ``v`` is the
+    documented 1-ulp leaf vs the PPO scan forward (ARCHITECTURE §4).
+
+    ``interpret=None`` is the production dispatch above; passing a bool
+    forces the Pallas kernel itself (interpret mode off-TPU — the parity
+    tests exercise the real grid/block machinery that way).
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _aip.serve_forward(frames, mask, tuple(pol_w),
+                                      fast_gates=fast_gates,
+                                      block_s=block_s, interpret=False)
+        return _ref.serve_forward_ref(tuple(pol_w), frames, mask,
+                                      fast_gates=fast_gates)
+    return _aip.serve_forward(frames, mask, tuple(pol_w),
+                              fast_gates=fast_gates, block_s=block_s,
+                              interpret=interpret)
+
+
 def rmsnorm(x, g, *, eps: float = 1e-6):
     shp = x.shape
     out = _rms.rmsnorm(x.reshape(-1, shp[-1]), g, eps=eps,

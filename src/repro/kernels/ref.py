@@ -260,6 +260,24 @@ def _policy_fwd_ref(pol_w, x, fast_gates: bool):
     return out[..., :-1], out[..., -1]
 
 
+def serve_forward_ref(pol_w, frames, mask, *, fast_gates: bool):
+    """Masked fixed-slot policy forward — the ``serve_forward`` kernel's
+    ground truth and the off-TPU serving dispatch. ``frames``: (S, d_in)
+    f32 packed slot (real lanes wherever ``mask`` is nonzero, pad lanes
+    elsewhere); ``mask``: (S,) int32/bool lane-validity mask ->
+    (logits (S, n_actions), v (S,)) with pad lanes exactly zeroed.
+
+    Every lane runs the exact ``_policy_fwd_ref`` math (both heads fused
+    into one GEMM — the serving slot shape is fixed, so lane outputs are
+    bitwise independent of pad contents and lane position; see the
+    ragged-batch contract in ``envs/api.py``), and the mask is applied at
+    this boundary so pad lanes can never leak into a consumer."""
+    logits, v = _policy_fwd_ref(pol_w, frames, fast_gates)
+    m = mask != 0
+    return (jnp.where(m[:, None], logits, 0.0),
+            jnp.where(m, v, 0.0))
+
+
 def policy_rollout_ref(ls, s0, frames0, aip_w, pol_w, gumbel, bits, done,
                        noise, reset_ls, *, kind: str, n_agents: int,
                        fast_gates: bool, tick_fn, dset_fn, obs_fn):

@@ -1,0 +1,100 @@
+"""Serve a trained policy against synthetic open-loop traffic.
+
+    PYTHONPATH=src python -m repro.launch.policy_serve --domain traffic \
+        --regions 256 --rps 20000 --duration-s 2 --slot 128
+    PYTHONPATH=src python -m repro.launch.policy_serve --domain warehouse \
+        --ckpt-dir ckpts/wh --slot 64 --out serve.json
+
+The deployment half of the training story: thousands of heterogeneous
+agent regions (ragged grid sizes, staggered episode phases —
+``serving/request.py``'s trace model) stream action requests at a fixed
+offered load; ``serving/scheduler.py::SlotScheduler`` packs them into
+fixed-shape slots earliest-deadline-first, and
+``serving/server.py::PolicyServer`` drives each slot through ONE jitted
+masked policy forward (``kernels/ops.py::serve_forward``). The replay
+reports p50/p99 request latency (arrival -> slot completion, wall
+clock, queueing included) and sustained QPS — the serving contract and
+measurement method are docs/ARCHITECTURE.md §8.
+
+``--ckpt-dir`` restores the policy from an ``rl_train`` checkpoint via
+``checkpoint/ckpt.py::restore_subtree`` — only the ``['policy']``
+leaves' bytes are read; the optimizer/rollout/simulator payload of the
+training checkpoint never touches the inference process.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.launch.rl_train import build_domain
+from repro.rl import ppo
+from repro.serving import PolicyServer, TraceConfig, synthetic_trace
+
+
+def build_server_and_trace(args):
+    """-> (PolicyServer, trace, info dict) — the driver body, callable
+    in-process (tests and the serve bench reuse it)."""
+    gs, _, _, frame_stack = build_domain(args.domain)
+    pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim,
+                         n_actions=gs.spec.n_actions,
+                         frame_stack=frame_stack)
+    info = {"domain": args.domain, "slot": args.slot, "route": args.route}
+    template = ppo.init_policy(pcfg, jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        params, step, meta = ckpt.restore_subtree(
+            args.ckpt_dir, template, "['policy']", step=args.step)
+        info["restored_step"] = step
+        info["ckpt_metadata"] = meta
+    else:
+        params = template
+    server = PolicyServer(params, obs_dim=pcfg.obs_dim,
+                          n_actions=pcfg.n_actions,
+                          frame_stack=frame_stack, slot=args.slot,
+                          route=args.route)
+    trace = synthetic_trace(TraceConfig(
+        n_regions=args.regions, mean_rps=args.rps,
+        horizon_s=args.duration_s, frame_dim=server.frame_dim,
+        seed=args.seed))
+    info["requests"] = len(trace)
+    return server, trace, info
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--domain", choices=["traffic", "warehouse"],
+                    default="traffic")
+    ap.add_argument("--slot", type=int, default=128)
+    ap.add_argument("--regions", type=int, default=256)
+    ap.add_argument("--rps", type=float, default=20000.0)
+    ap.add_argument("--duration-s", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--route", choices=["auto", "interpret", "xla"],
+                    default="auto")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore the policy subtree from an rl_train "
+                         "checkpoint (restore_subtree: no training-state "
+                         "payload read)")
+    ap.add_argument("--step", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    server, trace, info = build_server_and_trace(args)
+    # compile the slot program before the clock starts — the first
+    # dispatch of a jitted shape is a trace+compile, not a serve latency
+    server.forward_slot(np.zeros((args.slot, server.frame_dim),
+                                 np.float32), 1)
+    report = server.serve(trace)
+    out = {**info, **report.summary()}
+    print(json.dumps(out, indent=1))
+    if args.out:
+        Path(args.out).write_text(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -106,6 +106,20 @@ def init_policy(cfg: PPOConfig, key):
     }
 
 
+def flat_policy_weights(params):
+    """The flat ``(w1, b1, w2, b2, piw, pib, vw, vb)`` weight tuple — the
+    policy-forward ABI shared by every fused consumer of this network:
+    the kernels' ``_policy_cell`` / ``_policy_fwd_ref`` (actor-in-the-loop
+    rollout), the unified engine's ``policy_rollout`` wiring, and the
+    serving tier's slot forward (``kernels/ops.py::serve_forward``). One
+    definition, so a params-layout change cannot silently skew the
+    kernel routes."""
+    return (params["l1"]["w"], params["l1"]["b"],
+            params["l2"]["w"], params["l2"]["b"],
+            params["pi"]["w"], params["pi"]["b"],
+            params["v"]["w"], params["v"]["b"])
+
+
 def policy_forward(params, x, *, fast_gates: bool):
     """Actor-critic forward pass. ``fast_gates`` (required — thread
     ``PPOConfig.fast_gates`` so the config stays the single source of

@@ -1,0 +1,24 @@
+"""Serving tier: continuous-batching policy inference under latency bounds.
+
+The deployment half of the paper's claim — a trained IALS policy acting
+in the real networked system for heavy request traffic. Three pieces
+(the serving contract, docs/ARCHITECTURE.md §8):
+
+- ``request.py`` — the request model (agent-region id, frame-stacked
+  observation, deadline class) and a deterministic synthetic open-loop
+  traffic generator: thousands of heterogeneous agent regions with
+  ragged grid sizes and staggered episode phases.
+- ``scheduler.py`` — ``SlotScheduler``: packs in-flight requests into
+  fixed-shape slots, earliest-deadline-first, FIFO within a deadline
+  class, no silent drops, exact deadline-miss accounting.
+- ``server.py`` — ``PolicyServer``: drives packed slots through ONE
+  jitted masked policy forward (``kernels/ops.py::serve_forward``) at a
+  fixed slot shape, replays open-loop traces, and reports p50/p99
+  latency + sustained QPS.
+"""
+from repro.serving.request import Request, TraceConfig, synthetic_trace
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.server import PolicyServer, ServeReport
+
+__all__ = ["Request", "TraceConfig", "synthetic_trace", "SlotScheduler",
+           "PolicyServer", "ServeReport"]

@@ -1,0 +1,96 @@
+"""The serving request model + deterministic synthetic open-loop traffic.
+
+A ``Request`` is one agent region asking for actions on one frame-stacked
+observation before a deadline. Traffic is *open-loop*: arrival times are
+fixed by the trace, not by how fast the server answers — the standard way
+to measure a serving system honestly (a closed loop self-throttles and
+hides queueing collapse).
+
+``synthetic_trace`` models the north-star workload shape: ``n_regions``
+heterogeneous agent regions with ragged sizes (a region of size k submits
+k requests per episode tick — one per agent lane of its grid) and
+staggered episode phases (each region's tick train has its own phase
+offset, so bursts interleave instead of beating in sync). Every draw
+comes from one seeded ``numpy.random.Generator``, so a trace is a pure
+function of its config — the property tests replay exact traces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    """One action request: ``frame`` is the (frame_stack * obs_dim,) f32
+    observation the policy acts on; ``deadline`` is absolute
+    (``arrival + deadline class bound``), which is what makes
+    earliest-deadline-first scheduling FIFO within a class."""
+    rid: int            # unique, assigned in arrival order
+    region: int         # agent-region id (which grid submitted it)
+    klass: int          # deadline-class index into TraceConfig.classes_s
+    arrival: float      # seconds since trace start (open-loop, fixed)
+    deadline: float     # absolute seconds: arrival + classes_s[klass]
+    frame: np.ndarray   # (frame_dim,) f32
+
+
+@dataclass(frozen=True)
+class TraceConfig:
+    """Synthetic open-loop traffic shape. ``mean_rps`` is the aggregate
+    offered load; each region ticks with a common period ``L / mean_rps``
+    (L = total agent lanes) at its own random phase, submitting one
+    request per lane per tick, so region size is exactly its traffic
+    share and bursts stay staggered."""
+    n_regions: int = 64
+    region_sizes: Tuple[int, ...] = (1, 2, 4, 8)   # ragged grid sizes
+    mean_rps: float = 2000.0
+    horizon_s: float = 1.0
+    classes_s: Tuple[float, ...] = (0.005, 0.025, 0.1)
+    class_mix: Tuple[float, ...] = (0.25, 0.5, 0.25)
+    frame_dim: int = 41
+    seed: int = 0
+
+
+def synthetic_trace(cfg: TraceConfig,
+                    frame_pool: Optional[np.ndarray] = None
+                    ) -> List[Request]:
+    """-> arrival-sorted requests, rids dense in arrival order.
+
+    ``frame_pool`` (N, frame_dim) supplies real observation frames (e.g.
+    engine-rollout states) sampled per request; absent, frames are unit
+    normal — the forward cost is data-independent, so latency numbers are
+    identical either way."""
+    rng = np.random.default_rng(cfg.seed)
+    sizes = rng.choice(np.asarray(cfg.region_sizes), size=cfg.n_regions)
+    total_lanes = int(sizes.sum())
+    period = total_lanes / cfg.mean_rps
+    phases = rng.uniform(0.0, period, size=cfg.n_regions)
+    mix = np.asarray(cfg.class_mix, dtype=np.float64)
+    mix = mix / mix.sum()
+
+    events = []          # (arrival, region, klass, lanes)
+    for region in range(cfg.n_regions):
+        t = float(phases[region])
+        while t < cfg.horizon_s:
+            klass = int(rng.choice(len(cfg.classes_s), p=mix))
+            events.append((t, region, klass, int(sizes[region])))
+            t += period
+    events.sort(key=lambda e: (e[0], e[1]))
+
+    out: List[Request] = []
+    for arrival, region, klass, lanes in events:
+        for _ in range(lanes):
+            if frame_pool is not None:
+                frame = np.asarray(
+                    frame_pool[rng.integers(0, len(frame_pool))],
+                    dtype=np.float32)
+            else:
+                frame = rng.standard_normal(cfg.frame_dim).astype(
+                    np.float32)
+            out.append(Request(rid=len(out), region=region, klass=klass,
+                               arrival=arrival,
+                               deadline=arrival + cfg.classes_s[klass],
+                               frame=frame))
+    return out

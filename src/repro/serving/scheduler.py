@@ -1,0 +1,89 @@
+"""Continuous-batching slot scheduler: EDF, FIFO-in-class, no silent drops.
+
+``SlotScheduler`` owns the in-flight request queue between trace replay
+and the fixed-slot policy forward. Its guarantees (the serving contract,
+docs/ARCHITECTURE.md §8 — each is pinned by a property test in
+``tests/test_serving.py``):
+
+1. **No silent drops.** Every admitted request is dispatched exactly
+   once: ``next_batch`` pops at most ``slot`` requests and never
+   discards; a missed deadline is *recorded*, never used to shed load.
+   (Load shedding would be a policy choice layered on top — the
+   scheduler's own accounting must stay exact either way.)
+2. **EDF across classes, FIFO within a class.** The queue is a heap on
+   ``(deadline, seq)`` with ``seq`` the admission order. Deadlines are
+   absolute (``arrival + class bound``), so within one class deadline
+   order IS arrival order — earliest-deadline-first gives FIFO per class
+   for free, and the ``seq`` tiebreak makes equal-deadline pops
+   deterministic and admission-ordered.
+3. **No starvation.** A pending request's deadline is fixed while every
+   later arrival's deadline grows with its arrival time, so any waiting
+   request becomes the queue minimum after boundedly many admissions —
+   EDF on absolute deadlines cannot strand it.
+4. **Exact miss accounting.** ``complete`` compares each request's
+   completion time against its absolute deadline; ``deadline_misses`` /
+   ``misses_by_class`` equal a ground-truth recount of the completion
+   log on any adversarial trace, by construction and by test.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Tuple
+
+from repro.serving.request import Request
+
+
+class SlotScheduler:
+    """Packs in-flight requests into fixed-``slot``-size batches.
+
+    Call pattern (the server's loop): ``admit`` requests in arrival
+    order, ``next_batch`` to pop up to ``slot`` of them
+    (earliest-deadline-first), run the forward, then ``complete(batch,
+    t_done)`` with the batch's shared completion time. ``completions``
+    is the full audit log ``(rid, klass, arrival, deadline, t_done)``
+    the miss counters are derivable from."""
+
+    def __init__(self, slot: int):
+        if slot < 1:
+            raise ValueError(f"slot must be >= 1, got {slot}")
+        self.slot = slot
+        self._heap: List[Tuple[float, int, Request]] = []
+        self._seq = 0
+        self.admitted = 0
+        self.served = 0
+        self.deadline_misses = 0
+        self.misses_by_class: Dict[int, int] = {}
+        self.max_queue_depth = 0
+        self.completions: List[Tuple[int, int, float, float, float]] = []
+
+    @property
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def admit(self, req: Request) -> None:
+        """Enqueue one request. Admission order is the FIFO tiebreak, so
+        callers must admit in arrival order (trace replay does)."""
+        heapq.heappush(self._heap, (req.deadline, self._seq, req))
+        self._seq += 1
+        self.admitted += 1
+        self.max_queue_depth = max(self.max_queue_depth, len(self._heap))
+
+    def next_batch(self) -> List[Request]:
+        """Pop up to ``slot`` requests, earliest absolute deadline first
+        (admission order among equal deadlines). Never discards: what is
+        not popped stays queued for the next batch."""
+        n = min(self.slot, len(self._heap))
+        return [heapq.heappop(self._heap)[2] for _ in range(n)]
+
+    def complete(self, batch: List[Request], t_done: float) -> None:
+        """Record a dispatched batch finishing at ``t_done`` (seconds on
+        the trace clock). All requests in one slot share the completion
+        time — the whole slot returns from one fused dispatch."""
+        for req in batch:
+            self.served += 1
+            self.completions.append(
+                (req.rid, req.klass, req.arrival, req.deadline, t_done))
+            if t_done > req.deadline:
+                self.deadline_misses += 1
+                self.misses_by_class[req.klass] = (
+                    self.misses_by_class.get(req.klass, 0) + 1)

@@ -1,0 +1,193 @@
+"""PolicyServer: fixed-slot continuous-batching policy inference.
+
+One server = one trained policy + ONE jitted slot program. Every
+dispatch runs ``kernels/ops.py::serve_forward`` on a packed
+(slot, frame_dim) batch with a lane-validity mask — pad lanes are zeroed
+inside the dispatch (the ragged-batch contract, ``envs/api.py``), and
+actions are the greedy ``argmax`` over the masked logits, exactly the
+deployment policy ``rl/ppo.py::make_evaluator`` measures.
+
+Reproducibility contract (docs/ARCHITECTURE.md §8): the slot shape is
+static per server, and the forward always runs as the same jitted
+program — XLA's GEMM reduction order is shape- and program-dependent, so
+the *compiled fixed-slot program* is the unit of bitwise
+reproducibility. Within it, a real lane's (logits, v, action) are
+bitwise-identical whatever the pad lanes hold and wherever in the slot
+the lane sits — pinned by ``tests/test_serving.py`` on both the oracle
+and forced-interpret-kernel routes.
+
+Latency measurement (the driver + bench method): open-loop trace replay
+on a wall clock. Request latency = (slot dispatch completion, blocked on
+device outputs) - (trace arrival time); a request that waits in queue
+pays its queueing delay in full, and arrivals never throttle to the
+server's pace. ``mode="virtual"`` replaces the wall clock with a fixed
+per-dispatch service time so scheduler tests are deterministic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.envs.api import pad_mask
+from repro.kernels import ops
+from repro.rl.ppo import flat_policy_weights, policy_forward
+from repro.serving.request import Request
+from repro.serving.scheduler import SlotScheduler
+
+
+@dataclass
+class ServeReport:
+    """One trace replay's results. Latencies in seconds; ``qps`` is
+    served requests / makespan (first arrival -> last completion)."""
+    requests: int
+    served: int
+    p50_s: float
+    p99_s: float
+    qps: float
+    deadline_misses: int
+    misses_by_class: Dict[int, int]
+    max_queue_depth: int
+    dispatches: int
+    mean_occupancy: float        # mean real lanes per dispatched slot
+    latencies_s: List[float] = field(repr=False, default_factory=list)
+
+    def summary(self) -> Dict:
+        """JSON-ready summary (drops the raw latency list)."""
+        return {
+            "requests": self.requests, "served": self.served,
+            "p50_ms": self.p50_s * 1e3, "p99_ms": self.p99_s * 1e3,
+            "qps": self.qps, "deadline_misses": self.deadline_misses,
+            "misses_by_class": {str(k): v for k, v
+                                in sorted(self.misses_by_class.items())},
+            "max_queue_depth": self.max_queue_depth,
+            "dispatches": self.dispatches,
+            "mean_occupancy": self.mean_occupancy,
+        }
+
+
+class PolicyServer:
+    """Continuous-batching inference over one fixed-slot jitted program.
+
+    ``route`` selects the forward implementation (all three agree on
+    logits/actions bitwise under jit; see the module docstring):
+      - ``"auto"``: the production ``ops.serve_forward`` dispatch
+        (compiled Pallas kernel on TPU, identical-math oracle elsewhere);
+      - ``"interpret"``: force the Pallas kernel in interpret mode (the
+        parity tests' route);
+      - ``"xla"``: masked ``rl/ppo.py::policy_forward`` — the training
+        net verbatim (its separate value-head GEMM makes ``v`` the
+        documented 1-ulp leaf vs the fused routes).
+    """
+
+    def __init__(self, params, *, obs_dim: int, n_actions: int,
+                 frame_stack: int = 1, slot: int = 64,
+                 fast_gates: bool = True, route: str = "auto"):
+        if route not in ("auto", "interpret", "xla"):
+            raise ValueError(f"unknown route: {route!r}")
+        self.slot = slot
+        self.frame_dim = obs_dim * frame_stack
+        self.n_actions = n_actions
+        pw = flat_policy_weights(params)
+
+        if route == "xla":
+            def fwd(frames, mask):
+                logits, v = policy_forward(params, frames,
+                                           fast_gates=fast_gates)
+                m = mask != 0
+                logits = jnp.where(m[:, None], logits, 0.0)
+                v = jnp.where(m, v, 0.0)
+                return jnp.argmax(logits, -1), logits, v
+        else:
+            interpret = True if route == "interpret" else None
+
+            def fwd(frames, mask):
+                logits, v = ops.serve_forward(frames, mask, pw,
+                                              fast_gates=fast_gates,
+                                              interpret=interpret)
+                return jnp.argmax(logits, -1), logits, v
+
+        self._fwd = jax.jit(fwd)
+
+    def forward_slot(self, frames, n_valid: int):
+        """One dispatch on an already-padded (slot, frame_dim) batch with
+        ``n_valid`` real lanes -> (actions (slot,), logits, v), blocked
+        on device completion. Pad-lane outputs are zeros (and action 0)
+        by the kernel-boundary mask — garbage by contract."""
+        out = self._fwd(jnp.asarray(frames),
+                        pad_mask(n_valid, self.slot))
+        return jax.block_until_ready(out)
+
+    def _pack(self, batch: List[Request]) -> np.ndarray:
+        frames = np.zeros((self.slot, self.frame_dim), np.float32)
+        frames[: len(batch)] = [req.frame for req in batch]
+        return frames
+
+    def serve(self, trace: List[Request],
+              scheduler: Optional[SlotScheduler] = None, *,
+              mode: str = "wallclock",
+              service_time_s: float = 1e-3) -> ServeReport:
+        """Replay an arrival-sorted open-loop ``trace`` to completion.
+
+        ``mode="wallclock"`` measures real dispatch latency (the bench /
+        driver path; idles until the next arrival when the queue runs
+        dry, so offered load stays open-loop). ``mode="virtual"``
+        advances a deterministic clock by ``service_time_s`` per
+        dispatch — no timers, same scheduler decisions every run (the
+        property tests' path)."""
+        if mode not in ("wallclock", "virtual"):
+            raise ValueError(f"unknown mode: {mode!r}")
+        sched = scheduler if scheduler is not None else SlotScheduler(
+            self.slot)
+        latencies: List[float] = []
+        occupancy: List[int] = []
+        next_req = 0
+        n = len(trace)
+        t_start = time.perf_counter()
+        now = 0.0
+        last_done = 0.0
+
+        while next_req < n or sched.pending:
+            if mode == "wallclock":
+                now = time.perf_counter() - t_start
+            while next_req < n and trace[next_req].arrival <= now:
+                sched.admit(trace[next_req])
+                next_req = next_req + 1
+            if not sched.pending:
+                # open-loop idle: jump/sleep to the next arrival
+                now = trace[next_req].arrival
+                if mode == "wallclock":
+                    wait = now - (time.perf_counter() - t_start)
+                    if wait > 0:
+                        time.sleep(wait)
+                continue
+            batch = sched.next_batch()
+            self.forward_slot(self._pack(batch), len(batch))
+            if mode == "wallclock":
+                now = time.perf_counter() - t_start
+            else:
+                now = now + service_time_s
+            sched.complete(batch, now)
+            last_done = now
+            occupancy.append(len(batch))
+            latencies.extend(now - r.arrival for r in batch)
+
+        makespan = max(last_done - (trace[0].arrival if trace else 0.0),
+                       1e-9)
+        lat = np.asarray(latencies) if latencies else np.zeros(1)
+        return ServeReport(
+            requests=n, served=sched.served,
+            p50_s=float(np.percentile(lat, 50)),
+            p99_s=float(np.percentile(lat, 99)),
+            qps=sched.served / makespan,
+            deadline_misses=sched.deadline_misses,
+            misses_by_class=dict(sched.misses_by_class),
+            max_queue_depth=sched.max_queue_depth,
+            dispatches=len(occupancy),
+            mean_occupancy=(float(np.mean(occupancy)) if occupancy
+                            else 0.0),
+            latencies_s=latencies)

@@ -107,7 +107,8 @@ def test_guard_sigterm_chains_and_uninstalls(tmp_path):
     assert signal.getsignal(signal.SIGTERM) == orig
 
 
-@pytest.mark.parametrize("tear", ["tmp-only", "no-commit", "truncated"])
+@pytest.mark.parametrize("tear", ["tmp-only", "no-commit", "truncated",
+                                  "torn-meta"])
 def test_torn_saves_never_loaded_and_swept(tmp_path, tear):
     """The COMMITTED contract under every torn-save layout a crash can
     leave: the torn step is invisible to latest_step, restore falls back
@@ -134,6 +135,56 @@ def test_read_metadata_without_arrays(tmp_path):
     assert meta == {"rng_position": 12, "n_workers": 3}
     with pytest.raises(FileNotFoundError):
         ckpt.read_metadata(tmp_path / "empty")
+
+
+def test_read_metadata_explicit_step_rejects_torn_layouts(tmp_path):
+    """Explicit-step metadata reads must refuse torn layouts instead of
+    decoding partial bytes: a missing COMMITTED sentinel (any tear) is a
+    FileNotFoundError, and the ``torn-meta`` tear — the kill landed
+    inside the metadata write itself — never reaches msgpack garbage."""
+    ckpt.save(tmp_path, 1, _tree(), metadata={"it": 1})
+    fi.torn_save(tmp_path, 2, _tree(seed=9), tear="torn-meta",
+                 metadata={"it": 2})
+    # step=None resume path: the torn step is invisible, not an error
+    assert ckpt.read_metadata(tmp_path) == {"it": 1}
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_metadata(tmp_path, step=2)
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path, jax.eval_shape(lambda: _tree()), step=2)
+
+
+def test_read_metadata_raises_on_corrupt_committed_meta(tmp_path):
+    """Bitrot inside a COMMITTED checkpoint (truncated or overwritten
+    meta.msgpack) raises a ValueError naming the file — never returns a
+    garbage dict for resume counters."""
+    ckpt.save(tmp_path, 3, _tree(), metadata={"it": 3})
+    mp = tmp_path / "step_000000003" / "meta.msgpack"
+    raw = mp.read_bytes()
+    mp.write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match="meta.msgpack"):
+        ckpt.read_metadata(tmp_path, step=3)
+    mp.write_bytes(b"\xc3")              # valid msgpack, not a meta dict
+    with pytest.raises(ValueError, match="meta.msgpack"):
+        ckpt.read_metadata(tmp_path, step=3)
+
+
+def test_restore_subtree_roundtrip_and_mismatch(tmp_path):
+    """``restore_subtree`` pulls one subtree by path: exact values for a
+    shape-correct template, a clear error for a wrong prefix, and the
+    usual shape check per leaf."""
+    tree = _tree()
+    ckpt.save(tmp_path, 4, tree, metadata={"mode": "integrated"})
+    template = jax.eval_shape(lambda: tree["params"])
+    got, step, meta = ckpt.restore_subtree(tmp_path, template,
+                                           "['params']")
+    assert step == 4 and meta == {"mode": "integrated"}
+    assert bool((got["w"] == tree["params"]["w"]).all())
+    assert got["b"].dtype == tree["params"]["b"].dtype
+    with pytest.raises(ValueError, match="no leaf"):
+        ckpt.restore_subtree(tmp_path, template, "['policy']")
+    bad = {"w": jnp.zeros((4, 4))}
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore_subtree(tmp_path, bad, "['params']")
 
 
 def test_straggler_detector_fires_on_sustained_slowdown():

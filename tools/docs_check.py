@@ -31,7 +31,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 DOC_FILES = ("README.md", "docs/ARCHITECTURE.md")
 DOCSTRING_TREES = ("src/repro/core", "src/repro/envs", "src/repro/kernels",
-                   "src/repro/rl")
+                   "src/repro/rl", "src/repro/serving")
 
 # snippets the named doc must quote (inside backticks or a fenced block);
 # the resolution checks below make sure each still matches the tree
@@ -41,6 +41,9 @@ REQUIRED_SNIPPETS = {
         "python -m benchmarks.fleet_throughput",
         "python -m repro.launch.dryrun --ials",
         "make fault-smoke",
+        # the serving tier (§8) entry points
+        "python -m repro.launch.policy_serve",
+        "python -m benchmarks.serve_throughput",
     ),
     "docs/ARCHITECTURE.md": (
         "kernels/ops.py::policy_rollout",
@@ -55,6 +58,14 @@ REQUIRED_SNIPPETS = {
         "checkpoint/ckpt.py::read_metadata",
         "rl/ppo.py::learner_update_fn",
         "python -m benchmarks.fleet_throughput",
+        # the serving contract (§8) entry points + dispatch cells
+        "python -m repro.launch.policy_serve",
+        "python -m benchmarks.serve_throughput",
+        "serving/scheduler.py::SlotScheduler",
+        "serving/server.py::PolicyServer",
+        "kernels/ops.py::serve_forward",
+        "envs/api.py::pad_lanes",
+        "checkpoint/ckpt.py::restore_subtree",
     ),
 }
 
