@@ -261,6 +261,95 @@ def serve_forward(frames, mask, pol_w, *, fast_gates: bool,
     return logits, v
 
 
+def _serve_forward_multi_kernel(f_ref, m_ref, p_ref, w1_ref, b1_ref,
+                                w2_ref, b2_ref, piw_ref, pib_ref, vw_ref,
+                                vb_ref, lg_ref, v_ref, *, fast_gates: bool,
+                                n_policies: int):
+    x = f_ref[...].astype(jnp.float32)                 # (bs, D)
+    pidx = p_ref[...]                                  # (bs,)
+    stacked = (w1_ref[...], b1_ref[...], w2_ref[...], b2_ref[...],
+               piw_ref[...], pib_ref[...], vw_ref[...], vb_ref[...])
+    lg = jnp.zeros((x.shape[0], piw_ref.shape[-1]), jnp.float32)
+    v = jnp.zeros((x.shape[0],), jnp.float32)
+    # static unroll over the (small) policy axis: each checkpoint's cell
+    # runs the exact single-policy ``_policy_cell`` at the exact block
+    # shape, lanes then select their own row — the bitwise
+    # one-policy-vs-N parity depends on this (no per-lane weight gather)
+    for n in range(n_policies):
+        lg_n, v_n = _policy_cell(tuple(w[n] for w in stacked), x,
+                                 fast_gates=fast_gates)
+        sel = pidx == n
+        lg = jnp.where(sel[:, None], lg_n, lg)
+        v = jnp.where(sel, v_n, v)
+    m = m_ref[...] != 0                                # (bs,)
+    lg_ref[...] = jnp.where(m[:, None], lg, 0.0).astype(lg_ref.dtype)
+    v_ref[...] = jnp.where(m, v, 0.0).astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fast_gates", "block_s", "interpret"))
+def serve_forward_multi(frames, mask, pidx, pol_ws, *, fast_gates: bool,
+                        block_s: int | None = None,
+                        interpret: bool | None = None):
+    """Cross-policy masked fixed-slot policy forward — ``serve_forward``
+    with a leading policy axis on the weights
+    (``ref.serve_forward_multi_ref`` is the ground truth).
+
+    frames: (S, D) f32 packed slot; mask: (S,) lane-validity; pidx: (S,)
+    int32 per-lane policy index; pol_ws: the stacked
+    ``rl/ppo.py::stack_policy_weights`` tuple ((N, ...) arrays) ->
+    (logits (S, n_actions) f32, v (S,) f32), pad lanes and unroutable
+    ``pidx`` lanes exactly zero.
+
+    Same grid/blocking as ``serve_forward``; the policy axis is a static
+    unroll inside the kernel body (every checkpoint's weights are a
+    handful of small matrices, VMEM-resident per block), so one compiled
+    program serves N checkpoints in one dispatch.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S, D = frames.shape
+    N = pol_ws[0].shape[0]
+    n_act = pol_ws[4].shape[2]
+    bs = min(block_s or 256, S)
+    while S % bs:
+        bs //= 2
+    mask = mask.astype(jnp.int32)
+    pidx = pidx.astype(jnp.int32)
+    kernel = functools.partial(_serve_forward_multi_kernel,
+                               fast_gates=fast_gates, n_policies=N)
+    w1, b1, w2, b2, piw, pib, vw, vb = pol_ws
+    Hp = w1.shape[2]
+    logits, v = pl.pallas_call(
+        kernel,
+        grid=(S // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, D), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((N, D, Hp), lambda i: (0, 0, 0)),
+            pl.BlockSpec((N, Hp), lambda i: (0, 0)),
+            pl.BlockSpec((N, Hp, Hp), lambda i: (0, 0, 0)),
+            pl.BlockSpec((N, Hp), lambda i: (0, 0)),
+            pl.BlockSpec((N, Hp, n_act), lambda i: (0, 0, 0)),
+            pl.BlockSpec((N, n_act), lambda i: (0, 0)),
+            pl.BlockSpec((N, Hp, 1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((N, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, n_act), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, n_act), jnp.float32),
+            jax.ShapeDtypeStruct((S,), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(),
+        interpret=interpret,
+    )(frames, mask, pidx, w1, b1, w2, b2, piw, pib, vw, vb)
+    return logits, v
+
+
 # ---------------------------------------------------------------------------
 # The whole-horizon rollout family: one kernel body, two cells, any A
 # ---------------------------------------------------------------------------

@@ -244,6 +244,43 @@ def serve_forward(frames, mask, pol_w, *, fast_gates, block_s=None,
                               interpret=interpret)
 
 
+def serve_forward_multi(frames, mask, pidx, pol_ws, *, fast_gates,
+                        block_s=None, interpret=None):
+    """Cross-policy masked fixed-slot policy forward — the multi-tenant
+    serving dispatch (one server, many checkpoints): the packed request
+    slot ``frames`` (S, D) f32, lane-validity ``mask`` (S,), and
+    per-lane policy indices ``pidx`` (S,) int32 through N stacked
+    actor-critic checkpoints (``pol_ws`` = the
+    ``rl/ppo.py::stack_policy_weights`` tuple, (N, ...) leading policy
+    axis) -> (logits (S, n_actions), v (S,)), pad lanes and unroutable
+    ``pidx`` lanes exactly zeroed INSIDE the dispatch. Every lane's
+    output is bitwise-identical to the single-policy ``serve_forward``
+    of its own checkpoint at the same slot shape — each checkpoint's
+    forward runs the exact single-policy cell over the full slot and
+    lanes select their row, so cross-policy batching cannot skew a
+    tenant's actions (pinned by the N-policies-vs-N-servers parity
+    tests). On TPU this is the compiled Pallas kernel
+    (``aip_step.serve_forward_multi``); elsewhere the identical-math
+    oracle (``ref.serve_forward_multi_ref``).
+
+    ``interpret=None`` is the production dispatch above; passing a bool
+    forces the Pallas kernel itself (interpret mode off-TPU — the parity
+    tests exercise the real grid/block machinery that way).
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _aip.serve_forward_multi(frames, mask, pidx,
+                                            tuple(pol_ws),
+                                            fast_gates=fast_gates,
+                                            block_s=block_s,
+                                            interpret=False)
+        return _ref.serve_forward_multi_ref(tuple(pol_ws), frames, mask,
+                                            pidx, fast_gates=fast_gates)
+    return _aip.serve_forward_multi(frames, mask, pidx, tuple(pol_ws),
+                                    fast_gates=fast_gates,
+                                    block_s=block_s, interpret=interpret)
+
+
 def rmsnorm(x, g, *, eps: float = 1e-6):
     shp = x.shape
     out = _rms.rmsnorm(x.reshape(-1, shp[-1]), g, eps=eps,

@@ -278,6 +278,40 @@ def serve_forward_ref(pol_w, frames, mask, *, fast_gates: bool):
             jnp.where(m, v, 0.0))
 
 
+def serve_forward_multi_ref(pol_ws, frames, mask, pidx, *,
+                            fast_gates: bool):
+    """Cross-policy masked slot forward — the ``serve_forward_multi``
+    kernel's ground truth and the off-TPU dispatch. ``pol_ws`` is the
+    stacked ``rl/ppo.py::stack_policy_weights`` tuple ((N, ...) leading
+    policy axis); ``pidx``: (S,) int32 per-lane policy index; frames and
+    mask as in ``serve_forward_ref`` -> (logits (S, n_actions), v (S,)),
+    pad lanes exactly zeroed, and any lane whose ``pidx`` is outside
+    [0, N) zeroed too (an unroutable lane must not silently run some
+    checkpoint).
+
+    Every policy's forward runs over the FULL slot at the same (S, d_in)
+    program shape as the single-policy ``serve_forward_ref``, and lanes
+    select their own policy's row afterwards — N slot-shaped GEMMs
+    instead of a per-lane weight gather. That is deliberate: the gather
+    would change the contraction the MXU sees and break the bitwise
+    N-policies-vs-N-separate-servers parity this route pins; the N-fold
+    slot FLOPs are the price, paid at shapes where per-dispatch overhead,
+    not GEMM FLOPs, dominates (N = a handful of region families)."""
+    S = frames.shape[0]
+    n_pol = pol_ws[0].shape[0]
+    logits = jnp.zeros((S, pol_ws[4].shape[-1]), jnp.float32)
+    v = jnp.zeros((S,), jnp.float32)
+    for n in range(n_pol):
+        lg_n, v_n = _policy_fwd_ref(tuple(w[n] for w in pol_ws), frames,
+                                    fast_gates)
+        sel = pidx == n
+        logits = jnp.where(sel[:, None], lg_n, logits)
+        v = jnp.where(sel, v_n, v)
+    m = mask != 0
+    return (jnp.where(m[:, None], logits, 0.0),
+            jnp.where(m, v, 0.0))
+
+
 def policy_rollout_ref(ls, s0, frames0, aip_w, pol_w, gumbel, bits, done,
                        noise, reset_ls, *, kind: str, n_agents: int,
                        fast_gates: bool, tick_fn, dset_fn, obs_fn):

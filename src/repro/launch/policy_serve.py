@@ -2,38 +2,52 @@
 
     PYTHONPATH=src python -m repro.launch.policy_serve --domain traffic \
         --regions 256 --rps 20000 --duration-s 2 --slot 128
+    PYTHONPATH=src python -m repro.launch.policy_serve --domain traffic \
+        --bimodal --buckets 16,64,256          # multi-slot bucketed server
+    PYTHONPATH=src python -m repro.launch.policy_serve --domain traffic \
+        --bimodal --calibrate 3 --n-policies 4 # calibrated + cross-policy
     PYTHONPATH=src python -m repro.launch.policy_serve --domain warehouse \
         --ckpt-dir ckpts/wh --slot 64 --out serve.json
 
 The deployment half of the training story: thousands of heterogeneous
 agent regions (ragged grid sizes, staggered episode phases —
-``serving/request.py``'s trace model) stream action requests at a fixed
-offered load; ``serving/scheduler.py::SlotScheduler`` packs them into
-fixed-shape slots earliest-deadline-first, and
-``serving/server.py::PolicyServer`` drives each slot through ONE jitted
-masked policy forward (``kernels/ops.py::serve_forward``). The replay
-reports p50/p99 request latency (arrival -> slot completion, wall
-clock, queueing included) and sustained QPS — the serving contract and
-measurement method are docs/ARCHITECTURE.md §8.
+``serving/request.py``'s trace model; ``--bimodal`` switches the burst
+sizes to the heavy-tailed bimodal mix) stream action requests at a
+fixed offered load; ``serving/scheduler.py`` packs them into slots
+earliest-deadline-first — one fixed shape (``--slot``), an explicit
+bucket set (``--buckets 16,64,256``), or a set calibrated offline from
+the trace itself (``--calibrate K``) — and
+``serving/server.py::PolicyServer`` drives each slot through a table of
+jitted masked policy forwards (``kernels/ops.py::serve_forward``; with
+``--n-policies N`` a cross-policy family batched per lane through
+``kernels/ops.py::serve_forward_multi``). The replay reports p50/p99
+request latency (arrival -> slot completion, wall clock, queueing
+included), sustained QPS, and the padded-lane waste observability
+(``ServeStats``: padded_lane_frac + per-shape dispatch/occupancy
+counters) — the serving contract and measurement method are
+docs/ARCHITECTURE.md §8.
 
 ``--ckpt-dir`` restores the policy from an ``rl_train`` checkpoint via
 ``checkpoint/ckpt.py::restore_subtree`` — only the ``['policy']``
 leaves' bytes are read; the optimizer/rollout/simulator payload of the
-training checkpoint never touches the inference process.
+training checkpoint never touches the inference process. With
+``--n-policies N`` the same restored tree seeds checkpoint 0 and the
+remaining N-1 are fresh inits (stand-ins for per-region fine-tunes).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.launch.rl_train import build_domain
 from repro.rl import ppo
-from repro.serving import PolicyServer, TraceConfig, synthetic_trace
+from repro.serving import (BIMODAL_SIZES, BIMODAL_WEIGHTS, PolicyServer,
+                           TraceConfig, calibrate_buckets, synthetic_trace)
 
 
 def build_server_and_trace(args):
@@ -43,8 +57,10 @@ def build_server_and_trace(args):
     pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim,
                          n_actions=gs.spec.n_actions,
                          frame_stack=frame_stack)
-    info = {"domain": args.domain, "slot": args.slot, "route": args.route}
+    n_policies = getattr(args, "n_policies", 1)
     template = ppo.init_policy(pcfg, jax.random.PRNGKey(args.seed))
+    info = {"domain": args.domain, "route": args.route,
+            "n_policies": n_policies}
     if args.ckpt_dir:
         params, step, meta = ckpt.restore_subtree(
             args.ckpt_dir, template, "['policy']", step=args.step)
@@ -52,15 +68,35 @@ def build_server_and_trace(args):
         info["ckpt_metadata"] = meta
     else:
         params = template
+    if n_policies > 1:
+        params = [params] + [
+            ppo.init_policy(pcfg, jax.random.PRNGKey(args.seed + 1 + n))
+            for n in range(n_policies - 1)]
+
+    tcfg = TraceConfig(n_regions=args.regions, mean_rps=args.rps,
+                       horizon_s=args.duration_s,
+                       frame_dim=gs.spec.obs_dim * frame_stack,
+                       seed=args.seed, n_policies=n_policies)
+    if getattr(args, "bimodal", False):
+        tcfg = dataclasses.replace(tcfg, region_sizes=BIMODAL_SIZES,
+                                   region_size_weights=BIMODAL_WEIGHTS)
+    trace = synthetic_trace(tcfg)
+    info["requests"] = len(trace)
+
+    if getattr(args, "calibrate", None):
+        slot = calibrate_buckets(trace, max_buckets=args.calibrate,
+                                 max_slot=args.slot)
+        info["calibrated"] = True
+    elif getattr(args, "buckets", None):
+        slot = tuple(int(s) for s in args.buckets.split(","))
+    else:
+        slot = args.slot
+    info["slot"] = list(slot) if isinstance(slot, tuple) else slot
+
     server = PolicyServer(params, obs_dim=pcfg.obs_dim,
                           n_actions=pcfg.n_actions,
-                          frame_stack=frame_stack, slot=args.slot,
+                          frame_stack=frame_stack, slot=slot,
                           route=args.route)
-    trace = synthetic_trace(TraceConfig(
-        n_regions=args.regions, mean_rps=args.rps,
-        horizon_s=args.duration_s, frame_dim=server.frame_dim,
-        seed=args.seed))
-    info["requests"] = len(trace)
     return server, trace, info
 
 
@@ -68,7 +104,24 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--domain", choices=["traffic", "warehouse"],
                     default="traffic")
-    ap.add_argument("--slot", type=int, default=128)
+    ap.add_argument("--slot", type=int, default=128,
+                    help="single compiled slot shape (also the max_slot "
+                         "cap for --calibrate)")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated ascending slot shapes, e.g. "
+                         "16,64,256 — the bucketed multi-slot server")
+    ap.add_argument("--calibrate", type=int, default=None, metavar="K",
+                    help="pick <= K bucket shapes offline from the "
+                         "trace's burst-size distribution "
+                         "(serving/scheduler.py::calibrate_buckets); "
+                         "overrides --buckets/--slot")
+    ap.add_argument("--n-policies", type=int, default=1,
+                    help="cross-policy batching: serve N checkpoints "
+                         "from one server, lane-routed by the request's "
+                         "region-family index")
+    ap.add_argument("--bimodal", action="store_true",
+                    help="bimodal region burst sizes (the bucketed "
+                         "scheduler's target workload)")
     ap.add_argument("--regions", type=int, default=256)
     ap.add_argument("--rps", type=float, default=20000.0)
     ap.add_argument("--duration-s", type=float, default=2.0)
@@ -84,10 +137,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     server, trace, info = build_server_and_trace(args)
-    # compile the slot program before the clock starts — the first
+    # compile every slot program before the clock starts — the first
     # dispatch of a jitted shape is a trace+compile, not a serve latency
-    server.forward_slot(np.zeros((args.slot, server.frame_dim),
-                                 np.float32), 1)
+    server.warmup()
     report = server.serve(trace)
     out = {**info, **report.summary()}
     print(json.dumps(out, indent=1))

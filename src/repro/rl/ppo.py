@@ -120,6 +120,19 @@ def flat_policy_weights(params):
             params["v"]["w"], params["v"]["b"])
 
 
+def stack_policy_weights(params_list):
+    """Stack N checkpoints' ``flat_policy_weights`` tuples into one
+    tuple of (N, ...) arrays — the cross-policy serving ABI consumed by
+    ``kernels/ops.py::serve_forward_multi`` (one server, many
+    checkpoints: lane p of a packed slot runs checkpoint
+    ``policy_index[p]``). All checkpoints must share one architecture
+    (same PPOConfig shapes); ``jnp.stack`` raises otherwise. Index 0 of
+    every leading axis is ``params_list[0]``, so a one-entry stack is
+    the single-policy ABI with a size-1 policy axis."""
+    flats = [flat_policy_weights(p) for p in params_list]
+    return tuple(jnp.stack(ws) for ws in zip(*flats))
+
+
 def policy_forward(params, x, *, fast_gates: bool):
     """Actor-critic forward pass. ``fast_gates`` (required — thread
     ``PPOConfig.fast_gates`` so the config stays the single source of

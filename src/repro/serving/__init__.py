@@ -5,20 +5,32 @@ in the real networked system for heavy request traffic. Three pieces
 (the serving contract, docs/ARCHITECTURE.md §8):
 
 - ``request.py`` — the request model (agent-region id, frame-stacked
-  observation, deadline class) and a deterministic synthetic open-loop
-  traffic generator: thousands of heterogeneous agent regions with
-  ragged grid sizes and staggered episode phases.
+  observation, region burst size, per-region checkpoint index, deadline
+  class) and a deterministic synthetic open-loop traffic generator:
+  thousands of heterogeneous agent regions with ragged grid sizes and
+  staggered episode phases, optionally bimodal in burst size.
 - ``scheduler.py`` — ``SlotScheduler``: packs in-flight requests into
   fixed-shape slots, earliest-deadline-first, FIFO within a deadline
   class, no silent drops, exact deadline-miss accounting.
-- ``server.py`` — ``PolicyServer``: drives packed slots through ONE
-  jitted masked policy forward (``kernels/ops.py::serve_forward``) at a
-  fixed slot shape, replays open-loop traces, and reports p50/p99
-  latency + sustained QPS.
+  ``BucketedSlotScheduler`` right-sizes every dispatch into the
+  smallest compiled slot shape that admits it; ``calibrate_buckets``
+  picks the shape set offline from a trace's burst-size distribution.
+- ``server.py`` — ``PolicyServer``: drives packed slots through a table
+  of jitted masked policy forwards (``kernels/ops.py::serve_forward``,
+  one compiled program per slot shape, warmed before the clock starts),
+  optionally batching N checkpoints per dispatch
+  (``kernels/ops.py::serve_forward_multi``), replays open-loop traces,
+  and reports p50/p99 latency + sustained QPS + padded-lane waste
+  (``ServeStats``).
 """
-from repro.serving.request import Request, TraceConfig, synthetic_trace
-from repro.serving.scheduler import SlotScheduler
-from repro.serving.server import PolicyServer, ServeReport
+from repro.serving.request import (BIMODAL_SIZES, BIMODAL_WEIGHTS, Request,
+                                   TraceConfig, synthetic_trace)
+from repro.serving.scheduler import (BucketedSlotScheduler, SlotScheduler,
+                                     burst_sizes, calibrate_buckets,
+                                     expected_padded_waste)
+from repro.serving.server import (PolicyServer, ServeReport, ServeStats)
 
-__all__ = ["Request", "TraceConfig", "synthetic_trace", "SlotScheduler",
-           "PolicyServer", "ServeReport"]
+__all__ = ["Request", "TraceConfig", "synthetic_trace", "BIMODAL_SIZES",
+           "BIMODAL_WEIGHTS", "SlotScheduler", "BucketedSlotScheduler",
+           "burst_sizes", "calibrate_buckets", "expected_padded_waste",
+           "PolicyServer", "ServeReport", "ServeStats"]

@@ -27,13 +27,24 @@ class Request:
     """One action request: ``frame`` is the (frame_stack * obs_dim,) f32
     observation the policy acts on; ``deadline`` is absolute
     (``arrival + deadline class bound``), which is what makes
-    earliest-deadline-first scheduling FIFO within a class."""
+    earliest-deadline-first scheduling FIFO within a class.
+
+    ``size`` is the request's *size class* — the lane count of the region
+    burst it arrived in (a size-k region submits k requests per tick, all
+    sharing ``size=k``). It is what the bucketed scheduler's admission
+    rule keys on: the smallest compiled slot shape >= ``size`` is the
+    burst's admissible bucket (``scheduler.py::BucketedSlotScheduler``).
+    ``policy`` is the region-family checkpoint index for cross-policy
+    batched serving (``kernels/ops.py::serve_forward_multi``): one
+    server, many checkpoints, one policy per region family."""
     rid: int            # unique, assigned in arrival order
     region: int         # agent-region id (which grid submitted it)
     klass: int          # deadline-class index into TraceConfig.classes_s
     arrival: float      # seconds since trace start (open-loop, fixed)
     deadline: float     # absolute seconds: arrival + classes_s[klass]
     frame: np.ndarray   # (frame_dim,) f32
+    size: int = 1       # lanes in this request's region burst (size class)
+    policy: int = 0     # region-family checkpoint index (multi-tenant)
 
 
 @dataclass(frozen=True)
@@ -42,7 +53,15 @@ class TraceConfig:
     offered load; each region ticks with a common period ``L / mean_rps``
     (L = total agent lanes) at its own random phase, submitting one
     request per lane per tick, so region size is exactly its traffic
-    share and bursts stay staggered."""
+    share and bursts stay staggered.
+
+    ``region_size_weights`` (same length as ``region_sizes``; ``None`` =
+    uniform) skews the region-size draw — the bimodal serving workload
+    (many tiny regions plus a few large ones) is just a weighted size
+    distribution, e.g. ``region_sizes=(1, 2, 4, 64)`` with weights
+    ``(0.72, 0.18, 0.06, 0.04)``. ``n_policies`` > 1 assigns each region
+    to a checkpoint family (``region % n_policies``) for cross-policy
+    batched serving; every request carries its region's ``policy``."""
     n_regions: int = 64
     region_sizes: Tuple[int, ...] = (1, 2, 4, 8)   # ragged grid sizes
     mean_rps: float = 2000.0
@@ -51,6 +70,16 @@ class TraceConfig:
     class_mix: Tuple[float, ...] = (0.25, 0.5, 0.25)
     frame_dim: int = 41
     seed: int = 0
+    region_size_weights: Optional[Tuple[float, ...]] = None
+    n_policies: int = 1
+
+
+#: The bimodal serving workload of the serve bench's bucketed-vs-single
+#: rows: mostly tiny regions (1-4 lanes — each tick would ride a mostly
+#: padded lane batch at one big compiled slot shape) plus a 4% family of
+#: 64-lane regions that carry roughly half the request volume.
+BIMODAL_SIZES: Tuple[int, ...] = (1, 2, 4, 64)
+BIMODAL_WEIGHTS: Tuple[float, ...] = (0.72, 0.18, 0.06, 0.04)
 
 
 def synthetic_trace(cfg: TraceConfig,
@@ -63,7 +92,16 @@ def synthetic_trace(cfg: TraceConfig,
     normal — the forward cost is data-independent, so latency numbers are
     identical either way."""
     rng = np.random.default_rng(cfg.seed)
-    sizes = rng.choice(np.asarray(cfg.region_sizes), size=cfg.n_regions)
+    weights = cfg.region_size_weights
+    if weights is not None:
+        if len(weights) != len(cfg.region_sizes):
+            raise ValueError(
+                f"region_size_weights has {len(weights)} entries for "
+                f"{len(cfg.region_sizes)} region_sizes")
+        w = np.asarray(weights, dtype=np.float64)
+        weights = w / w.sum()
+    sizes = rng.choice(np.asarray(cfg.region_sizes), size=cfg.n_regions,
+                       p=weights)
     total_lanes = int(sizes.sum())
     period = total_lanes / cfg.mean_rps
     phases = rng.uniform(0.0, period, size=cfg.n_regions)
@@ -92,5 +130,6 @@ def synthetic_trace(cfg: TraceConfig,
             out.append(Request(rid=len(out), region=region, klass=klass,
                                arrival=arrival,
                                deadline=arrival + cfg.classes_s[klass],
-                               frame=frame))
+                               frame=frame, size=lanes,
+                               policy=region % cfg.n_policies))
     return out

@@ -1,20 +1,41 @@
-"""PolicyServer: fixed-slot continuous-batching policy inference.
+"""PolicyServer: multi-slot, multi-policy continuous-batching inference.
 
-One server = one trained policy + ONE jitted slot program. Every
-dispatch runs ``kernels/ops.py::serve_forward`` on a packed
-(slot, frame_dim) batch with a lane-validity mask — pad lanes are zeroed
-inside the dispatch (the ragged-batch contract, ``envs/api.py``), and
-actions are the greedy ``argmax`` over the masked logits, exactly the
-deployment policy ``rl/ppo.py::make_evaluator`` measures.
+One server = one or more trained policies + a small table of jitted slot
+programs. Every dispatch runs one compiled masked slot forward on a
+packed (shape, frame_dim) batch with a lane-validity mask — pad lanes
+are zeroed inside the dispatch (the ragged-batch contract,
+``envs/api.py``), and actions are the greedy ``argmax`` over the masked
+logits, exactly the deployment policy ``rl/ppo.py::make_evaluator``
+measures.
 
-Reproducibility contract (docs/ARCHITECTURE.md §8): the slot shape is
-static per server, and the forward always runs as the same jitted
+**Slot shapes.** ``slot`` is either one shape (the PR-8 fixed-slot
+server: ONE compiled program, every dispatch padded to it) or an
+ascending bucket set, e.g. ``(16, 64, 256)`` — one compiled program per
+shape, all warmed before the serving clock starts (``warmup``), with
+``scheduler.py::BucketedSlotScheduler`` right-sizing each dispatch into
+the smallest admissible shape. Packing reuses one preallocated staging
+buffer per shape (no per-dispatch allocation; pad lanes keep whatever
+the previous dispatch left — garbage by contract, masked at the kernel
+boundary).
+
+**Policies.** ``params`` is either one policy tree (the single-tenant
+``kernels/ops.py::serve_forward`` program) or a list of N trees —
+cross-policy batching: the weights stack into one leading policy axis
+(``rl/ppo.py::stack_policy_weights``) and every lane of a packed slot
+selects its own checkpoint by index inside the one dispatch
+(``kernels/ops.py::serve_forward_multi``), so one server process serves
+a whole family of per-region checkpoints.
+
+Reproducibility contract (docs/ARCHITECTURE.md §8): the slot shape set
+is static per server, and each forward always runs as the same jitted
 program — XLA's GEMM reduction order is shape- and program-dependent, so
-the *compiled fixed-slot program* is the unit of bitwise
-reproducibility. Within it, a real lane's (logits, v, action) are
+the *compiled slot program* is the unit of bitwise reproducibility.
+Within one program, a real lane's (logits, v, action) are
 bitwise-identical whatever the pad lanes hold and wherever in the slot
-the lane sits — pinned by ``tests/test_serving.py`` on both the oracle
-and forced-interpret-kernel routes.
+the lane sits — and a multi-policy lane is bitwise-identical to the
+single-policy server of its own checkpoint at the same shape. Pinned by
+``tests/test_serving.py`` on both the oracle and
+forced-interpret-kernel routes.
 
 Latency measurement (the driver + bench method): open-loop trace replay
 on a wall clock. Request latency = (slot dispatch completion, blocked on
@@ -27,7 +48,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,15 +56,77 @@ import numpy as np
 
 from repro.envs.api import pad_mask
 from repro.kernels import ops
-from repro.rl.ppo import flat_policy_weights, policy_forward
+from repro.rl.ppo import (flat_policy_weights, policy_forward,
+                          stack_policy_weights)
 from repro.serving.request import Request
-from repro.serving.scheduler import SlotScheduler
+from repro.serving.scheduler import BucketedSlotScheduler, SlotScheduler
+
+#: occupancy-fraction bins per slot shape in ``ServeStats`` histograms
+HIST_BINS = 8
+
+
+@dataclass
+class ServeStats:
+    """Padding-waste observability, accumulated per dispatch.
+
+    ``record(shape, n)`` logs one dispatch of ``n`` real lanes in a
+    ``shape``-lane program. The exported counters (all in ``summary()``
+    and surfaced by ``repro.launch.policy_serve`` + the serve bench
+    JSON): dispatches and real/padded lane totals per slot shape, the
+    aggregate ``padded_lane_frac`` (padded lanes / dispatched lanes —
+    the pure-waste FLOP fraction the bucketed scheduler exists to
+    shrink), and a per-shape occupancy histogram (``HIST_BINS`` equal
+    occupancy-fraction bins; a healthy bucket loads the last bin)."""
+    dispatches_by_slot: Dict[int, int] = field(default_factory=dict)
+    lanes_by_slot: Dict[int, int] = field(default_factory=dict)
+    occupancy_hist_by_slot: Dict[int, List[int]] = field(
+        default_factory=dict)
+
+    def record(self, shape: int, n: int) -> None:
+        self.dispatches_by_slot[shape] = (
+            self.dispatches_by_slot.get(shape, 0) + 1)
+        self.lanes_by_slot[shape] = self.lanes_by_slot.get(shape, 0) + n
+        hist = self.occupancy_hist_by_slot.setdefault(
+            shape, [0] * HIST_BINS)
+        hist[min(HIST_BINS - 1, max(0, (n - 1) * HIST_BINS // shape))] += 1
+
+    @property
+    def dispatches(self) -> int:
+        return sum(self.dispatches_by_slot.values())
+
+    @property
+    def total_lanes(self) -> int:
+        """Dispatched lanes, real + padded (occupancy denominator)."""
+        return sum(s * k for s, k in self.dispatches_by_slot.items())
+
+    @property
+    def real_lanes(self) -> int:
+        return sum(self.lanes_by_slot.values())
+
+    @property
+    def padded_lane_frac(self) -> float:
+        total = self.total_lanes
+        return (total - self.real_lanes) / total if total else 0.0
+
+    def summary(self) -> Dict:
+        return {
+            "padded_lane_frac": self.padded_lane_frac,
+            "dispatches_by_slot": {str(s): k for s, k in
+                                   sorted(self.dispatches_by_slot.items())},
+            "mean_occupancy_by_slot": {
+                str(s): self.lanes_by_slot[s] / (s * k)
+                for s, k in sorted(self.dispatches_by_slot.items())},
+            "occupancy_hist_by_slot": {
+                str(s): list(h) for s, h in
+                sorted(self.occupancy_hist_by_slot.items())},
+        }
 
 
 @dataclass
 class ServeReport:
     """One trace replay's results. Latencies in seconds; ``qps`` is
-    served requests / makespan (first arrival -> last completion)."""
+    served requests / makespan (first arrival -> last completion);
+    ``stats`` is the padding-waste observability (``ServeStats``)."""
     requests: int
     served: int
     p50_s: float
@@ -54,6 +137,7 @@ class ServeReport:
     max_queue_depth: int
     dispatches: int
     mean_occupancy: float        # mean real lanes per dispatched slot
+    stats: ServeStats = field(default_factory=ServeStats)
     latencies_s: List[float] = field(repr=False, default_factory=list)
 
     def summary(self) -> Dict:
@@ -67,16 +151,24 @@ class ServeReport:
             "max_queue_depth": self.max_queue_depth,
             "dispatches": self.dispatches,
             "mean_occupancy": self.mean_occupancy,
+            **self.stats.summary(),
         }
 
 
 class PolicyServer:
-    """Continuous-batching inference over one fixed-slot jitted program.
+    """Continuous-batching inference over a table of jitted slot programs.
+
+    ``slot``: one shape (fixed-slot server) or an ascending bucket set
+    (multi-slot server; dispatches right-size via
+    ``BucketedSlotScheduler``). ``params``: one policy tree, or a list
+    of N trees for cross-policy batching (lane -> checkpoint by the
+    request's ``policy`` index).
 
     ``route`` selects the forward implementation (all three agree on
     logits/actions bitwise under jit; see the module docstring):
-      - ``"auto"``: the production ``ops.serve_forward`` dispatch
-        (compiled Pallas kernel on TPU, identical-math oracle elsewhere);
+      - ``"auto"``: the production ``ops.serve_forward`` /
+        ``ops.serve_forward_multi`` dispatch (compiled Pallas kernel on
+        TPU, identical-math oracle elsewhere);
       - ``"interpret"``: force the Pallas kernel in interpret mode (the
         parity tests' route);
       - ``"xla"``: masked ``rl/ppo.py::policy_forward`` — the training
@@ -85,47 +177,126 @@ class PolicyServer:
     """
 
     def __init__(self, params, *, obs_dim: int, n_actions: int,
-                 frame_stack: int = 1, slot: int = 64,
+                 frame_stack: int = 1,
+                 slot: Union[int, Sequence[int]] = 64,
                  fast_gates: bool = True, route: str = "auto"):
         if route not in ("auto", "interpret", "xla"):
             raise ValueError(f"unknown route: {route!r}")
-        self.slot = slot
+        shapes = (slot,) if isinstance(slot, int) else tuple(slot)
+        shapes = tuple(sorted(set(int(s) for s in shapes)))
+        if not shapes or shapes[0] < 1:
+            raise ValueError(f"slot shapes must be >= 1, got {slot!r}")
+        self.slots = shapes
+        self.slot = shapes[-1]           # the largest compiled shape
         self.frame_dim = obs_dim * frame_stack
         self.n_actions = n_actions
-        pw = flat_policy_weights(params)
+        multi = isinstance(params, (list, tuple))
+        self.n_policies = len(params) if multi else 1
+        self._staging: Dict[int, np.ndarray] = {}
+        self._pidx_staging: Dict[int, np.ndarray] = {}
+        self._warmed: set = set()
 
-        if route == "xla":
-            def fwd(frames, mask):
-                logits, v = policy_forward(params, frames,
-                                           fast_gates=fast_gates)
-                m = mask != 0
-                logits = jnp.where(m[:, None], logits, 0.0)
-                v = jnp.where(m, v, 0.0)
-                return jnp.argmax(logits, -1), logits, v
+        if multi:
+            pws = stack_policy_weights(list(params))
+            if route == "xla":
+                def fwd(frames, mask, pidx):
+                    m = mask != 0
+                    logits = jnp.zeros(
+                        (frames.shape[0], n_actions), jnp.float32)
+                    v = jnp.zeros((frames.shape[0],), jnp.float32)
+                    for n, p in enumerate(params):
+                        lg_n, v_n = policy_forward(p, frames,
+                                                   fast_gates=fast_gates)
+                        sel = pidx == n
+                        logits = jnp.where(sel[:, None], lg_n, logits)
+                        v = jnp.where(sel, v_n, v)
+                    logits = jnp.where(m[:, None], logits, 0.0)
+                    v = jnp.where(m, v, 0.0)
+                    return jnp.argmax(logits, -1), logits, v
+            else:
+                interpret = True if route == "interpret" else None
+
+                def fwd(frames, mask, pidx):
+                    logits, v = ops.serve_forward_multi(
+                        frames, mask, pidx, pws, fast_gates=fast_gates,
+                        interpret=interpret)
+                    return jnp.argmax(logits, -1), logits, v
         else:
-            interpret = True if route == "interpret" else None
+            pw = flat_policy_weights(params)
+            if route == "xla":
+                def fwd(frames, mask, pidx):
+                    logits, v = policy_forward(params, frames,
+                                               fast_gates=fast_gates)
+                    m = mask != 0
+                    logits = jnp.where(m[:, None], logits, 0.0)
+                    v = jnp.where(m, v, 0.0)
+                    return jnp.argmax(logits, -1), logits, v
+            else:
+                interpret = True if route == "interpret" else None
 
-            def fwd(frames, mask):
-                logits, v = ops.serve_forward(frames, mask, pw,
-                                              fast_gates=fast_gates,
-                                              interpret=interpret)
-                return jnp.argmax(logits, -1), logits, v
+                def fwd(frames, mask, pidx):
+                    del pidx             # single policy: one checkpoint
+                    logits, v = ops.serve_forward(frames, mask, pw,
+                                                  fast_gates=fast_gates,
+                                                  interpret=interpret)
+                    return jnp.argmax(logits, -1), logits, v
 
         self._fwd = jax.jit(fwd)
 
-    def forward_slot(self, frames, n_valid: int):
-        """One dispatch on an already-padded (slot, frame_dim) batch with
-        ``n_valid`` real lanes -> (actions (slot,), logits, v), blocked
-        on device completion. Pad-lane outputs are zeros (and action 0)
-        by the kernel-boundary mask — garbage by contract."""
-        out = self._fwd(jnp.asarray(frames),
-                        pad_mask(n_valid, self.slot))
+    def forward_slot(self, frames, n_valid: int, pidx=None):
+        """One dispatch on an already-padded (shape, frame_dim) batch
+        with ``n_valid`` real lanes -> (actions (shape,), logits, v),
+        blocked on device completion. The compiled program is selected
+        by the batch's shape (one jitted specialization per slot shape).
+        ``pidx`` (shape,) int32 routes each lane to its checkpoint on a
+        multi-policy server (zeros — checkpoint 0 — when omitted).
+        Pad-lane outputs are zeros (and action 0) by the kernel-boundary
+        mask — garbage by contract."""
+        frames = jnp.asarray(frames)
+        shape = frames.shape[0]
+        if pidx is None:
+            pidx = jnp.zeros((shape,), jnp.int32)
+        out = self._fwd(frames, pad_mask(n_valid, shape),
+                        jnp.asarray(pidx, dtype=jnp.int32))
+        self._warmed.add(shape)
         return jax.block_until_ready(out)
 
-    def _pack(self, batch: List[Request]) -> np.ndarray:
-        frames = np.zeros((self.slot, self.frame_dim), np.float32)
-        frames[: len(batch)] = [req.frame for req in batch]
-        return frames
+    def warmup(self, shapes: Optional[Sequence[int]] = None) -> None:
+        """Compile every slot program before the serving clock starts —
+        a trace+compile must never land on a dispatch latency. Idempotent
+        per shape; ``serve`` calls it with the scheduler's shape set."""
+        for shape in shapes if shapes is not None else self.slots:
+            if shape not in self._warmed:
+                frames, pidx = self._pack([], shape)
+                self.forward_slot(frames, 0, pidx)
+
+    def _pack(self, batch: List[Request], shape: int):
+        """Pack ``batch`` into the preallocated ``shape``-lane staging
+        buffers -> (frames (shape, frame_dim) f32, pidx (shape,) i32).
+        One buffer pair per slot shape, allocated on first use and
+        reused every dispatch — no per-dispatch allocation, and no
+        re-pad of the tail: pad lanes keep whatever the previous
+        dispatch left there, which the kernel-boundary mask makes
+        garbage by contract (pinned by the pad-content property test).
+        A slot-sized batch overwrites every lane, so it skips even
+        that."""
+        frames = self._staging.get(shape)
+        if frames is None:
+            frames = self._staging.setdefault(
+                shape, np.zeros((shape, self.frame_dim), np.float32))
+            self._pidx_staging[shape] = np.zeros((shape,), np.int32)
+        pidx = self._pidx_staging[shape]
+        if batch:
+            frames[:len(batch)] = [req.frame for req in batch]
+            pidx[:len(batch)] = [req.policy for req in batch]
+        return frames, pidx
+
+    def make_scheduler(self) -> SlotScheduler:
+        """The server's matching scheduler: bucketed over ``slots`` when
+        the server compiled several shapes, fixed-slot otherwise."""
+        if len(self.slots) > 1:
+            return BucketedSlotScheduler(self.slots)
+        return SlotScheduler(self.slot)
 
     def serve(self, trace: List[Request],
               scheduler: Optional[SlotScheduler] = None, *,
@@ -141,10 +312,11 @@ class PolicyServer:
         property tests' path)."""
         if mode not in ("wallclock", "virtual"):
             raise ValueError(f"unknown mode: {mode!r}")
-        sched = scheduler if scheduler is not None else SlotScheduler(
-            self.slot)
+        sched = scheduler if scheduler is not None else \
+            self.make_scheduler()
+        self.warmup(getattr(sched, "buckets", (sched.slot,)))
+        stats = ServeStats()
         latencies: List[float] = []
-        occupancy: List[int] = []
         next_req = 0
         n = len(trace)
         t_start = time.perf_counter()
@@ -165,15 +337,16 @@ class PolicyServer:
                     if wait > 0:
                         time.sleep(wait)
                 continue
-            batch = sched.next_batch()
-            self.forward_slot(self._pack(batch), len(batch))
+            shape, batch = sched.next_dispatch()
+            frames, pidx = self._pack(batch, shape)
+            self.forward_slot(frames, len(batch), pidx)
             if mode == "wallclock":
                 now = time.perf_counter() - t_start
             else:
                 now = now + service_time_s
             sched.complete(batch, now)
             last_done = now
-            occupancy.append(len(batch))
+            stats.record(shape, len(batch))
             latencies.extend(now - r.arrival for r in batch)
 
         makespan = max(last_done - (trace[0].arrival if trace else 0.0),
@@ -187,7 +360,8 @@ class PolicyServer:
             deadline_misses=sched.deadline_misses,
             misses_by_class=dict(sched.misses_by_class),
             max_queue_depth=sched.max_queue_depth,
-            dispatches=len(occupancy),
-            mean_occupancy=(float(np.mean(occupancy)) if occupancy
-                            else 0.0),
+            dispatches=stats.dispatches,
+            mean_occupancy=(stats.real_lanes / stats.dispatches
+                            if stats.dispatches else 0.0),
+            stats=stats,
             latencies_s=latencies)

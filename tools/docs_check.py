@@ -66,6 +66,15 @@ REQUIRED_SNIPPETS = {
         "kernels/ops.py::serve_forward",
         "envs/api.py::pad_lanes",
         "checkpoint/ckpt.py::restore_subtree",
+        # the bucket table + cross-policy ABI (§8, PR 9)
+        "serving/scheduler.py::BucketedSlotScheduler",
+        "serving/scheduler.py::calibrate_buckets",
+        "serving/scheduler.py::expected_padded_waste",
+        "serving/server.py::ServeStats",
+        "rl/ppo.py::stack_policy_weights",
+        "kernels/ops.py::serve_forward_multi",
+        "kernels/ref.py::serve_forward_multi_ref",
+        "kernels/aip_step.py::serve_forward_multi",
     ),
 }
 
