@@ -37,6 +37,13 @@ serve-bench:
 fault-smoke:
 	$(PY) tools/ci_fault_smoke.py
 
+# Serving chaos end-to-end: a quick virtual-clock policy_serve replay
+# under a deterministic SlowDispatch+CorruptCheckpoint plan — asserts a
+# clean drain, a rejected corrupt reload (old weights keep serving),
+# and a fault snapshot matching the plan (what CI's serve-chaos runs).
+serve-chaos:
+	$(PY) tools/ci_serve_chaos.py
+
 # Regression gate: re-measure the throughput benches and fail on a >30%
 # steps/s drop vs the committed results/bench baselines (side-effect-free).
 # Also fails when results/dryrun has zero ok cells (empty roofline).
@@ -51,4 +58,4 @@ dryrun:
 	$(PY) -m benchmarks.run --only roofline_report
 
 .PHONY: test-fast test-all docs-check bench-quick multi-agent-bench \
-	fleet-bench serve-bench fault-smoke bench-check dryrun
+	fleet-bench serve-bench fault-smoke serve-chaos bench-check dryrun

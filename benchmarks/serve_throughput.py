@@ -37,6 +37,22 @@ deadline while the bucketed server keeps them inside. A/B ratios are
 the MEDIAN over interleaved same-process pairs — a host stall (shared
 2-core box) lands in one pair, not the median.
 
+  overload    the admission-control A/B (PR 10, the overload contract
+              of ARCHITECTURE §8): one trace per offered-load multiple
+              of capacity (0.25x -> 2x), replayed on the deterministic
+              virtual clock twice — once on the naive drop-free server
+              (unbounded queue, silent misses) and once behind
+              ``serving/overload.py::AdmissionController`` (bounded
+              queue + deadline feasibility + brownout). Columns:
+              goodput (in-SLO QPS), shed rate, p99. Past saturation the
+              naive server collapses (nearly every request misses);
+              the admission server sheds explicitly and its goodput
+              stays in a band of its peak — that retention and the
+              2x goodput ratio are the committed claims. Virtual-clock
+              replays are bit-deterministic, so these baselines are
+              noise-free by construction (traffic only: scheduling
+              decisions are domain-independent).
+
 Committed baselines (``results/bench/serve_throughput_*.json``) store
 every entry higher-is-better so ``make bench-check``'s >30% regression
 gate applies uniformly: latencies are committed as inverse seconds
@@ -44,8 +60,11 @@ gate applies uniformly: latencies are committed as inverse seconds
 bimodal block commits the bucketed absolutes plus the A/B ratios
 (``bimodal_p99_ratio`` = single p99 / bucketed p99, ``bimodal_waste_
 ratio`` = single padded-lane fraction / bucketed — both > 1 means the
-bucketed server wins). The committed files are the per-row FLOOR of
->=3 full runs; ``--quick`` never writes them.
+bucketed server wins); the overload block commits the admission
+server's 2x-capacity goodput, its retention vs its own peak across the
+sweep, and its ratio over the collapsed naive server (all > or >> 1 is
+the graceful-degradation claim). The committed files are the per-row
+FLOOR of >=3 full runs; ``--quick`` never writes them.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
     PYTHONPATH=src python -m benchmarks.serve_throughput --ab [--quick]
@@ -69,6 +88,15 @@ AB_PAIRS = 5             # interleaved single/bucketed pairs per run
                          # (median over 5 absorbs two host stalls)
 AB_CLASSES = (0.0015, 0.01, 0.1)     # tight class: the in-SLO QPS lever
 AB_CLASS_MIX = (0.3, 0.5, 0.2)
+
+# the overload sweep's operating point: virtual clock, so capacity is
+# exactly OV_SLOT / OV_SVC requests/s and every replay is deterministic
+OV_SLOT = 32
+OV_SVC = 0.002                       # virtual per-dispatch service time
+OV_MULTS = (0.25, 0.5, 1.0, 1.5, 2.0)
+OV_CLASSES = (0.01, 0.05, 0.25)
+OV_HORIZON_S = 0.4
+OV_REGIONS = 48
 
 
 def _goodput(rep):
@@ -182,6 +210,71 @@ def bimodal_ab(domain: str, quick: bool = False):
     return rows, rates
 
 
+def overload_sweep(domain: str, quick: bool = False):
+    """Offered load 0.25x -> 2x of exact virtual-clock capacity, naive
+    vs admission-controlled, same trace -> (rows, committed-rates dict).
+    Bit-deterministic: the virtual clock fixes every dispatch at
+    ``OV_SVC`` seconds, so scheduler and admission decisions are a pure
+    function of the seeded trace — the committed floors are noise-free."""
+    from repro.launch.rl_train import build_domain
+    from repro.rl import ppo
+    from repro.serving import (AdmissionController, OverloadConfig,
+                               PolicyServer, TraceConfig, synthetic_trace)
+
+    mults = (0.5, 2.0) if quick else OV_MULTS
+    horizon_s = 0.1 if quick else OV_HORIZON_S
+    regions = 16 if quick else OV_REGIONS
+    capacity = OV_SLOT / OV_SVC
+    gs, _, _, frame_stack = build_domain(domain)
+    pcfg = ppo.PPOConfig(obs_dim=gs.spec.obs_dim,
+                         n_actions=gs.spec.n_actions,
+                         frame_stack=frame_stack)
+    server = PolicyServer(ppo.init_policy(pcfg, jax.random.PRNGKey(0)),
+                          obs_dim=pcfg.obs_dim, n_actions=pcfg.n_actions,
+                          frame_stack=frame_stack, slot=OV_SLOT)
+    server.warmup()
+
+    rows, sweep = [], {}
+    for mult in mults:
+        trace = synthetic_trace(TraceConfig(
+            n_regions=regions, mean_rps=mult * capacity,
+            horizon_s=horizon_s, frame_dim=server.frame_dim, seed=0,
+            classes_s=OV_CLASSES))
+        naive = server.serve(trace, mode="virtual", service_time_s=OV_SVC)
+        adm = server.serve(
+            trace, mode="virtual", service_time_s=OV_SVC,
+            admission=AdmissionController(
+                OverloadConfig(default_latency_s=OV_SVC)))
+        shed_rate = adm.stats.rejected / max(len(trace), 1)
+        sweep[mult] = {"goodput_naive": _goodput(naive),
+                       "goodput_admission": _goodput(adm)}
+        rows.append(row(
+            f"serve_throughput/{domain}/overload-{mult}x",
+            adm.p99_s * 1e6,
+            {"offered_rps": round(mult * capacity),
+             "requests": len(trace),
+             "goodput_admission": round(_goodput(adm)),
+             "goodput_naive": round(_goodput(naive)),
+             "shed_rate": round(shed_rate, 4),
+             "p99_admission_ms": round(adm.p99_s * 1e3, 3),
+             "p99_naive_ms": round(naive.p99_s * 1e3, 3),
+             "misses_admission": adm.deadline_misses,
+             "misses_naive": naive.deadline_misses}))
+
+    peak = max(v["goodput_admission"] for v in sweep.values())
+    top = sweep[max(mults)]
+    rates = {
+        "overload_goodput_admission_2x": top["goodput_admission"],
+        # past saturation, admission goodput stays in a band of peak...
+        "overload_goodput_retention_2x":
+            top["goodput_admission"] / max(peak, 1e-9),
+        # ...while the naive unbounded queue collapses (ratio >> 1)
+        "overload_collapse_ratio_2x":
+            top["goodput_admission"] / max(top["goodput_naive"], 1e-9),
+    }
+    return rows, rates
+
+
 def run(quick: bool = False, ab_only: bool = False):
     from repro.launch.rl_train import build_domain
     from repro.rl import ppo
@@ -245,6 +338,12 @@ def run(quick: bool = False, ab_only: bool = False):
         ab_rows, ab_rates = bimodal_ab(domain, quick=quick)
         out.extend(ab_rows)
         rates.update(ab_rates)
+        if domain == "traffic" and not ab_only:
+            # scheduling/admission decisions are domain-independent on
+            # the virtual clock, so one domain's sweep covers the claim
+            ov_rows, ov_rates = overload_sweep(domain, quick=quick)
+            out.extend(ov_rows)
+            rates.update(ov_rates)
         if not quick and not ab_only:
             # quick-mode rates are not baselines: writing them would
             # silently corrupt the committed bench-check floors

@@ -33,6 +33,22 @@ leaves' bytes are read; the optimizer/rollout/simulator payload of the
 training checkpoint never touches the inference process. With
 ``--n-policies N`` the same restored tree seeds checkpoint 0 and the
 remaining N-1 are fresh inits (stand-ins for per-region fine-tunes).
+
+Overload + chaos controls (the overload contract, ARCHITECTURE §8):
+``--admission`` puts an ``serving/overload.py::AdmissionController`` in
+front of the scheduler (bounded queue ``--queue-cap``, deadline
+feasibility, brownout shedding) — rejections are counted in the output,
+never silent. ``--faults`` replays a deterministic serving fault plan
+(``distributed/fault_injection.py::parse_serve_faults``), e.g.
+``slow:10:0.05,flood:0.5:0.2:4,corrupt:0:nan`` — a slow dispatch, a
+traffic flood, and a hot-reload attempt whose candidate weights are
+poisoned (the reload gate must reject it and keep serving on the old
+weights). ``--reload-at 100,200`` schedules hot self-reload attempts at
+those dispatch indices (the seam corrupt events target).
+``--virtual --service-time-s S`` replays on a deterministic virtual
+clock — same decisions every run (the chaos-smoke CI path). After a
+fault run the driver asserts the plan is exhausted: a fault that never
+fired is a configuration bug, not a pass.
 """
 from __future__ import annotations
 
@@ -44,9 +60,12 @@ from pathlib import Path
 import jax
 
 from repro.checkpoint import ckpt
+from repro.distributed.fault_injection import (FaultInjector,
+                                               parse_serve_faults)
 from repro.launch.rl_train import build_domain
 from repro.rl import ppo
-from repro.serving import (BIMODAL_SIZES, BIMODAL_WEIGHTS, PolicyServer,
+from repro.serving import (BIMODAL_SIZES, BIMODAL_WEIGHTS,
+                           AdmissionController, OverloadConfig, PolicyServer,
                            TraceConfig, calibrate_buckets, synthetic_trace)
 
 
@@ -133,15 +152,54 @@ def main(argv=None):
                          "checkpoint (restore_subtree: no training-state "
                          "payload read)")
     ap.add_argument("--step", type=int, default=None)
+    ap.add_argument("--admission", action="store_true",
+                    help="admission control in front of the scheduler: "
+                         "bounded queue + deadline feasibility + brownout "
+                         "(serving/overload.py::AdmissionController)")
+    ap.add_argument("--queue-cap", type=int, default=8192,
+                    help="bounded admission queue (pending requests)")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic serving fault plan, e.g. "
+                         "'slow:10:0.05,flood:0.5:0.2:4,corrupt:0:nan' "
+                         "(fault_injection.py::parse_serve_faults)")
+    ap.add_argument("--reload-at", default=None,
+                    help="comma-separated dispatch indices at which to "
+                         "attempt a hot self-reload (the seam corrupt "
+                         "faults target)")
+    ap.add_argument("--virtual", action="store_true",
+                    help="deterministic virtual-clock replay: every "
+                         "scheduler/admission/fault decision replays "
+                         "exactly (the chaos-smoke path)")
+    ap.add_argument("--service-time-s", type=float, default=1e-3,
+                    help="per-dispatch service time of the virtual clock")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
     server, trace, info = build_server_and_trace(args)
+    admission = None
+    if args.admission:
+        admission = AdmissionController(OverloadConfig(
+            queue_cap=args.queue_cap,
+            default_latency_s=args.service_time_s))
+    inj = None
+    if args.faults:
+        inj = FaultInjector(parse_serve_faults(args.faults))
+        info["fault_plan"] = args.faults
+    reload_at = (tuple(int(d) for d in args.reload_at.split(","))
+                 if args.reload_at else ())
     # compile every slot program before the clock starts — the first
     # dispatch of a jitted shape is a trace+compile, not a serve latency
     server.warmup()
-    report = server.serve(trace)
-    out = {**info, **report.summary()}
+    report = server.serve(
+        trace, mode="virtual" if args.virtual else "wallclock",
+        service_time_s=args.service_time_s, admission=admission,
+        faults=inj, reload_at=reload_at)
+    out = {**info, **report.summary(),
+           "policy_version": server.policy_version,
+           "reload_log": [list(e) for e in server.reload_log]}
+    if inj is not None:
+        inj.assert_exhausted()   # a fault that never fired is a config bug
+        out["faults_applied"] = inj.applied_counts()
     print(json.dumps(out, indent=1))
     if args.out:
         Path(args.out).write_text(json.dumps(out, indent=1))

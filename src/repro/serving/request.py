@@ -16,6 +16,7 @@ function of its config — the property tests replay exact traces.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -80,6 +81,29 @@ class TraceConfig:
 #: 64-lane regions that carry roughly half the request volume.
 BIMODAL_SIZES: Tuple[int, ...] = (1, 2, 4, 64)
 BIMODAL_WEIGHTS: Tuple[float, ...] = (0.72, 0.18, 0.06, 0.04)
+
+
+def flood_trace(trace: List[Request], at_s: float, duration_s: float,
+                multiplier: int) -> List[Request]:
+    """Deterministic traffic spike: every request arriving in
+    ``[at_s, at_s + duration_s)`` is duplicated to ``multiplier`` copies
+    (same arrival, class, absolute deadline, frame, burst size — the
+    extra copies model more lanes arriving at once), rids reassigned
+    dense in arrival order. The trace transform behind the
+    ``RequestFlood`` fault event
+    (``distributed/fault_injection.py::RequestFlood``): open-loop
+    arrivals stay open-loop, just ``multiplier``× denser over the
+    window. A pure function of its inputs — two floods of the same
+    trace are identical."""
+    if multiplier < 1:
+        raise ValueError(f"multiplier must be >= 1, got {multiplier}")
+    out: List[Request] = []
+    for req in trace:
+        copies = (multiplier if at_s <= req.arrival < at_s + duration_s
+                  else 1)
+        out.extend([req] * copies)
+    # input is arrival-sorted and copies are adjacent, so order is kept
+    return [dataclasses.replace(req, rid=i) for i, req in enumerate(out)]
 
 
 def synthetic_trace(cfg: TraceConfig,

@@ -144,8 +144,19 @@ class BucketedSlotScheduler(SlotScheduler):
             raise ValueError(f"buckets must be >= 1, got {buckets!r}")
         super().__init__(shapes[-1])
         self.buckets: Tuple[int, ...] = tuple(shapes)
+        self.coarse = False
         self.admitted_by_bucket: Dict[int, int] = {b: 0 for b in shapes}
         self.dispatches_by_bucket: Dict[int, int] = {b: 0 for b in shapes}
+
+    def set_coarse(self, coarse: bool) -> None:
+        """Brownout collapse (the overload contract, ARCHITECTURE §8):
+        while ``coarse`` is set every dispatch runs at the largest
+        bucket shape — under sustained overload batches are near-full
+        anyway, and one big program amortises per-dispatch overhead.
+        Pop order, no-drop, and miss accounting are untouched (this
+        only coarsens the *shape* a popped batch runs at); the
+        admission-side brownout controller toggles it both ways."""
+        self.coarse = bool(coarse)
 
     def bucket_for(self, size: int) -> int:
         """-> the smallest bucket shape >= ``size`` (the burst's
@@ -160,9 +171,11 @@ class BucketedSlotScheduler(SlotScheduler):
 
     def next_dispatch(self) -> Tuple[int, List[Request]]:
         """Pop the EDF batch (up to max-bucket lanes) and right-size it:
-        the dispatch shape is the smallest bucket admitting the batch."""
+        the dispatch shape is the smallest bucket admitting the batch —
+        or the largest bucket while the brownout collapse
+        (``set_coarse``) is active."""
         batch = self.next_batch()
-        shape = self.bucket_for(len(batch))
+        shape = self.slot if self.coarse else self.bucket_for(len(batch))
         self.dispatches_by_bucket[shape] += 1
         return shape, batch
 

@@ -26,6 +26,35 @@ selects its own checkpoint by index inside the one dispatch
 (``kernels/ops.py::serve_forward_multi``), so one server process serves
 a whole family of per-region checkpoints.
 
+**Lifecycle + overload hardening (PR 10, the overload contract of
+docs/ARCHITECTURE.md §8).** The server walks ``warming -> serving ->
+draining -> drained``: ``warmup`` compiles every slot program before
+the clock starts, ``serve`` flips to ``serving``, transitions to
+``draining`` once the trace's arrivals are exhausted (only backlog
+remains; ``drain`` is the standalone version), and lands on ``drained``
+with a final stats snapshot. ``serve`` optionally takes an
+``overload.py::AdmissionController`` (bounded queue +
+deadline-feasibility rejection + brownout shedding — explicit counted
+sheds instead of silent deadline misses), a
+``distributed/fault_injection.py::FaultInjector`` (``SlowDispatch``,
+``RequestFlood``, ``CorruptCheckpoint`` fire at deterministic
+dispatch/reload seams), and ``reload_at`` hot-reload points.
+
+**Hot policy reload.** ``reload(params)`` swaps the serving weights
+in-place — same compiled programs, new weights (the forward takes the
+weight pytree as a jit *argument*, so a same-shape swap never
+recompiles) — but only after validation: (1) an ABI check (the
+candidate's weight pytree must match the serving weights' structure,
+shapes, and dtypes exactly), (2) a canary forward on a pinned probe
+slot whose outputs must be finite, and (3) bitwise agreement of that
+canary with the candidate's *own fresh server* at the same probe shape.
+Any failure rolls back to the previous weights and counts
+``reload_rejected`` — the server keeps serving bitwise-identical
+outputs on the old weights. ``reload_from_checkpoint`` wires the same
+gate to ``checkpoint/ckpt.py::restore_subtree``, so a torn or corrupt
+checkpoint (COMMITTED missing, truncated payload, mangled metadata) is
+rejected at restore and can never be swapped in.
+
 Reproducibility contract (docs/ARCHITECTURE.md §8): the slot shape set
 is static per server, and each forward always runs as the same jitted
 program — XLA's GEMM reduction order is shape- and program-dependent, so
@@ -42,45 +71,65 @@ on a wall clock. Request latency = (slot dispatch completion, blocked on
 device outputs) - (trace arrival time); a request that waits in queue
 pays its queueing delay in full, and arrivals never throttle to the
 server's pace. ``mode="virtual"`` replaces the wall clock with a fixed
-per-dispatch service time so scheduler tests are deterministic.
+per-dispatch service time so scheduler tests — and every overload /
+fault-injection decision — are deterministic.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.envs.api import pad_mask
 from repro.kernels import ops
 from repro.rl.ppo import (flat_policy_weights, policy_forward,
                           stack_policy_weights)
-from repro.serving.request import Request
+from repro.serving.request import Request, flood_trace
 from repro.serving.scheduler import BucketedSlotScheduler, SlotScheduler
 
 #: occupancy-fraction bins per slot shape in ``ServeStats`` histograms
 HIST_BINS = 8
 
+#: server lifecycle states, in order
+LIFECYCLE = ("warming", "serving", "draining", "drained")
+
 
 @dataclass
 class ServeStats:
-    """Padding-waste observability, accumulated per dispatch.
+    """Padding-waste + overload observability, accumulated per replay.
 
     ``record(shape, n)`` logs one dispatch of ``n`` real lanes in a
-    ``shape``-lane program. The exported counters (all in ``summary()``
+    ``shape``-lane program; ``record_rejection(reason, klass)`` logs one
+    counted admission shed. The exported counters (all in ``summary()``
     and surfaced by ``repro.launch.policy_serve`` + the serve bench
     JSON): dispatches and real/padded lane totals per slot shape, the
     aggregate ``padded_lane_frac`` (padded lanes / dispatched lanes —
     the pure-waste FLOP fraction the bucketed scheduler exists to
-    shrink), and a per-shape occupancy histogram (``HIST_BINS`` equal
-    occupancy-fraction bins; a healthy bucket loads the last bin)."""
+    shrink), a per-shape occupancy histogram (``HIST_BINS`` equal
+    occupancy-fraction bins; a healthy bucket loads the last bin), and
+    the overload counters: ``rejected`` total with
+    ``rejected_by_reason`` (queue_full / brownout / infeasible) and
+    ``shed_by_class`` breakdowns, plus the replay's hot-reload outcomes
+    (``reloads`` accepted, ``reload_rejected`` rolled back) and the
+    lifecycle state at snapshot time (``final_state``). Every ratio is
+    guarded for the zero-dispatch replay (empty or fully shed trace):
+    ``summary()`` on a fresh instance is all zeros/empties, never a
+    division error."""
     dispatches_by_slot: Dict[int, int] = field(default_factory=dict)
     lanes_by_slot: Dict[int, int] = field(default_factory=dict)
     occupancy_hist_by_slot: Dict[int, List[int]] = field(
         default_factory=dict)
+    rejected: int = 0
+    rejected_by_reason: Dict[str, int] = field(default_factory=dict)
+    shed_by_class: Dict[int, int] = field(default_factory=dict)
+    reloads: int = 0
+    reload_rejected: int = 0
+    final_state: str = ""
 
     def record(self, shape: int, n: int) -> None:
         self.dispatches_by_slot[shape] = (
@@ -89,6 +138,14 @@ class ServeStats:
         hist = self.occupancy_hist_by_slot.setdefault(
             shape, [0] * HIST_BINS)
         hist[min(HIST_BINS - 1, max(0, (n - 1) * HIST_BINS // shape))] += 1
+
+    def record_rejection(self, reason: str, klass: int) -> None:
+        """One counted admission shed (the overload contract: explicit
+        rejections replace silent deadline misses)."""
+        self.rejected += 1
+        self.rejected_by_reason[reason] = (
+            self.rejected_by_reason.get(reason, 0) + 1)
+        self.shed_by_class[klass] = self.shed_by_class.get(klass, 0) + 1
 
     @property
     def dispatches(self) -> int:
@@ -119,6 +176,14 @@ class ServeStats:
             "occupancy_hist_by_slot": {
                 str(s): list(h) for s, h in
                 sorted(self.occupancy_hist_by_slot.items())},
+            "rejected": self.rejected,
+            "rejected_by_reason": dict(sorted(
+                self.rejected_by_reason.items())),
+            "shed_by_class": {str(k): v for k, v in
+                              sorted(self.shed_by_class.items())},
+            "reloads": self.reloads,
+            "reload_rejected": self.reload_rejected,
+            "final_state": self.final_state,
         }
 
 
@@ -126,7 +191,8 @@ class ServeStats:
 class ServeReport:
     """One trace replay's results. Latencies in seconds; ``qps`` is
     served requests / makespan (first arrival -> last completion);
-    ``stats`` is the padding-waste observability (``ServeStats``)."""
+    ``stats`` is the padding-waste + overload observability
+    (``ServeStats`` — rejections, sheds, reload outcomes, lifecycle)."""
     requests: int
     served: int
     p50_s: float
@@ -155,6 +221,10 @@ class ServeReport:
         }
 
 
+class _ReloadRejected(Exception):
+    """Internal: a reload validation gate failed (reason in args)."""
+
+
 class PolicyServer:
     """Continuous-batching inference over a table of jitted slot programs.
 
@@ -174,6 +244,10 @@ class PolicyServer:
       - ``"xla"``: masked ``rl/ppo.py::policy_forward`` — the training
         net verbatim (its separate value-head GEMM makes ``v`` the
         documented 1-ulp leaf vs the fused routes).
+
+    The forward takes its weight pytree as a jit *argument* (not a
+    closure constant), which is what makes ``reload`` an atomic swap:
+    same shapes -> same compiled programs, zero recompiles.
     """
 
     def __init__(self, params, *, obs_dim: int, n_actions: int,
@@ -188,23 +262,36 @@ class PolicyServer:
             raise ValueError(f"slot shapes must be >= 1, got {slot!r}")
         self.slots = shapes
         self.slot = shapes[-1]           # the largest compiled shape
+        self.obs_dim = obs_dim
+        self.frame_stack = frame_stack
         self.frame_dim = obs_dim * frame_stack
         self.n_actions = n_actions
+        self.fast_gates = fast_gates
+        self.route = route
         multi = isinstance(params, (list, tuple))
         self.n_policies = len(params) if multi else 1
         self._staging: Dict[int, np.ndarray] = {}
         self._pidx_staging: Dict[int, np.ndarray] = {}
         self._warmed: set = set()
+        self.state = "warming"
+        self.policy_version = 0
+        self.reloads = 0
+        self.reload_rejected = 0
+        self.reload_log: List[Tuple[str, str]] = []
+        # pinned probe slot for reload canaries: fixed frames at the
+        # smallest compiled shape, every checkpoint exercised
+        self._probe_frames = np.random.default_rng(0).standard_normal(
+            (self.slots[0], self.frame_dim)).astype(np.float32)
 
+        interpret = True if route == "interpret" else None
         if multi:
-            pws = stack_policy_weights(list(params))
             if route == "xla":
-                def fwd(frames, mask, pidx):
+                def fwd(frames, mask, pidx, weights):
                     m = mask != 0
                     logits = jnp.zeros(
                         (frames.shape[0], n_actions), jnp.float32)
                     v = jnp.zeros((frames.shape[0],), jnp.float32)
-                    for n, p in enumerate(params):
+                    for n, p in enumerate(weights):
                         lg_n, v_n = policy_forward(p, frames,
                                                    fast_gates=fast_gates)
                         sel = pidx == n
@@ -213,34 +300,45 @@ class PolicyServer:
                     logits = jnp.where(m[:, None], logits, 0.0)
                     v = jnp.where(m, v, 0.0)
                     return jnp.argmax(logits, -1), logits, v
-            else:
-                interpret = True if route == "interpret" else None
 
-                def fwd(frames, mask, pidx):
+                def make_weights(ps):
+                    return tuple(ps)
+            else:
+                def fwd(frames, mask, pidx, weights):
                     logits, v = ops.serve_forward_multi(
-                        frames, mask, pidx, pws, fast_gates=fast_gates,
+                        frames, mask, pidx, weights, fast_gates=fast_gates,
                         interpret=interpret)
                     return jnp.argmax(logits, -1), logits, v
+
+                def make_weights(ps):
+                    return stack_policy_weights(list(ps))
         else:
-            pw = flat_policy_weights(params)
             if route == "xla":
-                def fwd(frames, mask, pidx):
-                    logits, v = policy_forward(params, frames,
+                def fwd(frames, mask, pidx, weights):
+                    del pidx             # single policy: one checkpoint
+                    logits, v = policy_forward(weights, frames,
                                                fast_gates=fast_gates)
                     m = mask != 0
                     logits = jnp.where(m[:, None], logits, 0.0)
                     v = jnp.where(m, v, 0.0)
                     return jnp.argmax(logits, -1), logits, v
-            else:
-                interpret = True if route == "interpret" else None
 
-                def fwd(frames, mask, pidx):
+                def make_weights(ps):
+                    return ps
+            else:
+                def fwd(frames, mask, pidx, weights):
                     del pidx             # single policy: one checkpoint
-                    logits, v = ops.serve_forward(frames, mask, pw,
+                    logits, v = ops.serve_forward(frames, mask, weights,
                                                   fast_gates=fast_gates,
                                                   interpret=interpret)
                     return jnp.argmax(logits, -1), logits, v
 
+                def make_weights(ps):
+                    return flat_policy_weights(ps)
+
+        self._params = list(params) if multi else params
+        self._make_weights = make_weights
+        self._weights = make_weights(self._params)
         self._fwd = jax.jit(fwd)
 
     def forward_slot(self, frames, n_valid: int, pidx=None):
@@ -257,7 +355,7 @@ class PolicyServer:
         if pidx is None:
             pidx = jnp.zeros((shape,), jnp.int32)
         out = self._fwd(frames, pad_mask(n_valid, shape),
-                        jnp.asarray(pidx, dtype=jnp.int32))
+                        jnp.asarray(pidx, dtype=jnp.int32), self._weights)
         self._warmed.add(shape)
         return jax.block_until_ready(out)
 
@@ -269,6 +367,121 @@ class PolicyServer:
             if shape not in self._warmed:
                 frames, pidx = self._pack([], shape)
                 self.forward_slot(frames, 0, pidx)
+
+    # ---------------------------------------------------- hot reload
+
+    def _probe_pidx(self, shape: int) -> np.ndarray:
+        return (np.arange(shape, dtype=np.int32) % self.n_policies)
+
+    def reload(self, params) -> bool:
+        """Validated atomic hot swap of the serving weights (the reload
+        gate of the overload contract, ARCHITECTURE §8). Three gates, in
+        order, all on the *candidate* — the serving weights are untouched
+        until every gate passes:
+
+        1. **ABI check**: the candidate's weight pytree (built by the
+           same route-specific builder as the serving weights) must
+           match structure, shapes, and dtypes exactly.
+        2. **Canary forward** on the pinned probe slot (fixed frames at
+           the smallest compiled shape, every checkpoint of a
+           multi-policy server exercised): all outputs must be finite —
+           a NaN/Inf-poisoned payload (torn write, bit rot) dies here.
+        3. **Bitwise parity vs the candidate's own fresh server**: a new
+           ``PolicyServer`` built from the candidate at the probe shape
+           must produce bitwise-identical (action, logits, v) — the
+           live program with swapped weights IS the program a fresh
+           deployment of those weights would run.
+
+        Success swaps weights + params atomically (same compiled
+        programs — the weights are a jit argument), bumps
+        ``policy_version`` and ``reloads``, and returns True. Any
+        failure (including exceptions from malformed candidates) rolls
+        back to the previous weights, counts ``reload_rejected``, logs
+        the reason in ``reload_log``, and returns False — the server
+        keeps serving bitwise-identical outputs on the old weights."""
+        multi = isinstance(self._params, list)
+        try:
+            if multi != isinstance(params, (list, tuple)):
+                raise _ReloadRejected(
+                    "abi: single/multi policy kind mismatch")
+            if multi and len(params) != self.n_policies:
+                raise _ReloadRejected(
+                    f"abi: {len(params)} policies for a "
+                    f"{self.n_policies}-policy server")
+            cand_params = list(params) if multi else params
+            try:
+                cand = self._make_weights(cand_params)
+            except Exception as e:
+                raise _ReloadRejected(f"abi: weight build failed: {e}")
+            cur_leaves, cur_def = jax.tree_util.tree_flatten(self._weights)
+            cand_leaves, cand_def = jax.tree_util.tree_flatten(cand)
+            if cand_def != cur_def:
+                raise _ReloadRejected("abi: weight tree structure differs")
+            for old, new in zip(cur_leaves, cand_leaves):
+                if (tuple(np.shape(old)) != tuple(np.shape(new))
+                        or np.asarray(old).dtype != np.asarray(new).dtype):
+                    raise _ReloadRejected(
+                        f"abi: leaf {tuple(np.shape(old))}/"
+                        f"{np.asarray(old).dtype} != "
+                        f"{tuple(np.shape(new))}/{np.asarray(new).dtype}")
+
+            probe = self.slots[0]
+            pidx = self._probe_pidx(probe)
+            out = jax.block_until_ready(self._fwd(
+                jnp.asarray(self._probe_frames), pad_mask(probe, probe),
+                jnp.asarray(pidx), cand))
+            if not all(bool(jnp.isfinite(x).all()) for x in out[1:]):
+                raise _ReloadRejected(
+                    "canary: non-finite logits/values on the probe slot")
+            fresh = PolicyServer(
+                cand_params, obs_dim=self.obs_dim,
+                n_actions=self.n_actions, frame_stack=self.frame_stack,
+                slot=probe, fast_gates=self.fast_gates, route=self.route)
+            ref = fresh.forward_slot(self._probe_frames, probe, pidx)
+            if not all(bool(jnp.array_equal(a, b))
+                       for a, b in zip(out, ref)):
+                raise _ReloadRejected(
+                    "canary: probe outputs differ from the candidate's "
+                    "own fresh server (not bitwise)")
+        except _ReloadRejected as e:
+            reason = str(e)
+        except Exception as e:           # malformed candidate trees etc.
+            reason = f"abi: {type(e).__name__}: {e}"
+        else:
+            self._weights = cand
+            self._params = cand_params
+            self.policy_version += 1
+            self.reloads += 1
+            self.reload_log.append(("ok", f"v{self.policy_version}"))
+            return True
+        self.reload_rejected += 1
+        self.reload_log.append(("rejected", reason))
+        return False
+
+    def reload_from_checkpoint(self, ckpt_dir, step: Optional[int] = None
+                               ) -> bool:
+        """Hot-reload the policy subtree of an ``rl_train`` checkpoint
+        through the full reload gate. A torn or corrupt checkpoint
+        (missing COMMITTED, truncated payload, mangled metadata — every
+        layout ``distributed/fault_injection.py::torn_save`` builds)
+        makes ``ckpt.restore_subtree`` raise, which is counted as a
+        rejected reload — it can never be swapped in, and the server
+        keeps serving on the old weights."""
+        if self.n_policies != 1:
+            raise ValueError(
+                "reload_from_checkpoint serves single-policy servers; "
+                "restore each checkpoint and call reload([..]) instead")
+        try:
+            params, _, _ = ckpt.restore_subtree(
+                ckpt_dir, self._params, "['policy']", step=step)
+        except Exception as e:
+            self.reload_rejected += 1
+            self.reload_log.append(
+                ("rejected", f"restore: {type(e).__name__}: {e}"))
+            return False
+        return self.reload(params)
+
+    # ------------------------------------------------------- packing
 
     def _pack(self, batch: List[Request], shape: int):
         """Pack ``batch`` into the preallocated ``shape``-lane staging
@@ -298,10 +511,60 @@ class PolicyServer:
             return BucketedSlotScheduler(self.slots)
         return SlotScheduler(self.slot)
 
+    # -------------------------------------------------------- replay
+
+    def _dispatch_once(self, sched, stats: ServeStats,
+                       latencies: List[float], now: float, mode: str,
+                       service_time_s: float, t_start: float,
+                       extra_s: float) -> float:
+        """Pop + pack + forward one batch, advance the clock (virtual:
+        ``service_time_s + extra_s``; wallclock: real time plus a
+        slept ``extra_s``), complete the batch -> (new now, measured
+        dispatch seconds)."""
+        t_disp = time.perf_counter()
+        shape, batch = sched.next_dispatch()
+        frames, pidx = self._pack(batch, shape)
+        self.forward_slot(frames, len(batch), pidx)
+        if mode == "wallclock":
+            if extra_s > 0:
+                time.sleep(extra_s)
+            now = time.perf_counter() - t_start
+            dt = time.perf_counter() - t_disp
+        else:
+            dt = service_time_s + extra_s
+            now = now + dt
+        sched.complete(batch, now)
+        stats.record(shape, len(batch))
+        latencies.extend(now - r.arrival for r in batch)
+        return now, dt, shape
+
+    def drain(self, sched, *, stats: Optional[ServeStats] = None,
+              now: float = 0.0, service_time_s: float = 1e-3
+              ) -> Tuple[ServeStats, float]:
+        """Complete every in-flight batch on ``sched`` — no new
+        admissions — on a virtual clock starting at ``now``, then land
+        the lifecycle on ``drained`` and emit the final stats snapshot:
+        -> (stats, completion time). ``serve`` does the same inline for
+        the tail of a trace; this is the standalone path for shutting
+        down a server whose scheduler still holds work."""
+        self.state = "draining"
+        stats = stats if stats is not None else ServeStats()
+        latencies: List[float] = []
+        while sched.pending:
+            now, _, _ = self._dispatch_once(
+                sched, stats, latencies, now, "virtual", service_time_s,
+                0.0, 0.0)
+        self.state = "drained"
+        stats.final_state = self.state
+        return stats, now
+
     def serve(self, trace: List[Request],
               scheduler: Optional[SlotScheduler] = None, *,
               mode: str = "wallclock",
-              service_time_s: float = 1e-3) -> ServeReport:
+              service_time_s: float = 1e-3,
+              admission=None, faults=None,
+              reload_at: Sequence[int] = (),
+              reload_params=None) -> ServeReport:
         """Replay an arrival-sorted open-loop ``trace`` to completion.
 
         ``mode="wallclock"`` measures real dispatch latency (the bench /
@@ -309,15 +572,56 @@ class PolicyServer:
         dry, so offered load stays open-loop). ``mode="virtual"``
         advances a deterministic clock by ``service_time_s`` per
         dispatch — no timers, same scheduler decisions every run (the
-        property tests' path)."""
+        property tests' path, and the overload/fault tests': every
+        admission and fault decision replays exactly).
+
+        ``admission`` (an ``overload.py::AdmissionController``) gates
+        every would-be ``sched.admit`` — rejections are counted in the
+        report's stats, never silently dropped. ``faults`` (a
+        ``FaultInjector``) fires ``RequestFlood`` on the trace before
+        replay, ``SlowDispatch`` at its dispatch index, and
+        ``CorruptCheckpoint`` at the matching hot-reload attempt.
+        ``reload_at`` lists dispatch indices at which the server
+        attempts ``reload(reload_params)`` (defaults to its own current
+        params — a self-refresh, the canary path chaos plans corrupt);
+        attempts past the last dispatch fire during the final drain so
+        a plan never silently expires.
+
+        Lifecycle: ``serving`` while arrivals remain, ``draining`` once
+        only backlog is left, ``drained`` at return (the stats snapshot
+        records it)."""
         if mode not in ("wallclock", "virtual"):
             raise ValueError(f"unknown mode: {mode!r}")
+        if faults is not None:
+            for fl in faults.take_floods():
+                trace = flood_trace(trace, fl.at_s, fl.duration_s,
+                                    fl.multiplier)
         sched = scheduler if scheduler is not None else \
             self.make_scheduler()
         self.warmup(getattr(sched, "buckets", (sched.slot,)))
+        self.state = "serving"
         stats = ServeStats()
+        reloads0 = self.reloads
+        rejected0 = self.reload_rejected
+        pending_reloads = sorted(set(int(d) for d in reload_at))
+        reload_attempt = 0
+
+        def try_reloads(dispatch_idx: Optional[int]) -> None:
+            nonlocal reload_attempt
+            while pending_reloads and (
+                    dispatch_idx is None
+                    or pending_reloads[0] <= dispatch_idx):
+                pending_reloads.pop(0)
+                cand = (reload_params if reload_params is not None
+                        else self._params)
+                if faults is not None:
+                    cand = faults.corrupt_params(reload_attempt, cand)
+                self.reload(cand)
+                reload_attempt += 1
+
         latencies: List[float] = []
         next_req = 0
+        dispatch_idx = 0
         n = len(trace)
         t_start = time.perf_counter()
         now = 0.0
@@ -327,9 +631,17 @@ class PolicyServer:
             if mode == "wallclock":
                 now = time.perf_counter() - t_start
             while next_req < n and trace[next_req].arrival <= now:
-                sched.admit(trace[next_req])
+                req = trace[next_req]
+                if admission is None:
+                    sched.admit(req)
+                else:
+                    admission.admit(req, now, sched, stats)
                 next_req = next_req + 1
+            if next_req >= n and self.state == "serving":
+                self.state = "draining"   # only backlog left
             if not sched.pending:
+                if next_req >= n:
+                    break                 # everything shed: nothing to run
                 # open-loop idle: jump/sleep to the next arrival
                 now = trace[next_req].arrival
                 if mode == "wallclock":
@@ -337,17 +649,21 @@ class PolicyServer:
                     if wait > 0:
                         time.sleep(wait)
                 continue
-            shape, batch = sched.next_dispatch()
-            frames, pidx = self._pack(batch, shape)
-            self.forward_slot(frames, len(batch), pidx)
-            if mode == "wallclock":
-                now = time.perf_counter() - t_start
-            else:
-                now = now + service_time_s
-            sched.complete(batch, now)
+            try_reloads(dispatch_idx)
+            extra = (faults.dispatch_delay_s(dispatch_idx)
+                     if faults is not None else 0.0)
+            now, dt, shape = self._dispatch_once(
+                sched, stats, latencies, now, mode, service_time_s,
+                t_start, extra)
+            if admission is not None:
+                admission.observe_dispatch(shape, dt, sched)
             last_done = now
-            stats.record(shape, len(batch))
-            latencies.extend(now - r.arrival for r in batch)
+            dispatch_idx += 1
+        try_reloads(None)                 # leftover plan: fire at drain
+        self.state = "drained"
+        stats.reloads = self.reloads - reloads0
+        stats.reload_rejected = self.reload_rejected - rejected0
+        stats.final_state = self.state
 
         makespan = max(last_done - (trace[0].arrival if trace else 0.0),
                        1e-9)

@@ -165,7 +165,8 @@ def test_worker_kill_restarts_on_fresh_stream(tiny_env, tiny_cfg):
     clean, _, _ = run_with(None)
     s1, i1, inj1 = run_with(plan)
     s2, _, _ = run_with(plan)
-    assert inj1.kills_applied == 1 and inj1.exhausted
+    inj1.assert_exhausted()               # the plan actually fired
+    assert inj1.kills_applied == 1
     assert i1["kills"] == 1
     assert int(s1.workers[1].restarts) == 1
     assert int(s1.workers[0].restarts) == 0
@@ -179,9 +180,12 @@ def test_fault_injector_fires_once():
         fi.KillWorker(worker_id=0, at_tick=3)))
     assert not inj.should_kill(3, 1)      # wrong worker
     assert not inj.should_kill(2, 0)      # wrong tick
+    with pytest.raises(AssertionError):
+        inj.assert_exhausted()            # not yet fired: loud, not vacuous
     assert inj.should_kill(3, 0)
     assert not inj.should_kill(3, 0)      # consumed
-    assert inj.kills_applied == 1 and inj.exhausted
+    inj.assert_exhausted()
+    assert inj.kills_applied == 1
 
 
 # ---------------------------------------------------------------------------

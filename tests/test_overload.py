@@ -1,0 +1,512 @@
+"""Overload hardening (PR 10): admission control, brownout, hot reload,
+serving chaos.
+
+Pins the overload contract (docs/ARCHITECTURE.md §8):
+
+* **Counted sheds, never silent.** The admission gates (bounded queue,
+  brownout, deadline feasibility) reject at the door and every
+  rejection lands in ``ServeStats`` with a reason and a deadline class;
+  the drop-free scheduler below never sheds.
+* **Brownout degrades, never collapses.** Hysteresis (enter/exit
+  thresholds + hold) prevents flapping; level k sheds the k loosest
+  learned deadline classes and the tightest class is never shed by
+  brownout; at max level a bucketed scheduler collapses to its coarsest
+  shape and recovery undoes it.
+* **Graceful degradation beats collapse.** At 2x capacity on the
+  deterministic virtual clock, the admitted-and-served in-SLO volume
+  with admission control strictly beats the no-admission server, whose
+  unbounded queue misses nearly everything.
+* **Hot reload is gated and atomic.** A valid candidate swaps in with
+  zero recompiles and the live server becomes bitwise the candidate's
+  own fresh server; ABI mismatches, NaN/huge-poisoned payloads
+  (``CorruptCheckpoint``), and torn on-disk checkpoints are rejected
+  with the server still serving bitwise-identical outputs on the old
+  weights — the acceptance test of the PR.
+* **Chaos plans are deterministic and must exhaust.** ``SlowDispatch``
+  / ``RequestFlood`` / ``CorruptCheckpoint`` fire at their planned
+  dispatch/reload coordinates, replays are bit-identical, and
+  ``assert_exhausted`` fails loudly when a planned event never fired.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.distributed.fault_injection import (CorruptCheckpoint, FaultPlan,
+                                               FaultInjector, RequestFlood,
+                                               SlowDispatch, corrupt_tree,
+                                               parse_serve_faults, torn_save)
+from repro.launch import policy_serve
+from repro.rl import ppo
+from repro.serving import (AdmissionController, BrownoutController,
+                           BucketedSlotScheduler, DispatchLatencyModel,
+                           OverloadConfig, PolicyServer, Request, ServeStats,
+                           SlotScheduler, TraceConfig, flood_trace,
+                           synthetic_trace)
+
+S = 8                       # test slot shape
+OBS, ACT = 6, 4
+SVC = 0.002                 # virtual service time -> capacity = S/SVC rps
+_cache = {}
+
+
+def _pcfg(hidden=16):
+    return ppo.PPOConfig(obs_dim=OBS, n_actions=ACT, frame_stack=1,
+                         hidden=hidden)
+
+
+def _params(seed=0, hidden=16):
+    key = ("params", seed, hidden)
+    if key not in _cache:
+        _cache[key] = ppo.init_policy(_pcfg(hidden),
+                                      jax.random.PRNGKey(seed))
+    return _cache[key]
+
+
+def _server(slot=S, seed=0):
+    pcfg = _pcfg()
+    return PolicyServer(_params(seed), obs_dim=pcfg.obs_dim,
+                        n_actions=pcfg.n_actions, slot=slot)
+
+
+def _trace(rps, horizon_s=0.3, seed=3, classes=(0.01, 0.05, 0.25)):
+    return synthetic_trace(TraceConfig(
+        n_regions=16, region_sizes=(1, 2, 4), mean_rps=rps,
+        horizon_s=horizon_s, classes_s=classes, frame_dim=OBS, seed=seed))
+
+
+def _probe(srv):
+    """Bitwise fingerprint of the serving weights on the pinned probe."""
+    return [np.asarray(x) for x in
+            srv.forward_slot(srv._probe_frames, srv.slots[0],
+                             srv._probe_pidx(srv.slots[0]))]
+
+
+# --------------------------------------------------- admission gates
+
+def test_overload_config_validation():
+    with pytest.raises(ValueError):
+        OverloadConfig(queue_cap=0)
+    with pytest.raises(ValueError):
+        OverloadConfig(ewma_alpha=0.0)
+    with pytest.raises(ValueError):
+        OverloadConfig(brownout_enter_s=0.01, brownout_exit_s=0.02)
+    with pytest.raises(ValueError):
+        OverloadConfig(brownout_hold=0)
+    with pytest.raises(ValueError):
+        OverloadConfig(max_level=0)
+
+
+def test_latency_model_ewma_and_fallbacks():
+    """Exact EWMA per shape; unseen shapes borrow the nearest observed
+    shape's estimate, and a cold model estimates the default."""
+    m = DispatchLatencyModel(alpha=0.5, default_s=0.123)
+    assert m.estimate(64) == 0.123
+    m.observe(8, 0.010)
+    assert m.estimate(8) == 0.010
+    m.observe(8, 0.020)
+    assert m.estimate(8) == pytest.approx(0.5 * 0.010 + 0.5 * 0.020)
+    assert m.estimate(7) == m.estimate(8)      # nearest observed shape
+    m.observe(64, 0.100)
+    assert m.estimate(60) == 0.100
+    assert m.estimate(9) == m.estimate(8)
+
+
+def test_queue_cap_bounds_pending_and_counts_rejections():
+    """With only the bounded-queue gate on, pending never exceeds the
+    cap and every overflow is a counted queue_full shed of its class."""
+    cfg = OverloadConfig(queue_cap=4, feasibility=False, brownout=False)
+    adm = AdmissionController(cfg)
+    sched = SlotScheduler(S)
+    stats = ServeStats()
+    frame = np.zeros(OBS, np.float32)
+    reqs = [Request(rid=i, region=0, klass=i % 2, arrival=0.0,
+                    deadline=1.0, frame=frame) for i in range(10)]
+    admitted = [adm.admit(r, 0.0, sched, stats) for r in reqs]
+    assert admitted == [True] * 4 + [False] * 6
+    assert sched.pending == 4
+    assert stats.rejected == 6
+    assert stats.rejected_by_reason == {"queue_full": 6}
+    assert stats.shed_by_class == {0: 3, 1: 3}
+    assert stats.summary()["rejected"] == 6
+
+
+def test_feasibility_rejects_guaranteed_misses_at_the_door():
+    """A request whose earliest possible completion (queue drained in
+    full slots at the EWMA estimate) is past its deadline is shed as
+    infeasible; the same request with slack is admitted."""
+    cfg = OverloadConfig(default_latency_s=0.01, brownout=False)
+    adm = AdmissionController(cfg)
+    sched = SlotScheduler(S)
+    stats = ServeStats()
+    frame = np.zeros(OBS, np.float32)
+    # empty queue: eta = now + 1 * 0.01 = 0.01
+    tight = Request(rid=0, region=0, klass=0, arrival=0.0, deadline=0.005,
+                    frame=frame)
+    loose = Request(rid=1, region=0, klass=1, arrival=0.0, deadline=0.05,
+                    frame=frame)
+    assert not adm.admit(tight, 0.0, sched, stats)
+    assert stats.rejected_by_reason == {"infeasible": 1}
+    assert adm.admit(loose, 0.0, sched, stats)
+    # pile up a backlog: 3 full slots pending -> eta = (24//8 + 1)*0.01
+    for i in range(23):
+        sched.admit(dataclasses.replace(loose, rid=10 + i))
+    late = dataclasses.replace(loose, rid=99, deadline=0.03)
+    assert not adm.admit(late, 0.0, sched, stats)
+    ok = dataclasses.replace(loose, rid=100, deadline=0.05)
+    assert adm.admit(ok, 0.0, sched, stats)
+    assert stats.rejected == 2 and stats.shed_by_class == {0: 1, 1: 1}
+
+
+def test_brownout_hysteresis_state_machine():
+    """Enter after ``hold`` consecutive over-threshold observations,
+    exit after ``hold`` under the (lower) exit threshold; the band
+    between them holds the level and resets both streaks."""
+    cfg = OverloadConfig(brownout_enter_s=1.0, brownout_exit_s=0.5,
+                         brownout_hold=2, max_level=2)
+    b = BrownoutController(cfg)
+    assert b.observe(2.0) == 0          # streak 1 of 2
+    assert b.observe(0.7) == 0          # band: streak reset
+    assert b.observe(2.0) == 0
+    assert b.observe(2.0) == 1          # entered
+    assert b.entries == 1
+    assert b.observe(2.0) == 1 and b.observe(2.0) == 2   # level 2
+    assert b.observe(5.0) == 2          # capped at max_level
+    assert b.observe(0.4) == 2
+    assert b.observe(0.7) == 2          # band resets the under-streak
+    assert b.observe(0.4) == 2 and b.observe(0.4) == 1   # exited
+    assert b.exits == 1
+    assert b.observe(0.0) == 1 and b.observe(0.0) == 0
+    assert (b.entries, b.exits) == (2, 2)
+
+
+def test_brownout_sheds_loosest_classes_never_tightest():
+    """Driven through a 2x-overload virtual replay with feasibility off
+    and the queue unbounded: every shed is a brownout shed of a
+    *looser* learned class — the tightest class is never shed — and the
+    controller actually cycled."""
+    srv = _server()
+    adm = AdmissionController(OverloadConfig(
+        queue_cap=10**6, feasibility=False, default_latency_s=SVC,
+        brownout_enter_s=10 * SVC, brownout_exit_s=4 * SVC,
+        brownout_hold=2, max_level=2, coarse_in_brownout=False))
+    trace = _trace(rps=2 * S / SVC)
+    rep = srv.serve(trace, mode="virtual", service_time_s=SVC,
+                    admission=adm)
+    st = rep.stats
+    assert st.rejected > 0
+    assert set(st.rejected_by_reason) == {"brownout"}
+    assert 0 not in st.shed_by_class            # tightest class protected
+    assert set(st.shed_by_class) <= {1, 2}
+    assert adm.brownout.entries >= 1
+    assert rep.served + st.rejected == len(trace)
+
+
+def test_brownout_max_level_collapses_buckets_and_recovers():
+    """At max level the admission controller flips a bucketed scheduler
+    coarse (every dispatch at the largest shape); when the backlog
+    drains the level falls and the bucket set comes back."""
+    adm = AdmissionController(OverloadConfig(
+        queue_cap=10**6, feasibility=False, default_latency_s=SVC,
+        brownout_enter_s=2 * SVC, brownout_exit_s=1 * SVC,
+        brownout_hold=1, max_level=1))
+    sched = BucketedSlotScheduler((2, S))
+    stats = ServeStats()
+    frame = np.zeros(OBS, np.float32)
+    reqs = [Request(rid=i, region=0, klass=i % 2, arrival=0.0,
+                    deadline=1.0, frame=frame) for i in range(4 * S)]
+    for r in reqs:
+        adm.admit(r, 0.0, sched, stats)
+    assert adm.brownout.level == 1 and sched.coarse
+    shape, batch = sched.next_dispatch()
+    assert shape == S                           # coarse: largest shape
+    sched.complete(batch, SVC)
+    while sched.pending:                        # drain -> recovery
+        _, b = sched.next_dispatch()
+        sched.complete(b, SVC)
+        adm.observe_dispatch(S, SVC, sched)
+    assert adm.brownout.level == 0 and not sched.coarse
+
+
+def test_graceful_degradation_beats_collapse_at_2x():
+    """The PR's A/B: one 2x-capacity trace on the deterministic virtual
+    clock. Without admission the unbounded queue collapses every class
+    (nearly everything misses); with admission the shed is explicit and
+    the in-SLO served volume is strictly, substantially higher. The
+    admission replay is also bit-deterministic."""
+    trace = _trace(rps=2 * S / SVC)
+
+    rep_naive = _server().serve(trace, mode="virtual", service_time_s=SVC)
+    assert rep_naive.served == len(trace)       # drop-free: serves all...
+    in_slo_naive = rep_naive.served - rep_naive.deadline_misses
+    assert rep_naive.deadline_misses > len(trace) // 2   # ...mostly late
+
+    def run():
+        adm = AdmissionController(OverloadConfig(default_latency_s=SVC))
+        return _server().serve(trace, mode="virtual", service_time_s=SVC,
+                               admission=adm)
+    rep = run()
+    in_slo = rep.served - rep.deadline_misses
+    assert rep.stats.rejected > 0
+    assert rep.served + rep.stats.rejected == len(trace)
+    assert in_slo > 2 * max(in_slo_naive, 1)
+    assert rep.deadline_misses < rep_naive.deadline_misses
+    assert run().summary() == rep.summary()     # deterministic replay
+
+
+# ------------------------------------------------------- hot reload
+
+def test_reload_swaps_atomically_and_matches_fresh_server():
+    """A valid candidate passes the gate: the live server's probe
+    outputs become bitwise the candidate's own fresh server's, the
+    version bumps, and no new program compiles (same shapes)."""
+    srv = _server(seed=0)
+    before = _probe(srv)
+    new = _params(seed=7)
+    assert srv.reload(new)
+    assert (srv.policy_version, srv.reloads, srv.reload_rejected) == \
+        (1, 1, 0)
+    after = _probe(srv)
+    fresh = _probe(_server(seed=7))
+    for a, f in zip(after, fresh):
+        assert np.array_equal(a, f)
+    assert not all(np.array_equal(a, b) for a, b in zip(before, after))
+    assert srv.reload_log[-1] == ("ok", "v1")
+
+
+def test_reload_rejects_abi_mismatch_and_rolls_back():
+    """Wrong-shape weights (different hidden width) and malformed
+    candidates are rejected at the ABI gate; the serving weights stay
+    bitwise-identical."""
+    srv = _server()
+    before = _probe(srv)
+    assert not srv.reload(_params(seed=1, hidden=32))
+    assert not srv.reload([_params(seed=1)])    # single/multi mismatch
+    assert not srv.reload({"nonsense": np.zeros(3)})
+    assert srv.reload_rejected == 3 and srv.policy_version == 0
+    for a, b in zip(before, _probe(srv)):
+        assert np.array_equal(a, b)
+    assert all(tag == "rejected" for tag, _ in srv.reload_log)
+
+
+@pytest.mark.parametrize("mode", ["nan", "huge"])
+def test_reload_rejects_poisoned_payload_via_canary(mode):
+    """NaN- and huge-poisoned payloads (bit rot, torn writes) die at the
+    canary's finite check; the server keeps serving on the old
+    weights."""
+    srv = _server()
+    before = _probe(srv)
+    assert not srv.reload(corrupt_tree(_params(seed=7), mode=mode))
+    assert srv.reload_rejected == 1
+    for a, b in zip(before, _probe(srv)):
+        assert np.array_equal(a, b)
+    assert "canary" in srv.reload_log[-1][1]
+
+
+def test_corrupt_checkpoint_reload_rejected_in_flight():
+    """The PR's acceptance test: a ``CorruptCheckpoint`` fault poisons
+    the hot-reload attempt *during* a serve; the reload gate rejects it,
+    the replay completes, the stats count it, the plan exhausts, and the
+    server still serves bitwise-identical outputs on the old weights.
+    A clean reload of the same candidate afterwards is accepted."""
+    srv = _server()
+    before = _probe(srv)
+    trace = _trace(rps=0.5 * S / SVC, horizon_s=0.1)
+    inj = FaultInjector(FaultPlan.of(CorruptCheckpoint(at_reload=0,
+                                                       mode="nan")))
+    rep = srv.serve(trace, mode="virtual", service_time_s=SVC,
+                    faults=inj, reload_at=(2,), reload_params=_params(7))
+    inj.assert_exhausted()
+    assert rep.stats.reload_rejected == 1 and rep.stats.reloads == 0
+    assert srv.policy_version == 0
+    assert rep.served == len(trace)             # kept serving throughout
+    for a, b in zip(before, _probe(srv)):
+        assert np.array_equal(a, b)
+    # same candidate, no fault in the path: accepted
+    rep2 = srv.serve(trace, mode="virtual", service_time_s=SVC,
+                     reload_at=(2,), reload_params=_params(7))
+    assert rep2.stats.reloads == 1 and srv.policy_version == 1
+
+
+def test_reload_from_checkpoint_good_and_torn(tmp_path):
+    """``reload_from_checkpoint`` accepts a committed checkpoint's
+    policy subtree and rejects every torn layout ``torn_save`` builds —
+    a torn checkpoint can never swap in."""
+    srv = _server()
+    good = tmp_path / "good"
+    ckpt.save(good, 3, {"policy": _params(seed=7)})
+    assert srv.reload_from_checkpoint(good)
+    for a, b in zip(_probe(srv), _probe(_server(seed=7))):
+        assert np.array_equal(a, b)
+    before = _probe(srv)
+    for tear in ("tmp-only", "no-commit", "truncated", "torn-meta"):
+        torn = tmp_path / f"torn_{tear}"
+        torn_save(torn, 1, {"policy": _params(seed=2)}, tear=tear)
+        assert not srv.reload_from_checkpoint(torn), tear
+        assert "restore" in srv.reload_log[-1][1]
+    assert srv.reload_rejected == 4
+    for a, b in zip(before, _probe(srv)):
+        assert np.array_equal(a, b)
+    with pytest.raises(ValueError):
+        _multi = PolicyServer([_params(0), _params(1)], obs_dim=OBS,
+                              n_actions=ACT, slot=S)
+        _multi.reload_from_checkpoint(good)
+
+
+# ------------------------------------------- chaos events + lifecycle
+
+def test_flood_trace_duplicates_window_and_keeps_order():
+    frame = np.zeros(OBS, np.float32)
+    trace = [Request(rid=i, region=0, klass=0, arrival=0.1 * i,
+                     deadline=0.1 * i + 1.0, frame=frame)
+             for i in range(4)]
+    out = flood_trace(trace, at_s=0.1, duration_s=0.2, multiplier=3)
+    assert len(out) == 2 + 2 * 3                # middle two tripled
+    assert [r.rid for r in out] == list(range(len(out)))   # dense rids
+    assert [r.arrival for r in out] == sorted(r.arrival for r in out)
+    assert sum(r.arrival == 0.1 for r in out) == 3
+    assert flood_trace(trace, 0.0, 1.0, 1) == [
+        dataclasses.replace(r, rid=i) for i, r in enumerate(trace)]
+    with pytest.raises(ValueError):
+        flood_trace(trace, 0.0, 1.0, 0)
+
+
+def test_parse_serve_faults_and_injector_seams():
+    """The plan syntax round-trips; each serving seam fires its event
+    exactly once; ``assert_exhausted`` raises while events are pending
+    and passes once the plan ran."""
+    plan = parse_serve_faults(
+        "slow:5:0.05, flood:0.5:0.2:4, corrupt:1:huge, corrupt:0")
+    assert plan.events == (SlowDispatch(5, 0.05),
+                           RequestFlood(0.5, 0.2, 4),
+                           CorruptCheckpoint(1, "huge"),
+                           CorruptCheckpoint(0, "nan"))
+    for bad in ("slow:1", "flood:0.5:0.2", "corrupt:x", "nonsense:1"):
+        with pytest.raises(ValueError):
+            parse_serve_faults(bad)
+
+    inj = FaultInjector(plan)
+    with pytest.raises(AssertionError):
+        inj.assert_exhausted()
+    assert inj.dispatch_delay_s(4) == 0.0
+    assert inj.dispatch_delay_s(5) == 0.05
+    assert inj.dispatch_delay_s(5) == 0.0       # at most once
+    assert inj.take_floods() == [RequestFlood(0.5, 0.2, 4)]
+    assert inj.take_floods() == []
+    p = _params(0)
+    assert inj.corrupt_params(7, p) is p        # untargeted: untouched
+    nan_leaf = jax.tree_util.tree_leaves(inj.corrupt_params(0, p))[0]
+    assert np.isnan(np.asarray(nan_leaf)).all()
+    huge = inj.corrupt_params(1, p)
+    assert np.asarray(jax.tree_util.tree_leaves(huge)[0]).max() >= 1e29
+    inj.assert_exhausted()
+    assert inj.applied_counts() == {"SlowDispatch": 1, "RequestFlood": 1,
+                                    "CorruptCheckpoint": 2}
+    with pytest.raises(ValueError):
+        corrupt_tree(p, mode="bogus")
+
+
+def test_slow_dispatch_and_flood_shift_the_virtual_clock():
+    """A ``SlowDispatch`` adds exactly ``extra_s`` to the fault run's
+    completion clock; a ``RequestFlood`` grows the request count by
+    exactly the duplicated window; both replays stay deterministic."""
+    trace = _trace(rps=0.5 * S / SVC, horizon_s=0.1)
+    base = _server().serve(trace, mode="virtual", service_time_s=SVC)
+
+    inj = FaultInjector(FaultPlan.of(SlowDispatch(0, 0.5)))
+    slow = _server().serve(trace, mode="virtual", service_time_s=SVC,
+                           faults=inj)
+    inj.assert_exhausted()
+    assert slow.served == base.served
+    assert max(slow.latencies_s) >= 0.5         # someone ate the stall
+
+    t0, t1 = trace[0].arrival, trace[0].arrival + 0.05
+    n_window = sum(t0 <= r.arrival < t1 for r in trace)
+    inj2 = FaultInjector(FaultPlan.of(RequestFlood(t0, t1 - t0, 3)))
+    flood = _server().serve(trace, mode="virtual", service_time_s=SVC,
+                            faults=inj2)
+    inj2.assert_exhausted()
+    assert flood.requests == len(trace) + 2 * n_window
+    assert flood.served == flood.requests
+
+
+def test_lifecycle_and_standalone_drain():
+    """warming -> serving -> draining -> drained across a replay; the
+    standalone ``drain`` completes a scheduler's backlog with no new
+    admissions and snapshots the final state."""
+    srv = _server()
+    assert srv.state == "warming"
+    rep = srv.serve(_trace(rps=200, horizon_s=0.05), mode="virtual",
+                    service_time_s=SVC)
+    assert srv.state == "drained"
+    assert rep.stats.final_state == "drained"
+
+    srv2 = _server()
+    sched = SlotScheduler(S)
+    frame = np.zeros(OBS, np.float32)
+    for i in range(3 * S):
+        sched.admit(Request(rid=i, region=0, klass=0, arrival=0.0,
+                            deadline=1.0, frame=frame))
+    srv2.warmup()
+    stats, done = srv2.drain(sched, service_time_s=SVC)
+    assert srv2.state == "drained" and stats.final_state == "drained"
+    assert sched.pending == 0 and sched.served == 3 * S
+    assert stats.dispatches == 3 and done == pytest.approx(3 * SVC)
+
+
+# ------------------------------------------------ zero-dispatch audit
+
+def test_serve_stats_zero_dispatch_edges():
+    """Every ratio in ``ServeStats`` is total-guarded: a fresh instance,
+    a rejection-only instance, an empty-trace replay, and a fully-shed
+    replay all produce clean zero summaries — no division errors."""
+    st = ServeStats()
+    s = st.summary()
+    assert s["padded_lane_frac"] == 0.0 and st.dispatches == 0
+    assert s["rejected"] == 0 and s["shed_by_class"] == {}
+    assert (s["reloads"], s["reload_rejected"]) == (0, 0)
+    st.record_rejection("infeasible", 2)
+    assert st.padded_lane_frac == 0.0 and st.rejected == 1
+
+    srv = _server()
+    rep = srv.serve([], mode="virtual", service_time_s=SVC)
+    assert (rep.requests, rep.served, rep.dispatches) == (0, 0, 0)
+    assert rep.qps == 0.0 and rep.mean_occupancy == 0.0
+    assert rep.summary()["mean_occupancy_by_slot"] == {}
+
+    # zero-slack trace + cold nonzero latency estimate: everything shed
+    trace = _trace(rps=1000, horizon_s=0.05, classes=(0.0, 0.0, 0.0))
+    adm = AdmissionController(OverloadConfig(default_latency_s=SVC,
+                                             brownout=False))
+    rep2 = _server().serve(trace, mode="virtual", service_time_s=SVC,
+                           admission=adm)
+    assert rep2.served == 0 and rep2.stats.rejected == len(trace) > 0
+    assert rep2.stats.rejected_by_reason == {"infeasible": len(trace)}
+    assert rep2.qps == 0.0 and rep2.stats.final_state == "drained"
+
+
+# -------------------------------------------------------------- driver
+
+def test_policy_serve_driver_chaos_flags(tmp_path):
+    """The driver wires --admission/--faults/--reload-at/--virtual end
+    to end: the corrupt reload is rejected, sheds are counted, the plan
+    exhausts (applied counts land in the JSON), and the run drains."""
+    res = policy_serve.main([
+        "--domain", "traffic", "--slot", "16", "--regions", "8",
+        "--rps", "4000", "--duration-s", "0.1", "--virtual",
+        "--service-time-s", "0.002", "--admission",
+        "--faults", "slow:2:0.05,flood:0.02:0.05:3,corrupt:0:nan",
+        "--reload-at", "1",
+        "--out", str(tmp_path / "chaos.json")])
+    assert res["final_state"] == "drained"
+    assert res["reload_rejected"] == 1 and res["policy_version"] == 0
+    assert res["faults_applied"] == {"SlowDispatch": 1, "RequestFlood": 1,
+                                     "CorruptCheckpoint": 1}
+    assert res["served"] + res["rejected"] == res["requests"]
+    assert res["reload_log"][-1][0] == "rejected"
+
+    with pytest.raises(ValueError):
+        policy_serve.main(["--faults", "bogus:1", "--virtual",
+                           "--duration-s", "0.01", "--regions", "2"])

@@ -46,7 +46,7 @@ from repro.serving import (BIMODAL_SIZES, BIMODAL_WEIGHTS,
                            BucketedSlotScheduler, PolicyServer, Request,
                            SlotScheduler, TraceConfig, burst_sizes,
                            calibrate_buckets, expected_padded_waste,
-                           synthetic_trace)
+                           flood_trace, synthetic_trace)
 
 S = 8                                    # the test slot shape
 N_POL = 2                                # checkpoints per multi server
@@ -468,6 +468,109 @@ def test_bucketed_virtual_replay_stats_exact_and_less_waste():
     for key in ("padded_lane_frac", "dispatches_by_slot",
                 "mean_occupancy_by_slot", "occupancy_hist_by_slot"):
         assert key in rep_b.summary()
+
+
+# ------------------------------------------------ adversarial traces
+
+def test_adversarial_all_max_size_bursts():
+    """Every burst at exactly the largest bucket: dispatches run only at
+    the max shape, fully occupied, zero drops, exact accounting — the
+    degenerate workload where bucketing must not cost anything."""
+    frame = np.zeros(4, np.float32)
+    trace = [Request(rid=r * 8 + lane, region=r, klass=0,
+                     arrival=0.001 * r, deadline=0.001 * r + 1.0,
+                     frame=frame, size=8)
+             for r in range(6) for lane in range(8)]
+    sched, pops = _drive_bucketed(trace, (2, 4, 8), service_s=0.0005)
+    assert all(shape == 8 for shape, _ in pops)
+    assert all(len(b) == 8 for _, b in pops)          # fully occupied
+    assert sched.served == len(trace) and sched.deadline_misses == 0
+    assert sched.dispatches_by_bucket == {2: 0, 4: 0, 8: len(pops)}
+
+
+def test_adversarial_bursts_exceeding_largest_bucket():
+    """A burst bigger than the largest compiled shape is admitted at the
+    largest bucket and split across consecutive dispatches — no drops,
+    every request exactly once, and no dispatch exceeds its shape."""
+    frame = np.zeros(4, np.float32)
+    trace = [Request(rid=lane, region=0, klass=0, arrival=0.0,
+                     deadline=1.0, frame=frame, size=20)
+             for lane in range(20)]
+    sched = BucketedSlotScheduler((2, 4, 8))
+    assert sched.bucket_for(20) == 8                  # clamped to max
+    sched2, pops = _drive_bucketed(trace, (2, 4, 8))
+    assert sorted(r.rid for _, b in pops for r in b) == list(range(20))
+    assert [len(b) for _, b in pops] == [8, 8, 4]     # split, in order
+    assert [s for s, _ in pops] == [8, 8, 4]
+    assert sched2.served == 20 and sched2.deadline_misses == 0
+    assert sched2.admitted_by_bucket == {2: 0, 4: 0, 8: 20}
+
+
+def test_adversarial_flood_overload_keeps_pop_order_and_exact_misses():
+    """Interleaved deadline classes under a 4x flood window pushing the
+    replay past 1x load: the drop-free contract holds (every admitted
+    request dispatches exactly once), misses equal an independent
+    recount against absolute deadlines, the zero-slack class misses
+    while the loosest class's extra copies spread across dispatches,
+    and the bucketed pop order is still bitwise the single-slot pop
+    order on the identical flooded trace."""
+    base = _sized_trace(7)
+    trace = flood_trace(base, at_s=0.01, duration_s=0.03, multiplier=4)
+    assert len(trace) > len(base)                     # window was hit
+    # service chosen so offered load in the flood window exceeds 1x
+    sched, pops = _drive_bucketed(trace, (2, 4, 8), service_s=0.004)
+    assert sorted(r.rid for _, b in pops for r in b) == \
+        list(range(len(trace)))
+    misses = sum(t > d for (_, _, _, d, t) in sched.completions)
+    assert sched.deadline_misses == misses
+    by_class = {}
+    for (_, k, _, d, t) in sched.completions:
+        by_class[k] = by_class.get(k, 0) + (t > d)
+    assert sched.misses_by_class == {k: v for k, v in by_class.items()
+                                     if v}
+    assert sched.misses_by_class.get(0, 0) > 0        # zero-slack class
+    sched_s = SlotScheduler(8)
+    pops_s, now, i = [], 0.0, 0
+    while i < len(trace) or sched_s.pending:
+        while i < len(trace) and trace[i].arrival <= now:
+            sched_s.admit(trace[i])
+            i += 1
+        if not sched_s.pending:
+            now = trace[i].arrival
+            continue
+        batch = sched_s.next_batch()
+        now += 0.004
+        sched_s.complete(batch, now)
+        pops_s.append(batch)
+    assert [[r.rid for r in b] for _, b in pops] == \
+        [[r.rid for r in b] for b in pops_s]
+
+
+def test_set_coarse_changes_shapes_only_never_the_queue():
+    """Brownout's coarse collapse dispatches every batch at the largest
+    shape but pops the identical batches in the identical order with
+    identical miss accounting — shapes are policy, the queue is not."""
+    trace = _sized_trace(5)
+    _, pops_fine = _drive_bucketed(trace, (2, 4, 8))
+    sched = BucketedSlotScheduler((2, 4, 8))
+    sched.set_coarse(True)
+    pops, now, i = [], 0.0, 0
+    while i < len(trace) or sched.pending:
+        while i < len(trace) and trace[i].arrival <= now:
+            sched.admit(trace[i])
+            i += 1
+        if not sched.pending:
+            now = trace[i].arrival
+            continue
+        shape, batch = sched.next_dispatch()
+        now += 0.003
+        sched.complete(batch, now)
+        pops.append((shape, batch))
+    assert all(shape == 8 for shape, _ in pops)       # coarse: max shape
+    assert [[r.rid for r in b] for _, b in pops] == \
+        [[r.rid for r in b] for _, b in pops_fine]
+    sched.set_coarse(False)
+    assert not sched.coarse
 
 
 # -------------------------------------------------------------- driver

@@ -1,0 +1,91 @@
+"""Serving chaos smoke (``make serve-chaos``; CI runs it too).
+
+Exercises the overload contract (docs/ARCHITECTURE.md §8) end to end
+through the real ``repro.launch.policy_serve`` driver — the in-process
+tests pin the same properties, but only the driver run proves the
+``--faults`` plan parsing, the admission wiring, the reload seam, and
+the JSON snapshot behave together:
+
+  1. replay a quick virtual-clock trace behind admission control with a
+     deterministic chaos plan: a ``SlowDispatch`` stall plus a
+     ``CorruptCheckpoint`` poisoning the one scheduled hot-reload
+     attempt (``--reload-at``);
+  2. require a clean drain (``final_state == "drained"``, every
+     non-shed request served);
+  3. require the corrupt reload to have been REJECTED — the policy
+     version must still be 0 and the reload log must carry the
+     rejection — while the replay kept serving;
+  4. require the driver's fault-application snapshot to match the
+     plan's literal event counts (the driver itself runs
+     ``FaultInjector.assert_exhausted`` — a planned event that never
+     fires fails the run, not just this comparison);
+  5. replay the identical command and require the identical snapshot —
+     the chaos run is bit-deterministic on the virtual clock.
+
+In-process (no subprocess): the driver's ``main`` is a library entry;
+writes only under a temp dir, never touches committed baselines.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+PLAN = "slow:2:0.05,corrupt:0:nan"
+PLAN_COUNTS = {"SlowDispatch": 1, "CorruptCheckpoint": 1}
+
+
+def _serve(out_path: Path) -> dict:
+    from repro.launch import policy_serve
+    return policy_serve.main([
+        "--domain", "traffic", "--slot", "16", "--regions", "8",
+        "--rps", "4000", "--duration-s", "0.1",
+        "--virtual", "--service-time-s", "0.002",
+        "--admission", "--queue-cap", "256",
+        "--faults", PLAN, "--reload-at", "1",
+        "--out", str(out_path)])
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory(prefix="serve_chaos_") as tmp:
+        tmp = Path(tmp)
+        print(f"serve-chaos: [1/3] chaos replay, plan: {PLAN}")
+        res = _serve(tmp / "chaos.json")
+
+        assert res["final_state"] == "drained", \
+            f"server did not drain: {res['final_state']!r}"
+        assert res["served"] + res["rejected"] == res["requests"], \
+            "served + shed != offered: requests were lost silently"
+        assert res["served"] > 0, "nothing served"
+
+        print("serve-chaos: [2/3] corrupt reload must have been rejected")
+        assert res["reload_rejected"] == 1 and res["reloads"] == 0, \
+            f"reload outcome wrong: {res['reload_rejected']=} " \
+            f"{res['reloads']=}"
+        assert res["policy_version"] == 0, \
+            "corrupt weights swapped in: policy_version advanced"
+        tag, reason = res["reload_log"][-1]
+        assert tag == "rejected" and "canary" in reason, \
+            f"unexpected reload log entry: {(tag, reason)!r}"
+
+        assert res["faults_applied"] == PLAN_COUNTS, \
+            f"fault snapshot {res['faults_applied']!r} != plan " \
+            f"{PLAN_COUNTS!r}"
+
+        print("serve-chaos: [3/3] identical rerun, expect identical "
+              "snapshot (virtual clock)")
+        res2 = _serve(tmp / "chaos2.json")
+        assert res2 == res, "chaos replay is not deterministic"
+
+        print(f"serve-chaos: OK — {res['served']} served, "
+              f"{res['rejected']} shed "
+              f"({res['rejected_by_reason']}), corrupt reload rejected, "
+              f"plan exhausted, drained")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,6 +44,7 @@ REQUIRED_SNIPPETS = {
         # the serving tier (§8) entry points
         "python -m repro.launch.policy_serve",
         "python -m benchmarks.serve_throughput",
+        "make serve-chaos",
     ),
     "docs/ARCHITECTURE.md": (
         "kernels/ops.py::policy_rollout",
@@ -75,6 +76,16 @@ REQUIRED_SNIPPETS = {
         "kernels/ops.py::serve_forward_multi",
         "kernels/ref.py::serve_forward_multi_ref",
         "kernels/aip_step.py::serve_forward_multi",
+        # the overload contract (§8, PR 10)
+        "serving/overload.py::AdmissionController",
+        "serving/overload.py::BrownoutController",
+        "serving/overload.py::DispatchLatencyModel",
+        "serving/request.py::flood_trace",
+        "distributed/fault_injection.py::SlowDispatch",
+        "distributed/fault_injection.py::RequestFlood",
+        "distributed/fault_injection.py::CorruptCheckpoint",
+        "distributed/fault_injection.py::parse_serve_faults",
+        "make serve-chaos",
     ),
 }
 
